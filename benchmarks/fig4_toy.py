@@ -1,0 +1,69 @@
+"""Paper Fig.4: 2D toy — cluster-centre evolution under stride vs block
+sampling, the displacement diagnostic, and the partial/global cost traces.
+
+Claim validated: stride sampling keeps the per-batch medoid displacement
+small and flat; block sampling over a CONCEPT-DRIFTING stream shows spikes
+(Fig.4b), and the inner loop lowers the global cost (Fig.4d).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
+                        mean_displacement)
+from repro.core.minibatch import fit, predict
+from repro.data.sampling import split_batches
+from repro.data.synthetic import toy2d
+
+from .common import save, table
+
+
+def _drifting_toy(n_per=2500, seed=0):
+    """The toy with samples ORDERED by cluster — the worst case for block
+    sampling (each early block sees a subset of clusters: concept drift)."""
+    x, y = toy2d(n_per_cluster=n_per, seed=seed)
+    order = np.argsort(y, kind="stable")
+    return x[order], y[order]
+
+
+def run(fast: bool = True):
+    n_per = 1000 if fast else 10000
+    b = 4
+    x, y = _drifting_toy(n_per=n_per)
+    spec = KernelSpec("rbf", gamma=4.0)
+
+    rows, payload = [], {}
+    for strategy in ("stride", "block"):
+        cfg = MiniBatchConfig(n_clusters=4, n_batches=b, s=1.0, kernel=spec,
+                              sampling=strategy, seed=0)
+        res = fit(split_batches(x, b, strategy), cfg)
+        labels = np.asarray(predict(jnp.asarray(x), res.state.medoids,
+                                    res.state.medoid_diag, spec=spec))
+        disp = mean_displacement(res.history)
+        acc = clustering_accuracy(y, labels)
+        costs = [h.cost for h in res.history]
+        rows.append([strategy, f"{acc:.3f}",
+                     np.array2string(disp, precision=3),
+                     np.array2string(np.asarray(costs), precision=0)])
+        payload[strategy] = {"acc": acc, "displacement": disp.tolist(),
+                             "costs": costs,
+                             "inner_iters": [h.inner_iters
+                                             for h in res.history]}
+
+    table("Fig.4 — sampling strategies on the 2D toy (ordered stream)",
+          ["sampling", "accuracy", "displacement/batch", "cost/batch"], rows)
+    # the paper's qualitative claim:
+    stride_disp = np.mean(payload["stride"]["displacement"][1:])
+    block_disp = np.mean(payload["block"]["displacement"][1:])
+    verdict = ("CONFIRMED" if block_disp > 2.0 * stride_disp
+               else "NOT confirmed")
+    print(f"[fig4] block sampling displacement {block_disp:.4f} vs stride "
+          f"{stride_disp:.4f} -> paper claim (spikes under drift) {verdict}")
+    payload["claim_block_gt_stride"] = bool(block_disp > 2.0 * stride_disp)
+    save("fig4_toy", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,98 @@
+"""Roofline analysis over the dry-run artifacts (assignment deliverable g).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+    compute term    = HLO_FLOPs / (chips x 197e12)          [s]
+    memory term     = HLO_bytes / (chips x 819e9)           [s]
+    collective term = coll_link_bytes / (chips x 50e9)      [s]
+
+HLO_FLOPs / bytes are the LOOP-AWARE per-device numbers (repro.launch.
+hlocost multiplies while-loop trip counts through the call graph;
+``cost_analysis()`` visits each body once and under-reports scans by
+~n_layers x). Collective bytes use ring costs per op. The dominant term is
+the bottleneck the §Perf loop iterates on; MODEL_FLOPS / HLO_FLOPs shows
+how much compiled compute is "useful" (remat recompute and padding waste
+push it below 1).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save, table
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-device link budget)
+
+
+def load_cells(dryrun_dir: str = "results/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(path))
+        if not d.get("ok"):
+            continue
+        la = d.get("loop_aware")
+        if not la:
+            continue
+        cells.append(d)
+    return cells
+
+
+def terms(cell: dict) -> dict:
+    la = cell["loop_aware"]
+    t_comp = la["flops_per_device"] / PEAK_FLOPS
+    t_mem = la["bytes_per_device"] / HBM_BW
+    t_coll = la["collective_bytes"] / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])
+    chips = 512 if cell["mesh"] == "2x16x16" else 256
+    model_per_dev = cell["model_flops_total"] / chips
+    useful = model_per_dev / max(la["flops_per_device"], 1.0)
+    # roofline fraction: achievable step time is bounded below by every
+    # term; fraction = compute term / max(all terms)
+    bound = max(t_comp, t_mem, t_coll)
+    frac = t_comp / bound if bound > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant[0], "bound_s": bound,
+        "roofline_fraction": frac,
+        "model_flops_ratio": useful,
+        "n_params": cell["n_params"],
+        "n_active_params": cell.get("n_active_params", cell["n_params"]),
+    }
+
+
+def run(fast: bool = True, dryrun_dir: str = "results/dryrun",
+        mesh: str = "16x16"):
+    cells = [c for c in load_cells(dryrun_dir) if c["mesh"] == mesh]
+    if not cells:
+        print(f"[roofline] no dry-run artifacts in {dryrun_dir} — run "
+              f"`python -m repro.launch.dryrun --all` first")
+        return {}
+    rows, payload = [], {}
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for c in sorted(cells,
+                    key=lambda c: (c["arch"], order.get(c["shape"], 9))):
+        t = terms(c)
+        payload[f"{t['arch']}|{t['shape']}"] = t
+        rows.append([
+            t["arch"], t["shape"],
+            f"{t['t_compute_s']*1e3:.2f}", f"{t['t_memory_s']*1e3:.2f}",
+            f"{t['t_collective_s']*1e3:.2f}", t["dominant"],
+            f"{t['roofline_fraction']:.2f}",
+            f"{t['model_flops_ratio']:.2f}"])
+    table(f"Roofline terms per cell (mesh {mesh}; ms/step)",
+          ["arch", "shape", "t_comp", "t_mem", "t_coll", "dominant",
+           "roofline frac", "useful-FLOPs"], rows)
+    # the three hillclimb picks (worst frac / most collective-bound /
+    # most paper-representative) are documented in EXPERIMENTS.md §Perf.
+    save("roofline", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,54 @@
+"""Benchmark driver: one benchmark per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast (CI) sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper sizes
+    PYTHONPATH=src python -m benchmarks.run --only tab1_mnist
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (fig4_toy, fig5_approx_sweep, fig6_scaling, fig8_sculley,
+               roofline, tab1_mnist, tab2_rcv1, tab3_noisy)
+
+ALL = {
+    "fig4_toy": fig4_toy.run,
+    "fig5_approx_sweep": fig5_approx_sweep.run,
+    "tab1_mnist": tab1_mnist.run,
+    "tab2_rcv1": tab2_rcv1.run,
+    "tab3_noisy": tab3_noisy.run,
+    "fig6_scaling": fig6_scaling.run,
+    "fig8_sculley": fig8_sculley.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (hours); default is fast mode")
+    ap.add_argument("--only", default=None, choices=sorted(ALL))
+    args = ap.parse_args(argv)
+
+    todo = {args.only: ALL[args.only]} if args.only else ALL
+    failures = []
+    for name, fn in todo.items():
+        print(f"\n########## {name} {'(full)' if args.full else '(fast)'} "
+              f"##########")
+        t0 = time.time()
+        try:
+            fn(fast=not args.full)
+            print(f"[{name}] finished in {time.time()-t0:.1f}s")
+        except Exception as e:
+            failures.append(name)
+            print(f"[{name}] FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks green; results under results/benchmarks/")
+
+
+if __name__ == "__main__":
+    main()

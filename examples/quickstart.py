@@ -1,0 +1,70 @@
+"""Quickstart: approximate kernel k-means on the paper's 2D toy dataset.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the core public API: MiniBatchConfig knobs (B, s), fitting,
+prediction, and the accuracy/NMI metrics — and shows the kernel method
+beating linear k-means on a non-linearly-separable variant (two rings).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.baselines.lloyd import kmeans
+from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
+                        fit_dataset, nmi)
+from repro.core.minibatch import predict
+from repro.data.synthetic import toy2d
+
+
+def xor_blobs(n_per=500, seed=0):
+    """XOR arrangement: class 0 at (+,+)/(-,-), class 1 at (+,-)/(-,+).
+    No line separates the classes, but the degree-2 polynomial kernel's
+    feature map contains x1*x2, which does — the textbook kernel win."""
+    rng = np.random.default_rng(seed)
+    c = np.array([[2, 2], [-2, -2], [2, -2], [-2, 2]], np.float32)
+    x = np.concatenate([rng.normal(ci, 0.5, (n_per, 2)) for ci in c])
+    y = np.array([0] * n_per * 2 + [1] * n_per * 2, np.int32)
+    perm = rng.permutation(len(x))
+    return x[perm].astype(np.float32), y[perm]
+
+
+def main():
+    # ---- paper's 2D toy: 4 gaussians, B = 3 mini-batches -------------------
+    x, y = toy2d(n_per_cluster=2500)
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=3, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=4.0),
+                          sampling="stride", seed=0)
+    res = fit_dataset(x, cfg)
+    labels = np.asarray(predict(jnp.asarray(x), res.state.medoids,
+                                res.state.medoid_diag, spec=cfg.kernel))
+    print(f"2D toy     | kernel k-means (B=3):   acc={clustering_accuracy(y, labels):.3f} "
+          f"nmi={nmi(y, labels):.3f}  inner iters/batch="
+          f"{[h.inner_iters for h in res.history]}")
+
+    # ---- sparse centroids: s = 0.2 (5x fewer kernel evaluations) ----------
+    cfg_s = MiniBatchConfig(n_clusters=4, n_batches=3, s=0.2,
+                            kernel=KernelSpec("rbf", gamma=4.0), seed=0)
+    res_s = fit_dataset(x, cfg_s)
+    labels_s = np.asarray(predict(jnp.asarray(x), res_s.state.medoids,
+                                  res_s.state.medoid_diag, spec=cfg_s.kernel))
+    print(f"2D toy     | sparse landmarks (s=.2): acc="
+          f"{clustering_accuracy(y, labels_s):.3f} "
+          f"nmi={nmi(y, labels_s):.3f}")
+
+    # ---- XOR: kernel vs linear ---------------------------------------------
+    xr, yr = xor_blobs()
+    lin = kmeans(xr, 2, n_init=5)
+    lin_acc = clustering_accuracy(yr, np.asarray(lin.labels))
+    spec = KernelSpec("polynomial", gamma=0.25, coef0=0.0, degree=2)
+    cfg_r = MiniBatchConfig(n_clusters=2, n_batches=1, s=1.0, kernel=spec,
+                            seed=0)
+    res_r = fit_dataset(xr, cfg_r)
+    lr = np.asarray(predict(jnp.asarray(xr), res_r.state.medoids,
+                            res_r.state.medoid_diag, spec=spec))
+    print(f"XOR blobs  | linear k-means (C=2):    acc={lin_acc:.3f}")
+    print(f"XOR blobs  | poly-2 kernel k-means:   acc="
+          f"{clustering_accuracy(yr, lr):.3f}   <- non-linear win")
+
+
+if __name__ == "__main__":
+    main()

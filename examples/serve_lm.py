@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests (continuous batching engine).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch olmo-1b --requests 12
+
+Shows: request submission, mixed prompt lengths decoding in ONE batched
+step per tick (per-slot cursors), EOS early-exit, throughput accounting.
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--top-p", type=float, default=0.9)
+    args = ap.parse_args(argv)
+
+    serve_mod.main([
+        "--arch", args.arch, "--smoke", "--mesh", args.mesh,
+        "--requests", str(args.requests), "--max-batch", "4",
+        "--max-len", "96", "--max-new-tokens", "12",
+        "--top-p", str(args.top_p),
+    ])
+
+
+if __name__ == "__main__":
+    main()

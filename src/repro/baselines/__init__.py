@@ -1,0 +1,4 @@
+from .lloyd import kmeans as lloyd_kmeans
+from .sculley import sgd_minibatch_kmeans
+
+__all__ = ["lloyd_kmeans", "sgd_minibatch_kmeans"]

@@ -1,0 +1,22 @@
+# The paper's primary contribution: approximate distributed mini-batch
+# kernel k-means (Ferrarotti, Decherchi & Rocchia, CS.DC 2017).
+from .kernels import KernelSpec, gamma_from_dmax, get_kernel, sq_distances
+from .kkmeans import (InnerResult, kkmeans_fit, kkmeans_fit_full,
+                      medoid_indices)
+from .init import assign_to_medoids, kmeans_pp_indices
+from .landmarks import choose_landmarks, num_landmarks
+from .memory import MachineSpec, Plan, b_min, b_min_paper, footprint_bytes, plan
+from .metrics import clustering_accuracy, elbow, mean_displacement, nmi
+from .minibatch import (FitResult, GlobalState, MiniBatchConfig, fit,
+                        fit_dataset, predict)
+
+__all__ = [
+    "KernelSpec", "gamma_from_dmax", "get_kernel", "sq_distances",
+    "InnerResult", "kkmeans_fit", "kkmeans_fit_full", "medoid_indices",
+    "assign_to_medoids", "kmeans_pp_indices",
+    "choose_landmarks", "num_landmarks",
+    "MachineSpec", "Plan", "b_min", "b_min_paper", "footprint_bytes", "plan",
+    "clustering_accuracy", "elbow", "mean_displacement", "nmi",
+    "FitResult", "GlobalState", "MiniBatchConfig", "fit", "fit_dataset",
+    "predict",
+]

@@ -1,0 +1,83 @@
+"""Kernelized k-means++ seeding (paper §3.1, after Arthur & Vassilvitskii [8]).
+
+Seeds are picked with probability proportional to the squared feature-space
+distance to the nearest already-chosen seed:
+
+    d^2(x_i, x_c) = K_ii + K_cc - 2 K_ic
+
+Only C kernel *columns* are ever evaluated (one per chosen seed) — the full
+mini-batch Gram matrix is NOT required, which keeps seeding memory-aware in
+the same spirit as the rest of the paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import KernelSpec
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "spec"))
+def kmeans_pp_indices(
+    x: Array,
+    diag_k: Array,
+    key: Array,
+    *,
+    n_clusters: int,
+    spec: KernelSpec,
+) -> Array:
+    """Pick C seed indices from the batch ``x`` via kernel k-means++.
+
+    Returns [C] int32 indices into ``x``.
+    """
+    n = x.shape[0]
+    diag_k = diag_k.astype(jnp.float32)
+
+    key, sub = jax.random.split(key)
+    first = jax.random.randint(sub, (), 0, n, dtype=jnp.int32)
+
+    def step(carry, key_t):
+        mind2, chosen, t = carry
+        # d^2 to the latest chosen seed; keep the running minimum.
+        c = chosen[t]
+        kc = spec(x, x[c][None, :])[:, 0]                    # [n] one column
+        d2 = jnp.maximum(diag_k + diag_k[c] - 2.0 * kc, 0.0)
+        mind2 = jnp.minimum(mind2, d2)
+        # sample the next seed ~ mind2 (categorical over log-probs).
+        logp = jnp.where(mind2 > 0, jnp.log(jnp.maximum(mind2, 1e-30)), -jnp.inf)
+        # all-zero guard (duplicate points): fall back to uniform.
+        logp = jnp.where(jnp.all(~jnp.isfinite(logp)), jnp.zeros_like(logp), logp)
+        nxt = jax.random.categorical(key_t, logp).astype(jnp.int32)
+        chosen = chosen.at[t + 1].set(nxt)
+        return (mind2, chosen, t + 1), None
+
+    chosen0 = jnp.zeros((n_clusters,), jnp.int32).at[0].set(first)
+    mind0 = jnp.full((n,), jnp.inf, jnp.float32)
+    keys = jax.random.split(key, n_clusters - 1)
+    (_, chosen, _), _ = jax.lax.scan(step, (mind0, chosen0, 0), keys)
+    return chosen
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def assign_to_medoids(
+    x: Array,
+    diag_k: Array,
+    medoids: Array,
+    medoid_diag: Array,
+    *,
+    spec: KernelSpec,
+) -> tuple[Array, Array]:
+    """Eq.8: nearest-medoid labels for a fresh mini-batch.
+
+    This evaluates the auxiliary kernel matrix K~^i of size [n, C] (the only
+    extra cost the initialization step introduces, §3.1).
+
+    Returns (labels [n] int32, k_tilde [n, C] f32).
+    """
+    k_tilde = spec(x, medoids).astype(jnp.float32)                  # [n, C]
+    d2 = diag_k.astype(jnp.float32)[:, None] + medoid_diag[None, :] - 2.0 * k_tilde
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), k_tilde

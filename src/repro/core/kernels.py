@@ -1,0 +1,138 @@
+"""Mercer kernel functions (Gram-block evaluation).
+
+The paper (Eq.4) replaces the transformed-space inner product
+``<phi(x_m), phi(x_n)>`` with a generic Mercer kernel ``K(x_m, x_n)``.
+Every kernel here evaluates a *block* ``K(X, Y) -> [m, n]`` so that the
+distributed runtime / Pallas kernels can tile it freely.
+
+All kernels accumulate in fp32 regardless of the input dtype (bf16 features
+are fine; norms and the exp are always fp32) — see DESIGN.md §2 item 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# primitive Gram-block evaluators
+# ---------------------------------------------------------------------------
+
+
+def _dot(x: Array, y: Array) -> Array:
+    """fp32-accumulated X @ Y^T."""
+    return jax.lax.dot_general(
+        x, y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def sq_distances(x: Array, y: Array) -> Array:
+    """Pairwise squared euclidean distances ||x_i - y_j||^2, clamped >= 0."""
+    xx = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)[:, None]
+    yy = jnp.sum(y.astype(jnp.float32) ** 2, axis=-1)[None, :]
+    d2 = xx + yy - 2.0 * _dot(x, y)
+    return jnp.maximum(d2, 0.0)
+
+
+def linear_kernel(x: Array, y: Array) -> Array:
+    return _dot(x, y)
+
+
+def rbf_kernel(x: Array, y: Array, *, gamma: float) -> Array:
+    return jnp.exp(-gamma * sq_distances(x, y))
+
+
+def laplacian_kernel(x: Array, y: Array, *, gamma: float) -> Array:
+    # L1 distances do not factor through the MXU; this kernel is the
+    # "non-symmetric-friendly" example the paper alludes to (any similarity).
+    d1 = jnp.sum(
+        jnp.abs(x.astype(jnp.float32)[:, None, :] - y.astype(jnp.float32)[None, :, :]),
+        axis=-1,
+    )
+    return jnp.exp(-gamma * d1)
+
+
+def polynomial_kernel(x: Array, y: Array, *, gamma: float, coef0: float, degree: int) -> Array:
+    return (gamma * _dot(x, y) + coef0) ** degree
+
+
+def cosine_kernel(x: Array, y: Array, *, eps: float = 1e-12) -> Array:
+    xn = jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))[:, None]
+    yn = jnp.sqrt(jnp.sum(y.astype(jnp.float32) ** 2, axis=-1))[None, :]
+    return _dot(x, y) / jnp.maximum(xn * yn, eps)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+KernelFn = Callable[[Array, Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Declarative kernel description (hashable -> safe as a jit static arg)."""
+
+    name: str = "rbf"
+    gamma: float = 1.0
+    coef0: float = 1.0
+    degree: int = 3
+
+    def __call__(self, x: Array, y: Array) -> Array:
+        return get_kernel(self)(x, y)
+
+    def diag(self, x: Array) -> Array:
+        """K(x_i, x_i) for every row — cheap, no Gram block."""
+        if self.name in ("rbf", "laplacian", "cosine"):
+            return jnp.ones((x.shape[0],), jnp.float32)
+        if self.name == "linear":
+            return jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+        if self.name == "polynomial":
+            sq = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+            return (self.gamma * sq + self.coef0) ** self.degree
+        raise ValueError(f"unknown kernel {self.name!r}")
+
+
+_REGISTRY: dict[str, Callable[..., Array]] = {
+    "linear": linear_kernel,
+    "rbf": rbf_kernel,
+    "laplacian": laplacian_kernel,
+    "polynomial": polynomial_kernel,
+    "cosine": cosine_kernel,
+}
+
+
+def get_kernel(spec: KernelSpec) -> KernelFn:
+    """Resolve a KernelSpec to a Gram-block function ``(X, Y) -> [m, n]``."""
+    name = spec.name
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel {name!r}; have {sorted(_REGISTRY)}")
+    if name == "linear":
+        return linear_kernel
+    if name == "cosine":
+        return cosine_kernel
+    if name in ("rbf", "laplacian"):
+        return partial(_REGISTRY[name], gamma=spec.gamma)
+    return partial(
+        polynomial_kernel, gamma=spec.gamma, coef0=spec.coef0, degree=spec.degree
+    )
+
+
+def gamma_from_dmax(x: Array, *, factor: float = 4.0) -> float:
+    """The paper's sigma = 4*d_max rule (§4.4) to mimic linear behaviour.
+
+    sigma = factor * d_max  ->  gamma = 1 / (2 sigma^2).
+    d_max is estimated as the diameter of the bounding box (exact pairwise
+    d_max is O(N^2), which is exactly what this code base exists to avoid).
+    """
+    span = jnp.max(x, axis=0) - jnp.min(x, axis=0)
+    d_max = float(jnp.sqrt(jnp.sum(span.astype(jnp.float32) ** 2)))
+    sigma = factor * max(d_max, 1e-12)
+    return 1.0 / (2.0 * sigma * sigma)

@@ -1,0 +1,154 @@
+"""Kernel k-means inner loop (paper §2, Eq.4-7; landmark variant §3.2, Eq.14-17).
+
+The self-consistent label update is
+
+    u_i <- argmin_j  g_j - 2 f_{i,j}                                   (Eq.4)
+    g_j   = (1/|w_j|^2) sum_{m,n in L} K_{m,n} d(u_m,j) d(u_n,j)       (Eq.5/16)
+    f_i,j = (1/|w_j|)   sum_{m in L}   K_{i,m} d(u_m,j)                (Eq.6/17)
+
+where L is the landmark set (L = whole mini-batch when s = 1, in which case
+this is *exact* kernel k-means on the mini-batch).
+
+Everything below is shape-static and jit/`shard_map`-friendly:
+the landmark Gram block ``k_ll`` is the row-gather ``k_xl[l_idx]`` (landmarks
+are mini-batch samples), labels are int32, reductions accumulate in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BIG = jnp.float32(1e30)  # "+inf" that survives argmin/min on bf16-ish inputs
+
+
+class InnerState(NamedTuple):
+    labels: Array      # [n] int32 current labels
+    changed: Array     # [] bool   did the last sweep change anything
+    t: Array           # [] int32  iteration counter
+    cost: Array        # [] f32    current mini-batch cost Omega(W^i)
+
+
+class InnerResult(NamedTuple):
+    labels: Array      # [n] int32 converged labels
+    f: Array           # [n, C] f32 cluster average similarity at convergence
+    g: Array           # [C] f32 cluster compactness at convergence
+    counts: Array      # [C] f32 landmark cardinality per cluster
+    n_iter: Array      # [] int32
+    cost: Array        # [] f32  converged mini-batch cost
+
+
+def _stats(k_xl: Array, k_ll: Array, labels_l: Array, n_clusters: int):
+    """f, g, counts from the landmark Gram blocks and landmark labels.
+
+    k_xl: [n, L]   rows x landmarks
+    k_ll: [L, L]   landmarks x landmarks
+    labels_l: [L]  labels of the landmarks
+    """
+    h = jax.nn.one_hot(labels_l, n_clusters, dtype=jnp.float32)      # [L, C]
+    counts = jnp.sum(h, axis=0)                                      # [C]
+    safe = jnp.maximum(counts, 1.0)
+    # f_{i,j}: masked row-sum == one matmul on the MXU.
+    f = jnp.dot(k_xl.astype(jnp.float32), h) / safe[None, :]         # [n, C]
+    # g_j = (H^T K_ll H)_jj / counts_j^2, via S = K_ll @ H.
+    s = jnp.dot(k_ll.astype(jnp.float32), h)                         # [L, C]
+    g = jnp.sum(h * s, axis=0) / (safe * safe)                       # [C]
+    return f, g, counts
+
+
+def _assign(f: Array, g: Array, counts: Array) -> tuple[Array, Array]:
+    """argmin_j (g_j - 2 f_ij); empty clusters are unjoinable (+BIG)."""
+    dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)  # [n, C]
+    labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    mind = jnp.min(dist, axis=1)
+    return labels, mind
+
+
+def _cost(diag_k: Array, mind: Array) -> Array:
+    """Omega = sum_i K_ii + min_j(g_j - 2 f_ij)   (||phi(x)-w||^2 expansion)."""
+    return jnp.sum(diag_k.astype(jnp.float32) + mind)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def kkmeans_fit(
+    k_xl: Array,
+    l_idx: Array,
+    diag_k: Array,
+    labels0: Array,
+    *,
+    n_clusters: int,
+    max_iters: int = 100,
+) -> InnerResult:
+    """Run the inner GD loop (Eq.4) to convergence on one mini-batch.
+
+    Args:
+      k_xl: [n, L] kernel block between every batch row and the landmarks.
+      l_idx: [L] int32 indices of the landmarks within the batch.
+      diag_k: [n] K(x_i, x_i).
+      labels0: [n] initial labels (from k-means++ or the previous batch's
+        global medoids, Eq.8).
+      n_clusters: C.
+      max_iters: hard iteration cap (the paper iterates to label fixpoint;
+        Bottou & Bengio guarantee a.s. convergence for the exact case).
+    """
+    k_ll = jnp.take(k_xl, l_idx, axis=0)  # [L, L]
+
+    def body(state: InnerState) -> InnerState:
+        f, g, counts = _stats(k_xl, k_ll, jnp.take(state.labels, l_idx), n_clusters)
+        labels, mind = _assign(f, g, counts)
+        changed = jnp.any(labels != state.labels)
+        return InnerState(labels, changed, state.t + 1, _cost(diag_k, mind))
+
+    def cond(state: InnerState) -> Array:
+        return jnp.logical_and(state.changed, state.t < max_iters)
+
+    init = InnerState(
+        labels=labels0.astype(jnp.int32),
+        changed=jnp.array(True),
+        t=jnp.array(0, jnp.int32),
+        cost=jnp.array(jnp.inf, jnp.float32),
+    )
+    final = jax.lax.while_loop(cond, body, init)
+
+    # one more stats pass at the fixpoint (cheap relative to the loop) so the
+    # caller gets f/g consistent with the final labels for Eq.7 medoids.
+    f, g, counts = _stats(k_xl, k_ll, jnp.take(final.labels, l_idx), n_clusters)
+    return InnerResult(final.labels, f, g, counts, final.t, final.cost)
+
+
+def medoid_indices(diag_k: Array, f: Array, labels: Array, counts: Array,
+                   *, restrict_to_members: bool = False) -> Array:
+    """Eq.7: m_j = argmin_{x_l} K_ll - 2 f_{l,j}  (medoid approximation).
+
+    The paper's argmin runs over the whole mini-batch; with
+    ``restrict_to_members=True`` it runs over cluster members only (never
+    worse, occasionally more robust — kept as an option, default faithful).
+    Empty clusters return index 0; callers must mask on ``counts == 0``
+    (their alpha is 0 so the value is never used, Eq.11 remark).
+    """
+    score = diag_k.astype(jnp.float32)[:, None] - 2.0 * f            # [n, C]
+    if restrict_to_members:
+        member = jax.nn.one_hot(labels, f.shape[1], dtype=jnp.bool_)
+        score = jnp.where(member, score, BIG)
+    return jnp.argmin(score, axis=0).astype(jnp.int32)               # [C]
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def kkmeans_fit_full(
+    k: Array,
+    diag_k: Array,
+    labels0: Array,
+    *,
+    n_clusters: int,
+    max_iters: int = 100,
+) -> InnerResult:
+    """Exact (s = 1) kernel k-means: landmarks == every sample."""
+    n = k.shape[0]
+    return kkmeans_fit.__wrapped__(
+        k, jnp.arange(n, dtype=jnp.int32), diag_k, labels0,
+        n_clusters=n_clusters, max_iters=max_iters,
+    )

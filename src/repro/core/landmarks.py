@@ -1,0 +1,49 @@
+"""A-priori sparse centroid representation — landmark selection (paper §3.2).
+
+The centroid expansion (Eq.14) is restricted to |L| landmarks uniformly
+sampled from each mini-batch; the sparsity knob is
+
+    s = (|L| / N) * B          (Eq.18)   <=>   |L| = s * (N / B)
+
+so ``s = 1`` recovers the exact mini-batch algorithm and the number of kernel
+evaluations per batch drops from (N/B)^2 to s * (N/B)^2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def num_landmarks(batch_size: int, s: float, *, n_clusters: int, multiple_of: int = 1) -> int:
+    """|L| = ceil(s * batch_size), clamped to [C, batch_size].
+
+    ``multiple_of`` lets the distributed runtime round |L| up to a multiple of
+    the landmark-sharding axis size so every device gets an equal slice.
+    """
+    if not (0.0 < s <= 1.0):
+        raise ValueError(f"s must be in (0, 1], got {s}")
+    l = max(int(-(-s * batch_size // 1)), n_clusters)  # ceil, >= C
+    if multiple_of > 1:
+        l = -(-l // multiple_of) * multiple_of         # round up to multiple
+        if l > batch_size:                             # can't exceed the batch
+            l = (batch_size // multiple_of) * multiple_of
+        if l < n_clusters:
+            raise ValueError(
+                f"batch={batch_size} too small for C={n_clusters} landmarks "
+                f"in multiples of {multiple_of}")
+    return min(l, batch_size)
+
+
+def choose_landmarks(key: Array, batch_size: int, n_landmarks: int) -> Array:
+    """Uniform sample WITHOUT replacement of landmark indices (sorted).
+
+    Sorted order keeps the row-gather ``k_xl[l_idx]`` cache/DMA friendly.
+    """
+    if n_landmarks > batch_size:
+        raise ValueError(f"|L|={n_landmarks} > batch={batch_size}")
+    if n_landmarks == batch_size:
+        return jnp.arange(batch_size, dtype=jnp.int32)
+    idx = jax.random.choice(key, batch_size, (n_landmarks,), replace=False)
+    return jnp.sort(idx).astype(jnp.int32)

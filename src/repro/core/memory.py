@@ -1,0 +1,114 @@
+"""Memory-aware planning of (B, s) — the paper's Eq.19 and §4.2 rationale.
+
+The per-node footprint of one mini-batch iteration (paper §3.3, s = 1) is
+
+    M(B) = Q * ( N/(B*P) * (N/B + C) + N/B + 2C )        [bytes]
+
+(K rows + f rows + labels + g + medoid bookkeeping). Setting M(B) <= R and
+solving for B gives B_min. The paper's printed Eq.19 drops a 4/P factor on
+R/Q under the square root; ``b_min_paper`` reproduces the printed formula,
+``b_min`` solves the quadratic exactly (they agree in the paper's regime
+C << R/Q). With landmarks the K-row term shrinks by s; with the fused
+assignment path (DESIGN.md §2) the K term disappears entirely and B_min is
+driven by feature storage — ``plan`` reports all three.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Per-processor memory budget. Defaults: one TPU v5e chip."""
+    memory_bytes: float = 16e9        # R
+    n_processors: int = 256           # P
+    bytes_per_scalar: int = 4         # Q (fp32 kernel rows)
+    hbm_gbps: float = 819.0
+    peak_tflops_bf16: float = 197.0
+    ici_gbps_per_link: float = 50.0
+
+
+def footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
+                    s: float = 1.0, d: int = 0, fused: bool = False) -> float:
+    """Per-node bytes for one mini-batch inner-loop iteration.
+
+    Paper formula plus: landmark scaling of the K-block columns (s), optional
+    feature storage (d > 0: the batch itself + landmarks live on-node for
+    kernel evaluation), and the fused path that never materializes K.
+    """
+    nb = n / b                       # mini-batch size
+    rows = nb / p                    # rows owned by this node
+    cols = s * nb                    # landmark columns
+    k_term = 0.0 if fused else rows * (cols + c)   # K rows + f rows
+    feat = d * (rows + cols) if d else 0.0         # X rows + landmark rows
+    return q * (k_term + nb + 2 * c + feat)
+
+
+def b_min(n: int, c: int, machine: MachineSpec, *, s: float = 1.0) -> int:
+    """Smallest B such that footprint fits in machine.memory_bytes (exact).
+
+    Solves  Q*( s*N^2/(B^2*P) + C*N/(B*P) + N/B + 2C ) <= R  for 1/B.
+    """
+    p, q, r = machine.n_processors, machine.bytes_per_scalar, machine.memory_bytes
+    # quadratic a*x^2 + b*x + c0 <= 0 with x = 1/B
+    a = q * s * n * n / p
+    b = q * n * (c / p + 1.0)
+    c0 = q * 2.0 * c - r
+    if c0 >= 0:
+        raise ValueError("machine cannot hold even the O(C) bookkeeping")
+    x = (-b + math.sqrt(b * b - 4.0 * a * c0)) / (2.0 * a)
+    return max(1, math.ceil(1.0 / x))
+
+
+def b_min_paper(n: int, c: int, machine: MachineSpec) -> int:
+    """The paper's printed Eq.19 (kept verbatim for fidelity; see module doc)."""
+    p, q, r = machine.n_processors, machine.bytes_per_scalar, machine.memory_bytes
+    t = c / p + 1.0
+    disc = t * t - 8.0 * c / p + r / q
+    denom = -t + math.sqrt(disc)
+    return max(1, math.ceil((2.0 * n / p) / denom))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    b: int
+    s: float
+    footprint: float
+    fused_footprint: float
+    note: str
+
+
+def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
+         target_batch_seconds: float | None = None,
+         measured_batch_seconds: float | None = None) -> Plan:
+    """§4.2 model-selection rationale, automated.
+
+    Start at (B_min, s=1). If a target per-batch time is given together with a
+    measured single-batch time, first shrink s (down to 0.2 — the paper's
+    accuracy cliff), then increase B.
+    """
+    b = b_min(n, c, machine)
+    s = 1.0
+    note = "B_min at s=1 (optimal for the available memory)"
+    if target_batch_seconds and measured_batch_seconds:
+        ratio = measured_batch_seconds / target_batch_seconds
+        if ratio > 1.0:
+            # kernel evaluations scale ~ s * (N/B)^2: first knob is s ...
+            s = max(0.2, 1.0 / ratio)
+            residual = ratio * s
+            if residual > 1.0:
+                # ... then B (execution time ~ 1/B per batch).
+                b = math.ceil(b * residual)
+                note = f"s floored at 0.2 (accuracy cliff), B raised x{residual:.2f}"
+            else:
+                note = f"s lowered to {s:.3f} to hit the time target"
+    return Plan(
+        b=b, s=s,
+        footprint=footprint_bytes(n, b, c, machine.n_processors,
+                                  machine.bytes_per_scalar, s=s, d=d),
+        fused_footprint=footprint_bytes(n, b, c, machine.n_processors,
+                                        machine.bytes_per_scalar, s=s, d=d,
+                                        fused=True),
+        note=note,
+    )

@@ -1,0 +1,224 @@
+"""Mini-batch kernel k-means outer loop (paper §3.1, Alg.1).
+
+Per mini-batch i:
+  1. fetch X^i (stride or block sampling — repro.data.sampling)
+  2. evaluate the landmark kernel block K^i = K(X^i, X^i[L])   [n, |L|]
+  3. initialize labels: kernel k-means++ (i = 0) or nearest global medoid via
+     the auxiliary matrix K~^i (Eq.8)
+  4. inner GD loop to label fixpoint (repro.core.kkmeans)
+  5. medoid approximation of the batch prototypes (Eq.7/10)
+  6. merge into the global prototypes with the convex combination
+     w_j <- (1-a) phi(m_j) + a phi(m_j^i),  a = |w_j^i| / (|w_j^i| + |w_j|)
+     re-approximated on the batch (Eq.12); empty batch clusters (a = 0) leave
+     the global medoid untouched (paper's empty-cluster rule).
+
+The outer loop is host-side Python (it is inherently sequential — §3.3) and
+streams mini-batches; each numbered step above is a single jitted function, so
+the whole batch step runs as 2 device programs. Global state between batches
+is O(C·d): medoid coordinates, their kernel diagonal, and cardinalities —
+exactly what Alg.1 communicates.
+
+Checkpoint/restart: ``fit`` accepts a checkpoint callback invoked after every
+merged mini-batch with a serializable ``GlobalState`` — restart loses at most
+one mini-batch of work (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .init import assign_to_medoids, kmeans_pp_indices
+from .kernels import KernelSpec
+from .kkmeans import kkmeans_fit, medoid_indices
+from .landmarks import choose_landmarks, num_landmarks
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniBatchConfig:
+    n_clusters: int
+    n_batches: int = 1                   # B
+    s: float = 1.0                       # landmark fraction knob (Eq.18)
+    kernel: KernelSpec = KernelSpec("rbf", gamma=1.0)
+    max_inner_iters: int = 100
+    sampling: str = "stride"             # "stride" | "block"  (§3.1, Fig.1b)
+    seed: int = 0
+    restrict_medoids_to_members: bool = False  # Eq.7 is unrestricted
+    landmark_multiple_of: int = 1        # distributed runtime alignment
+
+
+class GlobalState(NamedTuple):
+    """O(C·d) cross-batch state — the only thing that survives a batch."""
+    medoids: Array        # [C, d] medoid coordinates
+    medoid_diag: Array    # [C]    K(m_j, m_j)
+    cardinalities: Array  # [C]    accumulated |w_j| (f32; counts are exact)
+    batches_done: Array   # []     int32
+
+
+class BatchStats(NamedTuple):
+    inner_iters: int
+    cost: float                  # Omega(W^i) at the inner fixpoint (Eq.9)
+    displacement: np.ndarray     # [C] feature-space medoid displacement^2
+    counts: np.ndarray           # [C] batch cluster cardinalities
+
+
+class FitResult(NamedTuple):
+    state: GlobalState
+    history: list[BatchStats]
+
+
+# ---------------------------------------------------------------------------
+# jitted batch-step bodies
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_landmarks"))
+def _first_batch_step(x: Array, key: Array, *, cfg: MiniBatchConfig,
+                      n_landmarks: int):
+    """Batch 0: k-means++ seeding, inner loop, medoid extraction."""
+    spec = cfg.kernel
+    diag_k = spec.diag(x)
+    k_lm, k_pp = jax.random.split(key)
+    l_idx = choose_landmarks(k_lm, x.shape[0], n_landmarks)
+    k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
+
+    seeds = kmeans_pp_indices(x, diag_k, k_pp, n_clusters=cfg.n_clusters,
+                              spec=spec)
+    seed_x = jnp.take(x, seeds, axis=0)
+    labels0, _ = assign_to_medoids(x, diag_k, seed_x, spec.diag(seed_x),
+                                   spec=spec)
+
+    res = kkmeans_fit(k_xl, l_idx, diag_k, labels0,
+                      n_clusters=cfg.n_clusters,
+                      max_iters=cfg.max_inner_iters)
+    m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,
+                           restrict_to_members=cfg.restrict_medoids_to_members)
+    medoids = jnp.take(x, m_idx, axis=0)                           # [C, d]
+    state = GlobalState(
+        medoids=medoids,
+        medoid_diag=spec.diag(medoids),
+        cardinalities=res.counts,
+        batches_done=jnp.array(1, jnp.int32),
+    )
+    return state, res
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_landmarks"))
+def _next_batch_step(x: Array, key: Array, state: GlobalState, *,
+                     cfg: MiniBatchConfig, n_landmarks: int):
+    """Batch i > 0: Eq.8 init, inner loop, Eq.7 medoids, Eq.12 merge."""
+    spec = cfg.kernel
+    diag_k = spec.diag(x)
+    l_idx = choose_landmarks(key, x.shape[0], n_landmarks)
+    k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
+
+    # -- init from the previous global medoids (Eq.8); K~^i is [n, C].
+    labels0, k_tilde = assign_to_medoids(x, diag_k, state.medoids,
+                                         state.medoid_diag, spec=spec)
+
+    res = kkmeans_fit(k_xl, l_idx, diag_k, labels0,
+                      n_clusters=cfg.n_clusters,
+                      max_iters=cfg.max_inner_iters)
+
+    # -- batch medoids (Eq.7/10).
+    m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,
+                           restrict_to_members=cfg.restrict_medoids_to_members)
+    k_xm = spec(x, jnp.take(x, m_idx, axis=0)).astype(jnp.float32)  # [n, C]
+
+    # -- merge (Eq.11-13): minimize over the batch
+    #    || phi(x_l) - (1-a) phi(m_j) - a phi(m_j^i) ||^2
+    #    = K_ll - 2(1-a) K(x_l, m_j) - 2a K(x_l, m_j^i) + const(j).
+    alpha = res.counts / jnp.maximum(res.counts + state.cardinalities, 1.0)
+    score = (diag_k.astype(jnp.float32)[:, None]
+             - 2.0 * (1.0 - alpha)[None, :] * k_tilde
+             - 2.0 * alpha[None, :] * k_xm)                         # [n, C]
+    merge_idx = jnp.argmin(score, axis=0)                           # [C]
+    merged = jnp.take(x, merge_idx, axis=0)                         # [C, d]
+
+    # empty batch cluster -> alpha = 0 -> keep the old global medoid verbatim
+    # (the re-approximation argmin would otherwise pull it into this batch).
+    keep = (res.counts == 0)[:, None]
+    new_medoids = jnp.where(keep, state.medoids, merged)
+    new_diag = jnp.where(keep[:, 0], state.medoid_diag, spec.diag(merged))
+
+    # displacement diagnostic (Fig.4b): ||phi(m_new) - phi(m_old)||^2.
+    cross = jax.vmap(lambda a, b: spec(a[None, :], b[None, :])[0, 0])(
+        new_medoids, state.medoids)
+    disp = jnp.maximum(new_diag + state.medoid_diag - 2.0 * cross, 0.0)
+
+    new_state = GlobalState(
+        medoids=new_medoids,
+        medoid_diag=new_diag,
+        cardinalities=state.cardinalities + res.counts,
+        batches_done=state.batches_done + 1,
+    )
+    return new_state, res, disp
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def predict(x: Array, medoids: Array, medoid_diag: Array, *,
+            spec: KernelSpec) -> Array:
+    """Label new samples by nearest global medoid in feature space."""
+    labels, _ = assign_to_medoids(x, spec.diag(x), medoids, medoid_diag,
+                                  spec=spec)
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# host-side driver
+# ---------------------------------------------------------------------------
+
+
+def fit(
+    batches: Iterable[np.ndarray],
+    cfg: MiniBatchConfig,
+    *,
+    state: Optional[GlobalState] = None,
+    checkpoint_cb: Optional[Callable[[GlobalState, int], None]] = None,
+) -> FitResult:
+    """Run the outer loop over an iterable of mini-batches.
+
+    ``batches`` may be a generator (block sampling over a stream) or a list
+    (stride sampling over a known dataset) — see ``repro.data.sampling``.
+    Passing a previous ``state`` resumes after a restart (the iterable should
+    then yield only the remaining batches).
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    history: list[BatchStats] = []
+    start = int(state.batches_done) if state is not None else 0
+
+    for i, xb in enumerate(batches, start=start):
+        xb = jnp.asarray(xb)
+        n = xb.shape[0]
+        n_l = num_landmarks(n, cfg.s, n_clusters=cfg.n_clusters,
+                            multiple_of=cfg.landmark_multiple_of)
+        key, sub = jax.random.split(jax.random.fold_in(key, i))
+        if state is None:
+            state, res = _first_batch_step(xb, sub, cfg=cfg, n_landmarks=n_l)
+            disp = jnp.zeros((cfg.n_clusters,), jnp.float32)
+        else:
+            state, res, disp = _next_batch_step(xb, sub, state, cfg=cfg,
+                                                n_landmarks=n_l)
+        history.append(BatchStats(
+            inner_iters=int(res.n_iter),
+            cost=float(res.cost),
+            displacement=np.asarray(disp),
+            counts=np.asarray(res.counts),
+        ))
+        if checkpoint_cb is not None:
+            checkpoint_cb(state, i)
+    if state is None:
+        raise ValueError("empty batch iterable")
+    return FitResult(state, history)
+
+
+def fit_dataset(x: np.ndarray, cfg: MiniBatchConfig, **kw) -> FitResult:
+    """Convenience: stride/block-split a known dataset then ``fit``."""
+    from repro.data.sampling import split_batches
+    return fit(split_batches(x, cfg.n_batches, strategy=cfg.sampling), cfg, **kw)

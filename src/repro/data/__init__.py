@@ -1,0 +1,11 @@
+from .sampling import batch_indices, split_batches, stream_blocks
+from .synthetic import (make_blobs, make_md_trajectory, make_mnist_like,
+                        make_noisy_replicas, make_rcv1_like, toy2d)
+from .loader import PrefetchLoader
+
+__all__ = [
+    "batch_indices", "split_batches", "stream_blocks",
+    "make_blobs", "make_md_trajectory", "make_mnist_like",
+    "make_noisy_replicas", "make_rcv1_like", "toy2d",
+    "PrefetchLoader",
+]

@@ -1,0 +1,56 @@
+"""Double-buffered mini-batch prefetcher — the TPU-native analogue of the
+paper's producer/consumer offload scheme (§3.3, Fig.3).
+
+On the paper's CPU+GPU node, a dedicated thread feeds the GPU so that
+K^{i+1} is produced while the host consumes K^i. On TPU the kernel matrix is
+produced by the same chip that consumes it, so the equivalent overlap is
+host-side: a background thread stages batch i+1 (disk fetch, dtype cast,
+device put) while the device iterates the inner loop on batch i. With
+``jax.device_put`` the H2D copy overlaps compute exactly like the paper's
+3-stage H2D/compute/D2H pipeline (Fig.3b) minus the D2H leg, which fusion
+removed (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class PrefetchLoader:
+    """Wrap a mini-batch iterable with ``depth`` batches of lookahead."""
+
+    _SENTINEL = object()
+
+    def __init__(self, batches: Iterable[np.ndarray], *, depth: int = 2,
+                 device: Optional[jax.Device] = None, dtype=np.float32):
+        self._src = iter(batches)
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._device = device
+        self._dtype = dtype
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self) -> None:
+        try:
+            for batch in self._src:
+                arr = np.asarray(batch, dtype=self._dtype)
+                staged = jax.device_put(arr, self._device)  # async H2D
+                self._q.put(staged)
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+        finally:
+            self._q.put(self._SENTINEL)
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self._q.get()
+            if item is self._SENTINEL:
+                if self._err is not None:
+                    raise self._err
+                return
+            yield item

@@ -1,0 +1,52 @@
+"""Mini-batch sampling strategies (paper §3.1, Fig.1b).
+
+* stride sampling  — X^i = { x_{i + j*B} } : minimizes within-batch
+  correlation when the whole dataset is batch-available. "When possible,
+  this sampling should always be used" (§4.5).
+* block  sampling  — X^i = { x_{i*N/B + j} } : streaming-friendly, clustering
+  starts as soon as the first N/B samples arrive; risks concept drift
+  (Fig.4a top row).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+
+def batch_indices(n: int, n_batches: int, strategy: str = "stride") -> list[np.ndarray]:
+    """Disjoint index sets for B mini-batches. Trailing remainder samples are
+    folded into the last batch (the paper assumes N % B == 0)."""
+    if n_batches < 1 or n_batches > n:
+        raise ValueError(f"need 1 <= B <= N, got B={n_batches}, N={n}")
+    if strategy == "stride":
+        return [np.arange(i, n, n_batches) for i in range(n_batches)]
+    if strategy == "block":
+        size = n // n_batches
+        out = [np.arange(i * size, (i + 1) * size) for i in range(n_batches)]
+        if n % n_batches:
+            out[-1] = np.arange((n_batches - 1) * size, n)
+        return out
+    raise ValueError(f"unknown sampling strategy {strategy!r}")
+
+
+def split_batches(x: np.ndarray, n_batches: int,
+                  strategy: str = "stride") -> list[np.ndarray]:
+    return [x[idx] for idx in batch_indices(len(x), n_batches, strategy)]
+
+
+def stream_blocks(stream: Iterator[np.ndarray], batch_size: int) -> Iterator[np.ndarray]:
+    """Re-chunk an arbitrary sample stream into block mini-batches — the
+    'process a data stream' mode of §3.1 (clustering starts at first batch)."""
+    buf: list[np.ndarray] = []
+    have = 0
+    for chunk in stream:
+        buf.append(np.atleast_2d(chunk))
+        have += len(buf[-1])
+        while have >= batch_size:
+            flat = np.concatenate(buf, axis=0)
+            yield flat[:batch_size]
+            rest = flat[batch_size:]
+            buf, have = ([rest] if len(rest) else []), len(rest)
+    if have:
+        yield np.concatenate(buf, axis=0)

@@ -1,0 +1,9 @@
+from .mesh import axis_size, make_test_mesh, row_axes_of
+from .inner import DistributedInnerConfig, distributed_kkmeans_fit
+from .outer import DistributedMiniBatchKMeans
+
+__all__ = [
+    "axis_size", "make_test_mesh", "row_axes_of",
+    "DistributedInnerConfig", "distributed_kkmeans_fit",
+    "DistributedMiniBatchKMeans",
+]

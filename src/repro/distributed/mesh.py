@@ -1,0 +1,45 @@
+"""Mesh utilities for the distributed clustering runtime.
+
+The *production* mesh lives in ``repro.launch.mesh`` (16x16 single-pod /
+2x16x16 multi-pod). The helpers here build correctness-test meshes from
+whatever devices exist (e.g. 8 forced host devices) and answer axis-shape
+questions without touching global device state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_test_mesh(axes: dict[str, int] | None = None) -> Mesh:
+    """Mesh over the available devices; default splits them into
+    (data, model) with the largest power-of-two model axis <= sqrt(n)."""
+    devices = jax.devices()
+    n = len(devices)
+    if axes is None:
+        model = 1
+        while model * 2 <= int(math.isqrt(n)) and n % (model * 2) == 0:
+            model *= 2
+        axes = {"data": n // model, "model": model}
+    shape = tuple(axes.values())
+    if math.prod(shape) != n:
+        raise ValueError(f"mesh {axes} needs {math.prod(shape)} devices, have {n}")
+    return jax.make_mesh(
+        shape, tuple(axes.keys()),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def axis_size(mesh: Mesh, names: tuple[str, ...] | str) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    out = 1
+    for n in names:
+        out *= mesh.shape[n]
+    return out
+
+
+def row_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    """Row (data-parallel) axes: every mesh axis except 'model'."""
+    return tuple(n for n in mesh.axis_names if n != "model")

@@ -1,0 +1,206 @@
+"""Distributed mini-batch outer loop (paper Alg.1 end-to-end on a mesh).
+
+Host-side orchestration identical to ``repro.core.minibatch`` but every
+O(N/B) step runs sharded:
+
+  * Eq.8 init + K~^i           -> row-sharded kernel vs C global medoids
+  * inner GD loop              -> repro.distributed.inner (Alg.1 lines 9-16)
+  * Eq.7 medoids               -> local argmin + cross-shard min-reduce
+                                  (paper line 18 "allreduce min M^i")
+  * Eq.12 merge                -> row-sharded score + same min-reduce
+                                  (paper line 20 "allreduce min M")
+
+Only O(C*d) state (medoid coordinates, diag, cardinalities) crosses batches,
+so checkpoint/restart and elastic re-meshing are trivial: the state is mesh-
+independent (repro.ft).
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.init import kmeans_pp_indices
+from repro.core.kkmeans import BIG
+from repro.core.landmarks import choose_landmarks, num_landmarks
+from repro.core.minibatch import BatchStats, FitResult, GlobalState, MiniBatchConfig
+
+from .inner import DistributedInnerConfig, distributed_kkmeans_fit
+
+Array = jax.Array
+
+
+def _dist_argmin_rows(mesh: Mesh, row_axes, score: Array, n_local: int):
+    """argmin over the (row-sharded) axis 0 of ``score`` [n, C] -> [C] global
+    row indices. Local argmin then a gather+min over shards (the paper's
+    allreduce-min with index payload)."""
+
+    def shard_fn(score_local):
+        idx = jnp.argmin(score_local, axis=0)                      # [C] local
+        val = jnp.min(score_local, axis=0)                         # [C]
+        # global row index = shard offset + local index.
+        row_rank = jax.lax.axis_index(row_axes)
+        gidx = row_rank * score_local.shape[0] + idx
+        vals = jax.lax.all_gather(val, row_axes)                   # [D, C]
+        gidxs = jax.lax.all_gather(gidx, row_axes)                 # [D, C]
+        best = jnp.argmin(vals, axis=0)                            # [C]
+        return jnp.take_along_axis(gidxs, best[None, :], axis=0)[0]
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=P(row_axes, None), out_specs=P(),
+        check_vma=False)(score)
+
+
+class DistributedMiniBatchKMeans:
+    """Mesh-resident mini-batch kernel k-means (the production entry point)."""
+
+    def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *,
+                 mode: str = "materialize"):
+        self.mesh = mesh
+        self.cfg = cfg
+        row_axes = tuple(n for n in mesh.axis_names if n != "model")
+        col_axis = "model" if "model" in mesh.axis_names else None
+        self.row_axes = row_axes
+        self.col_axis = col_axis
+        self.d_size = math.prod(mesh.shape[a] for a in row_axes)
+        self.m_size = mesh.shape[col_axis] if col_axis else 1
+        self.inner_cfg = DistributedInnerConfig(
+            n_clusters=cfg.n_clusters, kernel=cfg.kernel,
+            max_iters=cfg.max_inner_iters, mode=mode,
+            row_axes=row_axes, col_axis=col_axis)
+        self._row_sharding = NamedSharding(mesh, P(row_axes, None))
+
+    # -- helpers -----------------------------------------------------------
+
+    def _put_rows(self, x: np.ndarray) -> Array:
+        return jax.device_put(jnp.asarray(x), self._row_sharding)
+
+    def _landmark_count(self, n: int) -> int:
+        return num_landmarks(
+            n, self.cfg.s, n_clusters=self.cfg.n_clusters,
+            multiple_of=int(np.lcm(self.d_size, self.m_size)))
+
+    def _init_labels(self, x: Array, diag: Array, medoids: Array,
+                     mdiag: Array):
+        """Eq.8 on the mesh; also returns row-sharded K~^i for the merge."""
+        spec = self.cfg.kernel
+
+        def shard_fn(x_local, diag_local):
+            kt = spec(x_local, medoids).astype(jnp.float32)
+            d2 = diag_local.astype(jnp.float32)[:, None] + mdiag[None, :] \
+                - 2.0 * kt
+            return jnp.argmin(d2, axis=1).astype(jnp.int32), kt
+
+        return jax.shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(P(self.row_axes, None), P(self.row_axes)),
+            out_specs=(P(self.row_axes), P(self.row_axes, None)),
+            check_vma=False)(x, diag)
+
+    def _medoid_merge(self, x: Array, diag: Array, res, k_tilde, state,
+                      first: bool):
+        """Eq.7 batch medoids + Eq.12 merge, both via distributed argmin."""
+        spec, C = self.cfg.kernel, self.cfg.n_clusters
+        # Eq.7: batch medoid scores.
+        score7 = diag.astype(jnp.float32)[:, None] - 2.0 * res.f  # sharded
+        m_idx = _dist_argmin_rows(self.mesh, self.row_axes, score7,
+                                  x.shape[0] // self.d_size)
+        batch_medoids = jnp.take(x, m_idx, axis=0)                # replicated
+        if first:
+            medoids = batch_medoids
+            mdiag = spec.diag(batch_medoids)
+            cards = res.counts
+            disp = jnp.zeros((C,), jnp.float32)
+        else:
+            alpha = res.counts / jnp.maximum(res.counts + state.cardinalities,
+                                             1.0)
+
+            def score_fn(x_local, diag_local, kt_local):
+                kxm = spec(x_local, batch_medoids).astype(jnp.float32)
+                return (diag_local.astype(jnp.float32)[:, None]
+                        - 2.0 * (1.0 - alpha)[None, :] * kt_local
+                        - 2.0 * alpha[None, :] * kxm)
+
+            score12 = jax.shard_map(
+                score_fn, mesh=self.mesh,
+                in_specs=(P(self.row_axes, None), P(self.row_axes),
+                          P(self.row_axes, None)),
+                out_specs=P(self.row_axes, None), check_vma=False)(
+                    x, diag, k_tilde)
+            merge_idx = _dist_argmin_rows(self.mesh, self.row_axes, score12,
+                                          x.shape[0] // self.d_size)
+            merged = jnp.take(x, merge_idx, axis=0)
+            keep = (res.counts == 0)[:, None]
+            medoids = jnp.where(keep, state.medoids, merged)
+            mdiag = jnp.where(keep[:, 0], state.medoid_diag, spec.diag(merged))
+            cross = jax.vmap(lambda a, b: spec(a[None], b[None])[0, 0])(
+                medoids, state.medoids)
+            disp = jnp.maximum(mdiag + state.medoid_diag - 2.0 * cross, 0.0)
+            cards = state.cardinalities + res.counts
+        new_state = GlobalState(
+            medoids=medoids, medoid_diag=mdiag, cardinalities=cards,
+            batches_done=(state.batches_done + 1) if not first
+            else jnp.array(1, jnp.int32))
+        return new_state, disp
+
+    # -- driver -------------------------------------------------------------
+
+    def fit(self, batches: Iterable[np.ndarray], *,
+            state: Optional[GlobalState] = None,
+            checkpoint_cb=None) -> FitResult:
+        cfg = self.cfg
+        spec = cfg.kernel
+        key = jax.random.PRNGKey(cfg.seed)
+        history: list[BatchStats] = []
+        start = int(state.batches_done) if state is not None else 0
+
+        for i, xb in enumerate(batches, start=start):
+            n = len(xb)
+            pad = (-n) % self.d_size
+            if pad:   # replicate final rows so shapes divide the mesh
+                xb = np.concatenate([xb, xb[:pad]], axis=0)
+            x = self._put_rows(np.asarray(xb, np.float32))
+            diag = jax.shard_map(
+                lambda xl: spec.diag(xl), mesh=self.mesh,
+                in_specs=P(self.row_axes, None), out_specs=P(self.row_axes),
+                check_vma=False)(x)
+            n_l = self._landmark_count(x.shape[0])
+            key, k_lm, k_pp = jax.random.split(jax.random.fold_in(key, i), 3)
+            l_idx = choose_landmarks(k_lm, x.shape[0], n_l)
+            landmarks = jnp.take(x, l_idx, axis=0)   # [L, d] replicated
+
+            first = state is None
+            if first:
+                # distributed adaptation: k-means++ seeds FROM THE LANDMARK
+                # SET (the subspace centroids live in anyway, §3.2) — keeps
+                # the D^2 sampling single-pass and mesh-local.
+                seeds = kmeans_pp_indices(
+                    landmarks, spec.diag(landmarks), k_pp,
+                    n_clusters=cfg.n_clusters, spec=spec)
+                seed_x = jnp.take(landmarks, seeds, axis=0)
+                u0, k_tilde = self._init_labels(x, diag, seed_x,
+                                                spec.diag(seed_x))
+                state_in = GlobalState(seed_x, spec.diag(seed_x),
+                                       jnp.zeros((cfg.n_clusters,)),
+                                       jnp.array(0, jnp.int32))
+            else:
+                u0, k_tilde = self._init_labels(x, diag, state.medoids,
+                                                state.medoid_diag)
+                state_in = state
+
+            res = distributed_kkmeans_fit(
+                self.mesh, x, landmarks, l_idx, diag, u0, cfg=self.inner_cfg)
+            state, disp = self._medoid_merge(x, diag, res, k_tilde, state_in,
+                                             first)
+            history.append(BatchStats(
+                inner_iters=int(res.n_iter), cost=float(res.cost),
+                displacement=np.asarray(disp), counts=np.asarray(res.counts)))
+            if checkpoint_cb is not None:
+                checkpoint_cb(state, i)
+        if state is None:
+            raise ValueError("empty batch iterable")
+        return FitResult(state, history)

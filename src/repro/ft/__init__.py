@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager
+from .elastic import ElasticClusteringRunner
+from .straggler import WorkerStatus, replan_rows
+
+__all__ = ["CheckpointManager", "ElasticClusteringRunner", "WorkerStatus",
+           "replan_rows"]

@@ -1,0 +1,70 @@
+"""Elastic execution of the clustering outer loop.
+
+The mini-batch boundary is the natural failure/rescale domain: the global
+state is O(C*d) and mesh-independent, and the memory plan (Eq.19) is a pure
+function of (N, C, P, R) — so on any mesh change we re-plan B and resume from
+the last committed checkpoint, losing at most one mini-batch of work.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.minibatch import FitResult, GlobalState, MiniBatchConfig
+from repro.distributed.outer import DistributedMiniBatchKMeans
+
+from .checkpoint import CheckpointManager
+
+
+class ElasticClusteringRunner:
+    def __init__(self, cfg: MiniBatchConfig, ckpt: CheckpointManager, *,
+                 mode: str = "materialize"):
+        self.cfg = cfg
+        self.ckpt = ckpt
+        self.mode = mode
+
+    def _restore(self) -> Optional[GlobalState]:
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        like = GlobalState(
+            medoids=np.zeros((1,)), medoid_diag=np.zeros((1,)),
+            cardinalities=np.zeros((1,)), batches_done=np.zeros((), np.int32))
+        # shapes come from the manifest; ``like`` only fixes the structure.
+        return GlobalState(*self.ckpt.restore(step, like))
+
+    def run(self, mesh: Mesh, batches: Iterable[np.ndarray], *,
+            fail_after: Optional[int] = None) -> FitResult:
+        """Run (or resume) on ``mesh``. ``fail_after=k`` injects a simulated
+        failure after k mini-batches (tests / chaos drills)."""
+        state = self._restore()
+        start = int(state.batches_done) if state is not None else 0
+
+        def cb(s: GlobalState, i: int):
+            self.ckpt.save(i, s, extra={"n_batches": self.cfg.n_batches,
+                                        "s": self.cfg.s})
+
+        runner = DistributedMiniBatchKMeans(mesh, self.cfg, mode=self.mode)
+        it = iter(batches)
+        # skip already-committed batches on resume
+        for _ in range(start):
+            next(it)
+
+        if fail_after is not None:
+            consumed = []
+            for i, b in enumerate(it):
+                consumed.append(b)
+                if i + 1 >= fail_after:
+                    break
+            result = runner.fit(consumed, state=state, checkpoint_cb=cb)
+            raise SimulatedFailure(result)
+        return runner.fit(it, state=state, checkpoint_cb=cb)
+
+
+class SimulatedFailure(RuntimeError):
+    def __init__(self, partial: FitResult):
+        super().__init__("injected failure")
+        self.partial = partial

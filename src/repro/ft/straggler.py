@@ -1,0 +1,59 @@
+"""Straggler mitigation for the clustering runtime.
+
+Between mini-batches the only live state is O(C*d) (medoids + cardinalities),
+so re-partitioning work is nearly free. The planner assigns each worker a row
+range proportional to its measured throughput; dead workers get nothing and
+their rows are redistributed (the paper's row-wise layout makes this a pure
+index calculation — no data migration of K, which is recomputed per batch
+anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WorkerStatus:
+    worker_id: int
+    healthy: bool = True
+    rows_per_second: float = 1.0   # measured on the previous mini-batch
+
+
+def replan_rows(n_rows: int, statuses: list[WorkerStatus], *,
+                quantum: int = 8) -> dict[int, tuple[int, int]]:
+    """-> {worker_id: (row_start, n_rows)}; proportional to throughput,
+    quantized to ``quantum`` rows (tile alignment), exact cover of n_rows."""
+    alive = [s for s in statuses if s.healthy]
+    if not alive:
+        raise RuntimeError("no healthy workers")
+    speed = np.array([max(s.rows_per_second, 1e-9) for s in alive])
+    frac = speed / speed.sum()
+    sizes = np.floor(frac * n_rows / quantum).astype(int) * quantum
+    # distribute the remainder to the fastest workers, quantum at a time
+    rem = n_rows - sizes.sum()
+    order = np.argsort(-speed)
+    i = 0
+    while rem >= quantum:
+        sizes[order[i % len(alive)]] += quantum
+        rem -= quantum
+        i += 1
+    if rem:
+        sizes[order[0]] += rem
+    plan = {}
+    start = 0
+    for s, sz in zip(alive, sizes):
+        plan[s.worker_id] = (start, int(sz))
+        start += int(sz)
+    assert start == n_rows
+    return plan
+
+
+def detect_stragglers(batch_seconds: dict[int, float], *,
+                      threshold: float = 1.5) -> list[int]:
+    """Workers slower than ``threshold`` x median are flagged."""
+    if not batch_seconds:
+        return []
+    med = float(np.median(list(batch_seconds.values())))
+    return [w for w, t in batch_seconds.items() if t > threshold * med]

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every Pallas kernel in this package must ``assert_allclose`` against these
+functions across the shape/dtype sweep in tests/test_pallas_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def kernel_matrix_ref(x: Array, y: Array, *, kind: str = "rbf",
+                      gamma: float = 1.0, coef0: float = 1.0,
+                      degree: int = 3) -> Array:
+    """K(X, Y) -> [m, n] fp32, fp32 accumulation."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    dot = xf @ yf.T
+    if kind == "linear":
+        return dot
+    if kind == "polynomial":
+        return (gamma * dot + coef0) ** degree
+    if kind == "cosine":
+        xn = jnp.sqrt(jnp.sum(xf * xf, axis=1))[:, None]
+        yn = jnp.sqrt(jnp.sum(yf * yf, axis=1))[None, :]
+        return dot / jnp.maximum(xn * yn, 1e-12)
+    if kind == "rbf":
+        d2 = (jnp.sum(xf * xf, axis=1)[:, None]
+              + jnp.sum(yf * yf, axis=1)[None, :] - 2.0 * dot)
+        return jnp.exp(-gamma * jnp.maximum(d2, 0.0))
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
+                     *, kind: str = "rbf", gamma: float = 1.0,
+                     coef0: float = 1.0, degree: int = 3):
+    """Fused assignment oracle.
+
+    x: [n, d] rows; landmarks: [L, d]; h_norm: [L, C] one-hot(labels)/counts;
+    g: [C] cluster compactness (+BIG on empty/padded clusters).
+    Returns (labels [n] int32, mind [n] f32) where
+      f = K(x, landmarks) @ h_norm         (Eq.17)
+      labels = argmin_j g_j - 2 f_ij       (Eq.15)
+    """
+    k = kernel_matrix_ref(x, landmarks, kind=kind, gamma=gamma,
+                          coef0=coef0, degree=degree)
+    f = k @ h_norm.astype(jnp.float32)
+    dist = g[None, :].astype(jnp.float32) - 2.0 * f
+    return jnp.argmin(dist, axis=1).astype(jnp.int32), jnp.min(dist, axis=1)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *,
+                        causal: bool = True,
+                        softcap: float | None = None) -> Array:
+    """Attention oracle. q: [B, H, Sq, dh]; k/v: [B, KH, Sk, dh] (GQA)."""
+    b, h, sq, dh = q.shape
+    kh, sk = k.shape[1], k.shape[2]
+    groups = h // kh
+    kx = jnp.repeat(k, groups, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, groups, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * dh ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks the device count on first
+# init). 512 placeholder host devices back the production meshes below; the
+# dry-run lowers + compiles but never executes.
+
+import argparse          # noqa: E402
+import dataclasses      # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, TrainConfig, cells, get_arch  # noqa: E402
+from repro.launch.mesh import data_axes, make_production_mesh   # noqa: E402
+from repro.models import Axes, get_model                        # noqa: E402
+from repro.training.optim import adamw_init, opt_state_specs    # noqa: E402
+from repro.training.step import make_train_step                 # noqa: E402
+
+# ---------------------------------------------------------------------------
+# collective-bytes extraction from the post-SPMD HLO
+# ---------------------------------------------------------------------------
+
+_KIND_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUP_ALT = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+             "s64": 8, "u64": 8, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+             "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+
+def _dims_prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device link-bytes estimate per collective kind (ring costs):
+    all-gather: out*(g-1)/g; all-reduce: 2*out*(g-1)/g;
+    reduce-scatter: out*(g-1); all-to-all: out*(g-1)/g; permute: out."""
+    totals = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+              "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(totals, 0)
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        m = _KIND_RE.search(rhs)
+        if m is None:
+            continue
+        kind = m.group(1)
+        result = rhs[:m.start()]          # everything before the op name
+        out_bytes = sum(
+            _DT_BYTES.get(dt, 4) * _dims_prod(dims)
+            for dt, dims in _SHAPE_TOK.findall(result))
+        g = 1
+        mg = _GROUP_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mg2 = _GROUP_ALT.search(line)
+            if mg2:
+                g = int(mg2.group(2))
+        if g <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-gather":
+            moved = out_bytes * (g - 1) / g
+        elif kind == "all-reduce":
+            moved = 2.0 * out_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = out_bytes * (g - 1)
+        elif kind == "all-to-all":
+            moved = out_bytes * (g - 1) / g
+        else:
+            moved = out_bytes
+        totals[kind] += moved
+        counts[kind] += 1
+    return {"bytes_by_kind": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _specs_of(api, key):
+    """(param ShapeDtypeStructs, PartitionSpec tree) without allocating."""
+    cell = {}
+
+    def initf(k):
+        p, s = api.init(k)
+        cell["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(initf, key)
+    return shapes, cell["specs"]
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# §Perf hillclimb variants: config deltas applied on top of an arch config
+# (results are written under "<arch>+<variant>"; see EXPERIMENTS.md §Perf).
+VARIANTS = {
+    "ep": lambda cfg, dp: dataclasses.replace(
+        cfg, moe_ep_groups=dp),          # expert-parallel MoE dispatch
+    "qc1024": lambda cfg, dp: dataclasses.replace(
+        cfg, q_chunk=1024),              # half the attention chunk trips
+    "qc2048": lambda cfg, dp: dataclasses.replace(
+        cfg, q_chunk=2048),
+    # flash-attention Pallas kernel: meaningful only on a real TPU lowering
+    # (on CPU the kernel lowers via interpret mode — enormous HLO); listed
+    # for completeness, see EXPERIMENTS.md §Perf C3 for the analytic delta.
+    "flash": lambda cfg, dp: dataclasses.replace(cfg, attn_impl="flash"),
+}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               smoke: bool = False, opt_dtype: str | None = None,
+               variant: str | None = None):
+    """Lower + compile one (arch x shape x mesh) cell; return roofline facts."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = Axes(dp=data_axes(multi_pod), tp="model")
+    cfg = get_arch(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    dp_size = 1
+    for a in data_axes(multi_pod):
+        dp_size *= mesh.shape[a]
+    if variant:
+        cfg = VARIANTS[variant](cfg, dp_size)
+        arch = f"{arch}+{variant}"
+    from repro.models.common import set_ambient_mesh
+    set_ambient_mesh(mesh)     # shard_map-based layers (EP MoE) need it
+    api = get_model(cfg, tp_size=mesh.shape["model"], dp_size=dp_size)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    param_shapes, param_specs = _specs_of(api, key)
+    param_sh = _sharding_tree(mesh, param_specs)
+    import math
+    n_params = sum(math.prod(p.shape) for p in jax.tree.leaves(param_shapes))
+
+    if shape.kind == "train":
+        if opt_dtype is None:
+            # bf16 optimizer state for the >=200B configs (HBM budget).
+            opt_dtype = "bfloat16" if n_params > 1e11 else "float32"
+        tcfg = TrainConfig(opt_state_dtype=opt_dtype)
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, tcfg),
+                                    param_shapes)
+        opt_sh = _sharding_tree(mesh, opt_state_specs(param_specs))
+        batch_shapes = api.input_specs(shape)
+        batch_sh = _sharding_tree(mesh, api.batch_partition(shape, axes))
+        step = make_train_step(api, tcfg, axes)
+        jitted = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(param_shapes, opt_shapes, batch_shapes)
+            compiled = lowered.compile()
+    elif shape.kind == "prefill":
+        batch_shapes = api.input_specs(shape)
+        batch_sh = _sharding_tree(mesh, api.batch_partition(shape, axes))
+        cache_shapes, cache_specs = api.cache_specs(shape, axes)
+        cache_sh = _sharding_tree(mesh, cache_specs)
+
+        def prefill_fn(params, batch):
+            return api.prefill(params, batch, axes, max_len=shape.seq_len)
+
+        jitted = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(cache_sh, None))
+        with mesh:
+            lowered = jitted.lower(param_shapes, batch_shapes)
+            compiled = lowered.compile()
+    else:  # decode
+        batch_shapes = api.input_specs(shape)
+        batch_sh = _sharding_tree(mesh, api.batch_partition(shape, axes))
+        cache_shapes, cache_specs = api.cache_specs(shape, axes)
+        cache_sh = _sharding_tree(mesh, cache_specs)
+
+        def serve_step(params, cache, token, pos):
+            return api.decode(params, cache, token, pos, axes)
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(param_sh, cache_sh,
+                                       batch_sh["token"], batch_sh["pos"]),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(param_shapes, cache_shapes,
+                                   batch_shapes["token"],
+                                   batch_shapes["pos"])
+            compiled = lowered.compile()
+
+    cost = dict(compiled.cost_analysis() or {})
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+
+    # loop-aware re-analysis: cost_analysis() visits every while body ONCE,
+    # so scan-over-layers programs under-report by ~n_layers x. hlocost
+    # multiplies trip counts through the call graph (see §Roofline method).
+    from repro.launch import hlocost
+    la = hlocost.analyze(hlo_text)
+
+    # active params (MoE: top_k/n_experts of expert weights participate
+    # per token) for the MODEL_FLOPS = 6 N_active D roofline numerator.
+    n_active = n_params
+    if cfg.n_experts:
+        expert = sum(
+            math.prod(p.shape)
+            for kp, p in jax.tree_util.tree_flatten_with_path(param_shapes)[0]
+            if any(getattr(k, "key", "").startswith("e_")
+                   for k in kp))
+        n_active = n_params - expert \
+            + expert * cfg.moe_top_k // cfg.n_experts
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_params": int(n_params),
+        "n_active_params": int(n_active),
+        "tokens_per_step": int(tokens),
+        "model_flops_total": model_flops,
+        "flops_per_device": cost.get("flops"),
+        "bytes_per_device": cost.get("bytes accessed"),
+        "loop_aware": {
+            "flops_per_device": la.flops,
+            "bytes_per_device": la.bytes,
+            "collective_bytes_by_kind": la.coll,
+            "collective_counts": la.coll_counts,
+            "collective_bytes": la.coll_bytes,
+        },
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          ("flops" in k or "bytes" in k or "utilization" in k)},
+        "memory_analysis": mem_info,
+        "collectives": coll,
+        "compile_seconds": round(time.time() - t0, 2),
+        "ok": True,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--variant", default=None, choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    todo = cells() if args.all else [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            vtag = f"+{args.variant}" if args.variant else ""
+            tag = f"{arch}{vtag}__{shape}__{'mp' if mp else 'sp'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (cached)")
+                continue
+            try:
+                res = lower_cell(arch, shape, multi_pod=mp,
+                                 smoke=args.smoke,
+                                 variant=args.variant)
+                print(f"[ok]   {tag}  compile={res['compile_seconds']}s "
+                      f"flops/dev={res['flops_per_device']:.3e} "
+                      f"coll={res['collectives']['total_bytes']:.3e}B")
+            except Exception as e:
+                n_fail += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

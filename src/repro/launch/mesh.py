@@ -1,0 +1,23 @@
+"""Production meshes (the dry-run targets).
+
+single-pod: (16, 16) = 256 chips, axes (data, model)
+multi-pod : (2, 16, 16) = 512 chips, axes (pod, data, model)
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — device count is locked on first jax init, and the
+smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def data_axes(multi_pod: bool = False) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

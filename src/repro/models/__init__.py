@@ -1,0 +1,4 @@
+from .common import Axes
+from .registry import ModelAPI, get_model
+
+__all__ = ["Axes", "ModelAPI", "get_model"]

@@ -1,0 +1,163 @@
+"""GQA attention: training/prefill (chunked flash-style) and decode paths.
+
+Decode KV-cache sharding policy (DESIGN.md §6):
+  * n_kv_heads %  tp-size == 0  -> cache sharded over kv heads (classic TP);
+  * otherwise                   -> cache sharded over the SEQUENCE dim with a
+    numerically-stable partial-softmax combine (flash-decode) expressed so
+    GSPMD keeps the reduction local and psums only [B, H, dh]-sized partials.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import Axes, apply_rope, chunked_attention, rms_norm, shard
+
+Array = jax.Array
+
+
+class AttnParams(NamedTuple):
+    wq: Array          # [D, H*dh]
+    wk: Array          # [D, KH*dh]
+    wv: Array          # [D, KH*dh]
+    wo: Array          # [H*dh, D]
+    q_norm: Array | None
+    k_norm: Array | None
+
+
+def init_attention(b, cfg: ModelConfig, prefix: str = ""):
+    """Add attention params to a ParamBuilder ``b``."""
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    from jax.sharding import PartitionSpec as P
+    b.dense(prefix + "wq", (d, h * dh), P("data", "model"))
+    b.dense(prefix + "wk", (d, kh * dh), P("data", "model"))
+    b.dense(prefix + "wv", (d, kh * dh), P("data", "model"))
+    b.dense(prefix + "wo", (h * dh, d), P("model", "data"))
+    if cfg.qk_norm:
+        b.ones(prefix + "qn", (dh,), P(None))
+        b.ones(prefix + "kn", (dh,), P(None))
+
+
+def _project_qkv(p, x, cfg: ModelConfig, axes: Axes, positions, prefix=""):
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = (x @ p[prefix + "wq"]).reshape(b, s, h, dh)
+    k = (x @ p[prefix + "wk"]).reshape(b, s, kh, dh)
+    v = (x @ p[prefix + "wv"]).reshape(b, s, kh, dh)
+    q = shard(q, axes, "dp", None, "tp", None)
+    k = shard(k, axes, "dp", None, None, None)
+    v = shard(v, axes, "dp", None, None, None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p[prefix + "qn"])
+        k = rms_norm(k, p[prefix + "kn"])
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg: ModelConfig, axes: Axes, *,
+                    window: int | None, causal: bool = True,
+                    positions: Array | None = None, prefix: str = "",
+                    q_chunk: int = 512):
+    """Full-sequence attention (training / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, axes, positions, prefix)
+    if cfg.attn_impl == "flash" and window is None:
+        # Pallas flash kernel (scores stay in VMEM — EXPERIMENTS.md §Perf
+        # C3). [B,S,H,dh] -> [B,H,S,dh]; interpret mode off-TPU.
+        from repro.kernels.ops import flash_attention, use_pallas
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+            softcap=cfg.attn_softcap,
+            interpret=not use_pallas()).transpose(0, 2, 1, 3)
+    else:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_chunk=q_chunk)
+    out = out.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return out @ p[prefix + "wo"], (k, v)
+
+
+def cross_attention_block(p, x, memory_kv, cfg: ModelConfig, axes: Axes,
+                          prefix: str = "x_"):
+    """Decoder cross-attention against precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[prefix + "wq"]).reshape(b, s, h, dh)
+    q = shard(q, axes, "dp", None, "tp", None)
+    k, v = memory_kv
+    out = chunked_attention(q, k, v, causal=False, window=None,
+                            attn_softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, h * dh)
+    return out @ p[prefix + "wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+                     axes: Axes, *, window: int | None = None,
+                     prefix: str = "") -> tuple[Array, Array, Array]:
+    """One-token decode: update cache at ``pos``, attend over the cache.
+
+    x: [B, 1, D]; cache_k/v: [B, S, KH, dh] (ring buffer when ``window``).
+    ``pos`` is a scalar OR a per-slot [B] vector (continuous batching: each
+    request in the batch sits at its own cursor).
+    Returns (out [B, 1, D], cache_k, cache_v).
+    """
+    b = x.shape[0]
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s = cache_k.shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))   # [B]
+    q, k, v = _project_qkv(p, x, cfg, axes, pos_b[:, None], prefix)
+
+    slot_b = pos_b % s if window is not None else pos_b
+    # per-slot scatter along the sequence dim (one row per batch element)
+    cache_k = cache_k.at[jnp.arange(b), slot_b].set(
+        k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[jnp.arange(b), slot_b].set(
+        v[:, 0].astype(cache_v.dtype))
+
+    # scores over the cache: [B, KH, G, S]
+    groups = h // kh
+    qg = q.reshape(b, kh, groups, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * dh ** -0.5
+    if cfg.attn_softcap is not None:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    kpos = jnp.arange(s)
+    if window is not None:
+        # ring buffer: before wrap-around only slots <= pos hold data; after
+        # the first wrap every slot is a live (windowed) entry.
+        valid = (kpos[None, :] <= pos_b[:, None]) | (pos_b[:, None] >= s)
+    else:
+        valid = kpos[None, :] <= pos_b[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    return out @ p[prefix + "wo"], cache_k, cache_v
+
+
+def decode_cross_attention(p, x, memory_kv, cfg: ModelConfig, axes: Axes,
+                           prefix: str = "x_") -> Array:
+    b = x.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ p[prefix + "wq"]).reshape(b, 1, h, dh)
+    k, v = memory_kv                              # [B, Sm, KH, dh]
+    kh = k.shape[2]
+    groups = h // kh
+    qg = q.reshape(b, kh, groups, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * dh ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, 1, h * dh).astype(x.dtype) @ p[prefix + "wo"]

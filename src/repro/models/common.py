@@ -1,0 +1,301 @@
+"""Shared model substrate: norms, RoPE, sharding helpers, chunked attention,
+chunked cross-entropy, parameter initialization with PartitionSpec metadata.
+
+Conventions
+-----------
+* Params are nested dicts of arrays. Stacked layers carry a leading [L] (or
+  [groups, period]) dim and are consumed by ``lax.scan``.
+* Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+  params pytree with ``PartitionSpec``s — the launcher turns those into
+  ``NamedSharding``s for jit in_shardings (FSDP over the data axes x TP over
+  the model axis — DESIGN.md §6).
+* Logical mesh axes: ``dp`` = all data axes (("pod","data") on the multi-pod
+  mesh), ``tp`` = "model". ``Axes`` carries the mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+PyTree = Any
+
+
+# ambient concrete mesh for model code that needs shard_map (the GSPMD/jit
+# path cannot recover the mesh from tracing context — launchers set it).
+_AMBIENT_MESH = None
+
+
+def set_ambient_mesh(mesh) -> None:
+    global _AMBIENT_MESH
+    _AMBIENT_MESH = mesh
+
+
+def ambient_mesh():
+    return _AMBIENT_MESH
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical -> physical mesh-axis mapping."""
+    dp: tuple[str, ...] = ("data",)
+    tp: str | None = "model"
+
+    def spec(self, *dims) -> P:
+        """Translate logical dims ('dp' | 'tp' | None) to a PartitionSpec."""
+        out = []
+        for d in dims:
+            if d == "dp":
+                out.append(self.dp if len(self.dp) > 1 else self.dp[0])
+            elif d == "tp":
+                out.append(self.tp)
+            else:
+                out.append(None)
+        return P(*out)
+
+
+def shard(x: Array, axes: Axes, *dims) -> Array:
+    """with_sharding_constraint against the ambient mesh (no-op outside jit
+    with mesh context)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, axes.spec(*dims))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, spec, *, dtype=jnp.bfloat16, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * std, spec
+
+
+def zeros_init(shape, spec, *, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype), spec
+
+
+def ones_init(shape, spec, *, dtype=jnp.float32):
+    return jnp.ones(shape, dtype), spec
+
+
+class ParamBuilder:
+    """Collects (params, specs) trees with a split-as-you-go PRNG."""
+
+    def __init__(self, key: Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def sub(self) -> Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def dense(self, name: str, shape, spec, *, scale=None, dtype=None):
+        p, s = dense_init(self.sub(), shape, spec,
+                          dtype=dtype or self.dtype, scale=scale)
+        self.params[name], self.specs[name] = p, s
+
+    def zeros(self, name: str, shape, spec, *, dtype=jnp.float32):
+        self.params[name], self.specs[name] = zeros_init(shape, spec, dtype=dtype)
+
+    def ones(self, name: str, shape, spec, *, dtype=jnp.float32):
+        self.params[name], self.specs[name] = ones_init(shape, spec, dtype=dtype)
+
+    def child(self, name: str, builder: "ParamBuilder"):
+        self.params[name], self.specs[name] = builder.params, builder.specs
+
+    def build(self):
+        return self.params, self.specs
+
+
+def stack_params(trees: list[PyTree]):
+    """Stack a list of per-layer param trees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_specs(spec_tree: PyTree):
+    """Prepend None (layer dim) to every PartitionSpec in a tree."""
+    return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array | None, *, eps: float = 1e-6,
+             plus_one: bool = False) -> Array:
+    """RMSNorm; ``weight=None`` -> OLMo's non-parametric LN (no affine).
+    ``plus_one`` -> gemma-style (1 + w) parameterization."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        w = weight.astype(jnp.float32)
+        y = y * (1.0 + w if plus_one else w)
+    return y.astype(x.dtype)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def swiglu(gate: Array, up: Array) -> Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # [dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, dh/2]
+    angles = angles[..., None, :]                               # [..., S, 1, dh/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (pure-JAX flash-style; memory O(chunk * S))
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *,
+                      causal: bool = True,
+                      window: int | None = None,
+                      attn_softcap: float | None = None,
+                      q_chunk: int = 512,
+                      q_offset: int = 0) -> Array:
+    """q: [B, Sq, H, dh], k/v: [B, Sk, KH, dh] (GQA: H % KH == 0).
+
+    Scans over query chunks; scores for one chunk are [B, H, cq, Sk] — the
+    full [Sq, Sk] score matrix never materializes. ``window`` adds a local
+    (sliding-window) mask; ``q_offset`` is the absolute position of q[0]
+    (prefill continuation / decode).
+    """
+    b, sq, h, dh = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    groups = h // kh
+    scale = dh ** -0.5
+    cq = min(q_chunk, sq)
+    n_chunks = sq // cq if sq % cq == 0 else -(-sq // cq)
+    pad = n_chunks * cq - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(b, n_chunks, cq, h, dh).transpose(1, 0, 2, 3, 4)
+
+    kpos = jnp.arange(sk)
+
+    def chunk_fn(carry, args):
+        qc, ci = args                                   # [B, cq, H, dh]
+        qpos = q_offset + ci * cq + jnp.arange(cq)
+        # scores: [B, KH, G, cq, Sk]
+        qg = qc.reshape(b, cq, kh, groups, dh)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if attn_softcap is not None:
+            scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+        mask = jnp.ones((cq, sk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+        return carry, out.reshape(b, cq, h, dh).astype(q.dtype)
+
+    _, outs = jax.lax.scan(chunk_fn, None,
+                           (qr, jnp.arange(n_chunks)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * cq, h, dh)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (full logits never materialize)
+# ---------------------------------------------------------------------------
+
+
+VOCAB_ALIGN = 128
+
+
+def padded_vocab_size(v: int, multiple: int = VOCAB_ALIGN) -> int:
+    """Embedding tables are vocab-sharded over ``model``; odd vocabularies
+    (seamless: 256206) are padded up to a lane/TP-aligned multiple. Loss and
+    sampling mask the padded rows, so results are exact."""
+    return -(-v // multiple) * multiple
+
+
+def mask_vocab_pad(logits: Array, n_valid: int) -> Array:
+    """-inf the padded tail of a [..., V_pad] logit block."""
+    vp = logits.shape[-1]
+    if n_valid >= vp:
+        return logits
+    mask = jnp.arange(vp) < n_valid
+    return jnp.where(mask, logits, -1e30)
+
+
+def chunked_cross_entropy(hidden: Array, emb: Array, labels: Array, *,
+                          chunk: int = 2048,
+                          logit_softcap: float | None = None,
+                          n_valid_vocab: int | None = None) -> Array:
+    """Mean CE of tied-embedding logits, scanning over token chunks.
+
+    hidden: [T, D] (already flattened), emb: [V, D], labels: [T].
+    Each chunk materializes [chunk, V] logits only transiently (remat'd).
+    ``n_valid_vocab`` masks padded embedding rows out of the partition
+    function (exact loss on padded tables).
+    """
+    t, d = hidden.shape
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        hidden = jnp.pad(hidden, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, pad),), constant_values=-1)
+    hr = hidden.reshape(n_chunks, chunk, d)
+    lr = labels.reshape(n_chunks, chunk)
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = jnp.dot(hc, emb.T.astype(hc.dtype),
+                         preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        if n_valid_vocab is not None:
+            logits = mask_vocab_pad(logits, n_valid_vocab)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[:, None], axis=1)[:, 0]
+        valid = lc >= 0
+        return jnp.sum(jnp.where(valid, lse - gold, 0.0)), jnp.sum(valid)
+
+    def body(carry, args):
+        hc, lc = args
+        s, n = chunk_loss(hc, lc)
+        return (carry[0] + s, carry[1] + n), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hr, lr))
+    return total / jnp.maximum(count, 1.0)

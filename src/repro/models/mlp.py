@@ -1,0 +1,247 @@
+"""Dense SwiGLU FFN and capacity-based top-k MoE.
+
+MoE baseline is a sort-free GShard-style capacity dispatch expressed entirely
+in jit-level ops (scatter into an [E, cap, D] buffer, expert einsum, gather
+back). Expert d_ff is TP-sharded over ``model``; the expert dim is replicated
+and FSDP-sharded over ``data``. The EP all-to-all variant is the documented
+§Perf hillclimb for the MoE cells (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import Axes, ambient_mesh, shard, swiglu
+
+Array = jax.Array
+
+
+def init_mlp(b, d_model: int, d_ff: int, prefix: str = ""):
+    b.dense(prefix + "w_gate", (d_model, d_ff), P("data", "model"))
+    b.dense(prefix + "w_up", (d_model, d_ff), P("data", "model"))
+    b.dense(prefix + "w_down", (d_ff, d_model), P("model", "data"))
+
+
+def mlp_block(p, x, axes: Axes, prefix: str = "") -> Array:
+    h = swiglu(x @ p[prefix + "w_gate"], x @ p[prefix + "w_up"])
+    h = shard(h, axes, "dp", None, "tp")
+    return h @ p[prefix + "w_down"]
+
+
+def init_moe(b, cfg: ModelConfig, prefix: str = ""):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    if cfg.moe_ep_groups:
+        # replicated router (2 MB/layer) — the shard_map body consumes it
+        # whole; a D-sharded router would force a gather per layer.
+        b.dense(prefix + "router", (d, e), P(None, None), dtype=jnp.float32)
+    else:
+        b.dense(prefix + "router", (d, e), P("data", None),
+                dtype=jnp.float32)
+    if cfg.moe_ep_groups:
+        # expert parallelism: experts sharded over the data axis (weights
+        # stay local to their expert group; dispatch moves tokens instead)
+        b.dense(prefix + "e_gate", (e, d, f), P("data", None, "model"))
+        b.dense(prefix + "e_up", (e, d, f), P("data", None, "model"))
+        b.dense(prefix + "e_down", (e, f, d), P("data", "model", None))
+    else:
+        b.dense(prefix + "e_gate", (e, d, f), P(None, "data", "model"))
+        b.dense(prefix + "e_up", (e, d, f), P(None, "data", "model"))
+        b.dense(prefix + "e_down", (e, f, d), P(None, "model", "data"))
+
+
+def moe_block(p, x, cfg: ModelConfig, axes: Axes, prefix: str = "") -> Array:
+    """Top-k capacity-dropping MoE. x: [B, S, D] -> [B, S, D].
+
+    Dropped tokens (capacity overflow) contribute 0 (residual passthrough).
+    Dispatches to the expert-parallel grouped path when cfg.moe_ep_groups
+    is set (EXPERIMENTS.md §Perf hillclimb B).
+    """
+    if cfg.moe_ep_groups:
+        return moe_block_ep(p, x, cfg, axes, prefix=prefix)
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = bsz * s
+    xt = x.reshape(t, d)
+    cap = int(t * k / e * cfg.capacity_factor)
+    cap = max(128, -(-cap // 128) * 128)           # lane-aligned
+
+    logits = (xt @ p[prefix + "router"]).astype(jnp.float32)     # [T, E]
+    top_w, top_e = jax.lax.top_k(logits, k)                      # [T, k]
+    top_w = jax.nn.softmax(top_w, axis=-1).astype(x.dtype)
+
+    e_ids = top_e.reshape(-1)                                     # [T*k]
+    onehot = jax.nn.one_hot(e_ids, e, dtype=jnp.int32)            # [T*k, E]
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot                 # exclusive
+    pos = jnp.sum(pos_all * onehot, axis=1)                       # [T*k]
+
+    tok_ids = jnp.arange(t * k) // k
+    x_slots = jnp.take(xt, tok_ids, axis=0)                       # [T*k, D]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[e_ids, pos].set(x_slots, mode="drop")
+    buf = shard(buf, axes, None, "dp", None)
+
+    h = swiglu(jnp.einsum("ecd,edf->ecf", buf, p[prefix + "e_gate"]),
+               jnp.einsum("ecd,edf->ecf", buf, p[prefix + "e_up"]))
+    h = shard(h, axes, None, "dp", "tp")
+    y = jnp.einsum("ecf,efd->ecd", h, p[prefix + "e_down"])       # [E, cap, D]
+
+    kept = pos < cap
+    out_slots = y[e_ids, jnp.minimum(pos, cap - 1)]               # [T*k, D]
+    out_slots = jnp.where(kept[:, None], out_slots, 0.0)
+    out_slots = out_slots * top_w.reshape(-1)[:, None]
+    return jnp.sum(out_slots.reshape(t, k, d), axis=1).reshape(bsz, s, d)
+
+
+def moe_block_ep(p, x, cfg: ModelConfig, axes: Axes,
+                 prefix: str = "") -> Array:
+    """Expert-parallel top-k MoE — shard_map dispatch when the launcher has
+    set an ambient mesh (explicit all_to_all; EXPERIMENTS.md §Perf hillclimb
+    B v3), else the GSPMD-annotation fallback below."""
+    mesh = ambient_mesh()
+    if mesh is not None and "data" in mesh.axis_names:
+        return _moe_block_ep_shardmap(p, x, cfg, axes, mesh, prefix=prefix)
+    return _moe_block_ep_gspmd(p, x, cfg, axes, prefix=prefix)
+
+
+def _moe_block_ep_shardmap(p, x, cfg: ModelConfig, axes: Axes, mesh,
+                           prefix: str = "") -> Array:
+    """GShard-on-TPU dispatch, hand-written collectives (one all_to_all over
+    'data' each way, one all-gather + one psum_scatter over 'model').
+
+    Per device: tokens route into a LOCAL [E, cap_local, D] buffer
+    (cap_local = T_local*k/E*cf — G x smaller than the global-capacity
+    buffer); the 'data' all_to_all moves each expert's slots to its owner
+    shard; the 'model' all-gather assembles every model-shard's token set so
+    the F-sharded expert weights see full rows; psum_scatter returns each
+    shard its own tokens reduced over F.
+    """
+    e, k = cfg.n_experts, cfg.moe_top_k
+    b, s, d = x.shape
+    dpd = mesh.shape["data"]
+    tp = mesh.shape.get("model", 1) if axes.tp else 1
+    assert e % dpd == 0, (e, dpd)
+    s_spec = "model" if (tp > 1 and s % tp == 0) else None
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    from jax.sharding import PartitionSpec as P
+
+    def body(xl, router, wg, wu, wd):
+        bl, sl, _ = xl.shape
+        tl = bl * sl
+        xt = xl.reshape(tl, d)
+        logits = (xt @ router).astype(jnp.float32)             # [tl, E]
+        top_w, top_e = jax.lax.top_k(logits, k)
+        top_w = jax.nn.softmax(top_w, axis=-1).astype(xl.dtype)
+        capl = max(8, -(-int(tl * k / e * cfg.capacity_factor) // 8) * 8)
+
+        e_ids = top_e.reshape(-1)                              # [tl*k]
+        onehot = jax.nn.one_hot(e_ids, e, dtype=jnp.int32)
+        pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot,
+                      axis=1)
+        kept = pos < capl
+        slot = jnp.where(kept, e_ids * capl + pos, e * capl)   # OOB = drop
+        xslots = jnp.take(xt, jnp.arange(tl * k) // k, axis=0)
+        buf = jnp.zeros((e * capl, d), xl.dtype)
+        buf = buf.at[slot].set(xslots, mode="drop").reshape(e, capl, d)
+
+        if dpd > 1:   # tokens -> expert owners   [E/dpd, dpd*capl, D]
+            buf = jax.lax.all_to_all(buf, "data", split_axis=0,
+                                     concat_axis=1, tiled=True)
+        if tp > 1:    # assemble every model shard's tokens
+            buf = jax.lax.all_gather(buf, "model", axis=1, tiled=True)
+
+        h = swiglu(jnp.einsum("ecd,edf->ecf", buf, wg),
+                   jnp.einsum("ecd,edf->ecf", buf, wu))
+        y = jnp.einsum("ecf,efd->ecd", h, wd)                  # partial on F
+        if tp > 1:
+            y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                     tiled=True)
+        if dpd > 1:   # back to token owners  [E, capl, D]
+            y = jax.lax.all_to_all(y, "data", split_axis=1,
+                                   concat_axis=0, tiled=True)
+
+        yflat = y.reshape(e * capl, d)
+        out = jnp.take(yflat, jnp.where(kept, slot, 0), axis=0)
+        out = jnp.where(kept[:, None], out, 0.0)             * top_w.reshape(-1)[:, None]
+        return jnp.sum(out.reshape(tl, k, d), axis=1).reshape(bl, sl, d)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, s_spec, None), P(None, None),
+                  P("data", None, "model"), P("data", None, "model"),
+                  P("data", "model", None)),
+        out_specs=P(dp, s_spec, None), check_vma=False)
+    return fn(x, p[prefix + "router"], p[prefix + "e_gate"],
+              p[prefix + "e_up"], p[prefix + "e_down"])
+
+
+def _moe_block_ep_gspmd(p, x, cfg: ModelConfig, axes: Axes,
+                        prefix: str = "") -> Array:
+    """GShard-style expert-parallel top-k MoE (beyond-paper §Perf).
+
+    Differences vs the dense-dispatch ``moe_block``:
+      * tokens are processed in G = cfg.moe_ep_groups groups (the data
+        shards); CAPACITY IS PER GROUP: cap_g = T_g * k / E * cf — the
+        dispatch buffer shrinks by G x vs the global-capacity formulation;
+      * experts are sharded over the data axis (weights local to their
+        group), so moving the [G, E, cap_g, D] buffer from group-major to
+        expert-major sharding is ONE all-to-all each way (GSPMD inserts
+        exactly that for the G<->E resharding), instead of per-layer
+        all-reduces of global-capacity buffers.
+    """
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    g = cfg.moe_ep_groups
+    t = bsz * s
+    assert t % g == 0, (t, g)
+    tg = t // g
+    cap = int(tg * k / e * cfg.capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)
+
+    xt = x.reshape(g, tg, d)                       # groups = dp shards
+    xt = shard(xt, axes, "dp", None, None)
+
+    logits = (xt @ p[prefix + "router"]).astype(jnp.float32)   # [G, TG, E]
+    top_w, top_e = jax.lax.top_k(logits, k)                    # [G, TG, k]
+    top_w = jax.nn.softmax(top_w, axis=-1).astype(x.dtype)
+
+    e_ids = top_e.reshape(g, tg * k)                           # [G, TG*k]
+    onehot = jax.nn.one_hot(e_ids, e, dtype=jnp.int32)         # [G, TG*k, E]
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot              # per-group
+    pos = jnp.sum(pos_all * onehot, axis=2)                    # [G, TG*k]
+
+    tok_ids = jnp.arange(tg * k) // k
+    x_slots = jnp.take(xt, tok_ids, axis=1)                    # [G, TG*k, D]
+    # single-axis scatter on the flattened (g, e, cap) slot space: multi-dim
+    # fancy indexing lowers to scatters with BROADCAST index tensors
+    # ([G, TG*k, D] u32) whose resharding swamps the step — flat row ids
+    # lower to collapsed-dim scatters with no index blow-up.
+    kept = pos < cap
+    slot_ids = (jnp.arange(g)[:, None] * (e * cap) + e_ids * cap + pos)
+    slot_ids = jnp.where(kept, slot_ids, g * e * cap)          # drop -> OOB
+    buf = jnp.zeros((g * e * cap, d), x.dtype)
+    buf = buf.at[slot_ids.reshape(-1)].set(
+        x_slots.reshape(-1, d), mode="drop")
+    buf = buf.reshape(g, e, cap, d)
+    # group-major: G over dp (each group built its own dispatch locally)
+    buf = shard(buf, axes, "dp", None, None, None)
+    # expert-major: E over dp -> GSPMD inserts the all-to-all
+    buf = shard(buf, axes, None, "dp", None, None)
+
+    h = swiglu(jnp.einsum("gecd,edf->gecf", buf, p[prefix + "e_gate"]),
+               jnp.einsum("gecd,edf->gecf", buf, p[prefix + "e_up"]))
+    h = shard(h, axes, None, "dp", None, "tp")
+    y = jnp.einsum("gecf,efd->gecd", h, p[prefix + "e_down"])
+    y = shard(y, axes, None, "dp", None, None)
+    # back to group-major (second all-to-all)
+    y = shard(y, axes, "dp", None, None, None)
+
+    y_flat = y.reshape(g * e * cap, d)
+    gather_ids = jnp.where(kept, slot_ids, 0).reshape(-1)      # [G*TG*k]
+    out_slots = jnp.take(y_flat, gather_ids, axis=0).reshape(g, tg * k, d)
+    out_slots = jnp.where(kept[..., None], out_slots, 0.0)
+    out_slots = out_slots * top_w.reshape(g, tg * k)[..., None]
+    out = jnp.sum(out_slots.reshape(g, tg, k, d), axis=2)
+    return out.reshape(bsz, s, d)

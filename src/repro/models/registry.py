@@ -1,0 +1,226 @@
+"""Uniform model API over the four families + abstract input/cache specs.
+
+``get_model(cfg)`` returns a ``ModelAPI`` whose members close over the config:
+
+  init(key)                     -> (params, partition-spec tree)
+  loss(params, batch, axes)     -> scalar CE
+  prefill(params, batch, axes)  -> (cache, last-token logits)
+  decode(params, cache, token, pos, axes) -> (logits, cache)
+  input_specs(shape)            -> ShapeDtypeStruct batch stand-ins
+  batch_partition(shape, axes)  -> matching PartitionSpec tree
+  cache_specs(shape)            -> (ShapeDtypeStruct, PartitionSpec) trees
+
+The spec functions never allocate — they are what the multi-pod dry-run
+lowers against (assignment requirement e).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, rwkv, transformer, zamba
+from .common import Axes
+from .ssm import ssm_dims
+from .transformer import _cache_len, _layer_kinds
+
+Array = jax.Array
+
+
+def _kv_policy(cfg: ModelConfig, tp_size: int) -> str:
+    """'heads' when kv heads divide the TP axis, else 'seq' (flash-decode
+    sequence sharding) — DESIGN.md §6."""
+    return "heads" if tp_size and cfg.n_kv_heads % max(tp_size, 1) == 0 \
+        else "seq"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Array]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    input_specs: Callable[..., Any]
+    batch_partition: Callable[..., Any]
+    cache_specs: Callable[..., Any]
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _token_batch(shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return {"tokens": tok, "labels": tok}
+
+
+def _input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = _token_batch(shape)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _dp_for_batch(axes: Axes, dp_size: int, global_batch: int):
+    """Batch-dim partition: the data axes, unless the global batch does not
+    divide them (e.g. long_500k's batch of 1) — then the batch dim stays
+    unsharded and dp capacity is left to the sequence/feature dims."""
+    if dp_size > 1 and global_batch % dp_size != 0:
+        return None
+    return axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+
+def _batch_partition(cfg: ModelConfig, shape: ShapeConfig, axes: Axes,
+                     dp_size: int):
+    dp = _dp_for_batch(axes, dp_size, shape.global_batch)
+    if shape.kind == "train":
+        out = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if cfg.family == "encdec":
+            out["frames"] = P(dp, None, None)
+        return out
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": P(dp, None, None), "tokens": P(dp, None)}
+        return {"tokens": P(dp, None)}
+    return {"token": P(dp), "pos": P()}
+
+
+# ---------------------------------------------------------------------------
+# cache specs per family
+# ---------------------------------------------------------------------------
+
+
+def _kv_part(policy: str, dp, *, lead: int = 1):
+    """PartitionSpec for [*, B, S, KH, dh] with ``lead`` leading layer dims."""
+    lead_dims = (None,) * lead
+    if policy == "heads":
+        return P(*lead_dims, dp, None, "model", None)
+    return P(*lead_dims, dp, "model", None, None)
+
+
+def _cache_specs(cfg: ModelConfig, shape: ShapeConfig, axes: Axes,
+                 tp_size: int, dp_size: int):
+    b, s = shape.global_batch, shape.seq_len
+    dp = _dp_for_batch(axes, dp_size, shape.global_batch)
+    policy = _kv_policy(cfg, tp_size)
+    kh, dh = cfg.n_kv_heads, cfg.d_head
+
+    if cfg.family in ("dense", "moe"):
+        kinds = _layer_kinds(cfg)
+        g = cfg.n_layers // len(kinds)
+        shapes, parts = {}, {}
+        for j, kind in enumerate(kinds):
+            clen = _cache_len(cfg, kind, s)
+            sds = jax.ShapeDtypeStruct((g, b, clen, kh, dh), jnp.bfloat16)
+            shapes[f"k{j}"] = shapes[f"v{j}"] = sds
+            parts[f"k{j}"] = parts[f"v{j}"] = _kv_part(policy, dp)
+        return shapes, parts
+
+    if cfg.family == "encdec":
+        ld = cfg.n_dec_layers
+        kv = jax.ShapeDtypeStruct((ld, b, s, kh, dh), jnp.bfloat16)
+        part = _kv_part(policy, dp)
+        return ({"k": kv, "v": kv, "xk": kv, "xv": kv},
+                {"k": part, "v": part, "xk": part, "xv": part})
+
+    if cfg.family == "hybrid":
+        g, period = _zgroups(cfg)
+        d_inner, n_heads, conv_dim = ssm_dims(cfg)
+        clen = min(cfg.shared_attn_window, s)
+        kv = jax.ShapeDtypeStruct((g, b, clen, kh, dh), jnp.bfloat16)
+        ssm = tuple(jax.ShapeDtypeStruct(
+            (g, b, n_heads, cfg.ssm_state, 64), jnp.float32)
+            for _ in range(period))
+        conv = tuple(jax.ShapeDtypeStruct(
+            (g, b, cfg.conv_kernel - 1, conv_dim), jnp.bfloat16)
+            for _ in range(period))
+        shapes = {"k": kv, "v": kv, "ssm": ssm, "conv": conv}
+        parts = {"k": _kv_part(policy, dp), "v": _kv_part(policy, dp),
+                 "ssm": tuple(P(None, dp, None, None, None)
+                              for _ in range(period)),
+                 "conv": tuple(P(None, dp, None, "model")
+                               for _ in range(period))}
+        return shapes, parts
+
+    if cfg.family == "ssm":
+        l, d = cfg.n_layers, cfg.d_model
+        nh = d // 64
+        shapes = {
+            "tm_x": jax.ShapeDtypeStruct((l, b, d), jnp.bfloat16),
+            "wkv": jax.ShapeDtypeStruct((l, b, nh, 64, 64), jnp.float32),
+            "cm_x": jax.ShapeDtypeStruct((l, b, d), jnp.bfloat16),
+        }
+        parts = {"tm_x": P(None, dp, "model"),
+                 "wkv": P(None, dp, "model", None, None),
+                 "cm_x": P(None, dp, "model")}
+        return shapes, parts
+
+    raise ValueError(cfg.family)
+
+
+def _zgroups(cfg: ModelConfig):
+    return cfg.n_layers // cfg.attn_period, cfg.attn_period
+
+
+# ---------------------------------------------------------------------------
+# family bindings
+# ---------------------------------------------------------------------------
+
+
+def get_model(cfg: ModelConfig, *, tp_size: int = 16,
+              dp_size: int = 1) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        init = lambda key, dtype=jnp.bfloat16: transformer.init_lm(cfg, key, dtype)  # noqa: E731
+        loss = lambda p, batch, axes, **kw: transformer.lm_loss(p, batch, cfg, axes, **kw)  # noqa: E731
+        pre = lambda p, batch, axes, **kw: transformer.prefill(p, batch["tokens"], cfg, axes, **kw)  # noqa: E731
+        dec = lambda p, cache, token, pos, axes: transformer.decode_step(p, cache, token, pos, cfg, axes)  # noqa: E731
+    elif fam == "encdec":
+        init = lambda key, dtype=jnp.bfloat16: encdec.init_encdec(cfg, key, dtype)  # noqa: E731
+        loss = lambda p, batch, axes, **kw: encdec.seq2seq_loss(p, batch, cfg, axes, **kw)  # noqa: E731
+
+        def pre(p, batch, axes, *, max_len=None):
+            return encdec.prefill(p, batch["frames"], batch["tokens"], cfg,
+                                  axes, max_len=max_len or batch["frames"].shape[1])
+        dec = lambda p, cache, token, pos, axes: encdec.decode_step(p, cache, token, pos, cfg, axes)  # noqa: E731
+    elif fam == "hybrid":
+        init = lambda key, dtype=jnp.bfloat16: zamba.init_zamba(cfg, key, dtype)  # noqa: E731
+        loss = lambda p, batch, axes, **kw: zamba.lm_loss(p, batch, cfg, axes, **kw)  # noqa: E731
+        pre = lambda p, batch, axes, **kw: zamba.prefill(p, batch["tokens"], cfg, axes, **kw)  # noqa: E731
+        dec = lambda p, cache, token, pos, axes: zamba.decode_step(p, cache, token, pos, cfg, axes)  # noqa: E731
+    elif fam == "ssm":
+        init = lambda key, dtype=jnp.bfloat16: rwkv.init_rwkv_lm(cfg, key, dtype)  # noqa: E731
+        loss = lambda p, batch, axes, **kw: rwkv.lm_loss(p, batch, cfg, axes, **kw)  # noqa: E731
+        pre = lambda p, batch, axes, **kw: rwkv.prefill(p, batch["tokens"], cfg, axes)  # noqa: E731
+        dec = lambda p, cache, token, pos, axes: rwkv.decode_step(p, cache, token, pos, cfg, axes)  # noqa: E731
+    else:
+        raise ValueError(fam)
+
+    return ModelAPI(
+        cfg=cfg, init=init, loss=loss, prefill=pre, decode=dec,
+        input_specs=lambda shape: _input_specs(cfg, shape),
+        batch_partition=lambda shape, axes: _batch_partition(cfg, shape, axes,
+                                                             dp_size),
+        cache_specs=lambda shape, axes: _cache_specs(cfg, shape, axes,
+                                                     tp_size, dp_size),
+    )

@@ -1,0 +1,260 @@
+"""RWKV6 "Finch" (attn-free, data-dependent decay) — the rwkv6-7b arch.
+
+Recurrence per head (K = V = 64 per-head channels):
+
+    out_t = r_t . (diag(u) k_t v_t^T + S_{t-1})
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(-exp(wx_t))
+
+Training/prefill uses a GLA-style chunked form: one ``lax.scan`` over chunks
+carrying the [B, H, K, V] state; the intra-chunk quadratic path works in
+log-decay space with the per-chunk cumulative clamped at -30 (decay products
+below e^-30 are exactly 0 in fp32 regardless).
+
+Simplification vs the released checkpoints (DESIGN.md §8): the token-shift
+interpolation uses static per-channel mu for r/k/v/g; the decay w keeps the
+full data-dependent LoRA (that *is* the Finch contribution). Channel-mix is
+faithful (r-gated squared-ReLU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import (Axes, ParamBuilder, chunked_cross_entropy, rms_norm,
+                     shard, stack_params)
+
+Array = jax.Array
+
+_K_HEAD = 64
+_LORA = 64
+
+
+def rwkv_dims(cfg: ModelConfig):
+    n_heads = cfg.d_model // _K_HEAD
+    return n_heads
+
+
+def init_time_mix(b: ParamBuilder, cfg: ModelConfig):
+    d = cfg.d_model
+    b.dense("wr", (d, d), P("data", "model"))
+    b.dense("wk", (d, d), P("data", "model"))
+    b.dense("wv", (d, d), P("data", "model"))
+    b.dense("wg", (d, d), P("data", "model"))
+    b.dense("wo", (d, d), P("model", "data"))
+    for nm in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w"):
+        b.params[nm] = jnp.full((d,), 0.5, jnp.float32)
+        b.specs[nm] = P(None)
+    b.zeros("w0", (d,), P(None))
+    b.dense("w1", (d, _LORA), P("data", None), scale=0.1)
+    b.dense("w2", (_LORA, d), P(None, "data"), scale=0.1)
+    b.zeros("u", (d,), P(None))            # bonus, per channel
+    b.ones("ln_x", (d,), P(None))          # per-head group norm weight
+
+
+def init_channel_mix(b: ParamBuilder, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    b.params["cmu_k"] = jnp.full((d,), 0.5, jnp.float32)
+    b.specs["cmu_k"] = P(None)
+    b.params["cmu_r"] = jnp.full((d,), 0.5, jnp.float32)
+    b.specs["cmu_r"] = P(None)
+    b.dense("ck", (d, f), P("data", "model"))
+    b.dense("cv", (f, d), P("model", "data"))
+    b.dense("cr", (d, d), P("data", "model"))
+
+
+def _token_shift(x, x_last=None):
+    """[B, S, D] -> previous-token features (zeros / carried at t=0)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_last is not None:
+        prev = prev.at[:, 0].set(x_last)
+    return prev
+
+
+def _wkv_chunked(r, k, v, logw, u, n_heads: int, *, chunk: int = 64,
+                 initial_state=None):
+    """r/k/v/logw: [B, S, D]; u: [D]. Returns ([B, S, D], final_state)."""
+    bsz, s, d = r.shape
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0))) for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0)))
+
+    def heads(t):   # [B, nc*q, D] -> [nc, B, H, q, Kh]
+        return t.reshape(bsz, nc, q, n_heads, _K_HEAD).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lw = heads(r), heads(k), heads(v), heads(logw)
+    uh = u.reshape(n_heads, _K_HEAD)
+    tri_strict = jnp.tril(jnp.ones((q, q), bool), k=-1)
+
+    def scan_fn(state, inp):
+        rr, kk, vv, ww = (t.astype(jnp.float32) for t in inp)  # [B,H,q,K]
+        cum = jnp.clip(jnp.cumsum(ww, axis=2), -30.0, 0.0)     # [B,H,q,K]
+        # intra: out_t = sum_{i<t} (r_t . exp(cum_{t-1} - cum_i) k_i) v_i
+        cum_prev = jnp.pad(cum, ((0, 0), (0, 0), (1, 0), (0, 0)))[:, :, :-1]
+        a = rr * jnp.exp(cum_prev)                             # [B,H,q,K]
+        bmat = kk * jnp.exp(-cum)                              # [B,H,q,K]
+        scores = jnp.einsum("bhtk,bhik->bhti", a, bmat)
+        scores = jnp.where(tri_strict[None, None], scores, 0.0)
+        out = jnp.einsum("bhti,bhiv->bhtv", scores, vv)
+        # diagonal bonus: (r_t . u k_t) v_t
+        diag = jnp.sum(rr * kk * uh[None, :, None, :], axis=-1)
+        out += diag[..., None] * vv
+        # inter: out_t += (r_t . exp(cum_{t-1})) @ state
+        out += jnp.einsum("bhtk,bhkv->bhtv", a, state)
+        # state update: S <- diag(exp(cum_Q)) S + sum_i exp(cum_Q - cum_i) k_i v_i
+        wq = cum[:, :, -1:, :]
+        kdec = kk * jnp.exp(jnp.clip(wq - cum, -30.0, 0.0))
+        s_new = state * jnp.exp(wq[:, :, 0, :])[..., None] \
+            + jnp.einsum("bhik,bhiv->bhkv", kdec, vv)
+        return s_new, out
+
+    init = initial_state if initial_state is not None else \
+        jnp.zeros((bsz, n_heads, _K_HEAD, _K_HEAD), jnp.float32)
+    final_state, ys = jax.lax.scan(scan_fn, init, (rc, kc, vc, lw))
+    out = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, nc * q, d)
+    return out[:, :s], final_state
+
+
+def time_mix(p, x, cfg: ModelConfig, axes: Axes, *, state=None,
+             chunk: int = 64):
+    """RWKV6 attention analogue. state = (x_last [B,D], wkv [B,H,K,V]) or
+    None (training). Returns (out, new_state)."""
+    n_heads = rwkv_dims(cfg)
+    bsz, s, d = x.shape
+    x_last, wkv0 = state if state is not None else (None, None)
+    prev = _token_shift(x, x_last)
+
+    def lerp(mu):
+        return x + (prev - x) * mu[None, None, :].astype(x.dtype)
+
+    r = lerp(p["mu_r"]) @ p["wr"]
+    k = lerp(p["mu_k"]) @ p["wk"]
+    v = lerp(p["mu_v"]) @ p["wv"]
+    g = lerp(p["mu_g"]) @ p["wg"]
+    # data-dependent decay (the Finch mechanism).
+    xw = lerp(p["mu_w"]).astype(jnp.float32)
+    wx = p["w0"] + jnp.tanh(xw @ p["w1"].astype(jnp.float32)) \
+        @ p["w2"].astype(jnp.float32)
+    logw = -jnp.exp(wx)                                     # [B, S, D] < 0
+
+    r = shard(r, axes, "dp", None, "tp")
+    k = shard(k, axes, "dp", None, "tp")
+    v = shard(v, axes, "dp", None, "tp")
+    out, wkv = _wkv_chunked(r, k, v, logw, p["u"], n_heads, chunk=chunk,
+                            initial_state=wkv0)
+    # per-head group norm (RMS over each head's K channels) + ln_x gain
+    out = out.reshape(bsz, s, n_heads, _K_HEAD)
+    out = rms_norm(out, None)
+    out = out.reshape(bsz, s, d) * p["ln_x"][None, None, :].astype(out.dtype)
+    out = out.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    new_state = (x[:, -1], wkv)
+    return out @ p["wo"], new_state
+
+
+def channel_mix(p, x, cfg: ModelConfig, *, x_last=None):
+    prev = _token_shift(x, x_last)
+
+    def lerp(mu):
+        return x + (prev - x) * mu[None, None, :].astype(x.dtype)
+
+    k = jax.nn.relu((lerp(p["cmu_k"]) @ p["ck"]).astype(jnp.float32)) ** 2
+    v = k.astype(x.dtype) @ p["cv"]
+    r = jax.nn.sigmoid((lerp(p["cmu_r"]) @ p["cr"]).astype(jnp.float32))
+    return r.astype(x.dtype) * v, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# full RWKV6 LM
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_lm(cfg: ModelConfig, key: Array, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    blocks = []
+    for i in range(cfg.n_layers):
+        b = ParamBuilder(keys[i], dtype)
+        init_time_mix(b, cfg)
+        init_channel_mix(b, cfg)
+        b.ones("ln1", (cfg.d_model,), P(None))
+        b.ones("ln2", (cfg.d_model,), P(None))
+        blocks.append(b.build())
+    stacked = stack_params([p for p, _ in blocks])
+    layer_specs = jax.tree.map(lambda s: P(None, *s), blocks[0][1],
+                               is_leaf=lambda x: isinstance(x, P))
+    b = ParamBuilder(keys[-1], dtype)
+    b.dense("embed", (cfg.vocab_size, cfg.d_model), P("model", "data"),
+            scale=cfg.d_model ** -0.5)
+    b.ones("ln_in", (cfg.d_model,), P(None))
+    b.ones("final_norm", (cfg.d_model,), P(None))
+    params, specs = b.build()
+    params["layers"], specs["layers"] = stacked, layer_specs
+    return params, specs
+
+
+def forward(params, tokens, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True, collect_state: bool = False,
+            chunk: int = 64):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = rms_norm(x, params["ln_in"])
+    x = shard(x, axes, "dp", "tp", None)
+
+    def layer_fn(x, lp):
+        h, tm_state = time_mix(lp, rms_norm(x, lp["ln1"]), cfg, axes,
+                               chunk=chunk)
+        x = x + h
+        h, cm_last = channel_mix(lp, rms_norm(x, lp["ln2"]), cfg)
+        x = x + h
+        ys = (tm_state, cm_last) if collect_state else None
+        return x, ys
+
+    body = layer_fn
+    if remat:
+        body = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x, states
+
+
+def lm_loss(params, batch, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True) -> Array:
+    hidden, _ = forward(params, batch["tokens"], cfg, axes, remat=remat)
+    b, s, d = hidden.shape
+    return chunked_cross_entropy(hidden.reshape(b * s, d), params["embed"],
+                                 batch["labels"].reshape(b * s))
+
+
+def prefill(params, tokens, cfg: ModelConfig, axes: Axes, *, chunk: int = 64):
+    hidden, states = forward(params, tokens, cfg, axes, remat=False,
+                             collect_state=True, chunk=chunk)
+    (x_last, wkv), cm_last = states
+    cache = {"tm_x": x_last, "wkv": wkv, "cm_x": cm_last}
+    logits = (hidden[:, -1] @ params["embed"].T.astype(hidden.dtype)
+              ).astype(jnp.float32)
+    return cache, logits
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, axes: Axes):
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    x = rms_norm(x, params["ln_in"])
+
+    def layer_fn(x, xs):
+        lp, tm_x, wkv, cm_x = xs
+        h, (tm_x_new, wkv_new) = time_mix(
+            lp, rms_norm(x, lp["ln1"]), cfg, axes, state=(tm_x, wkv))
+        x = x + h
+        h, cm_x_new = channel_mix(lp, rms_norm(x, lp["ln2"]), cfg,
+                                  x_last=cm_x)
+        x = x + h
+        return x, {"tm_x": tm_x_new, "wkv": wkv_new, "cm_x": cm_x_new}
+
+    x, new_cache = jax.lax.scan(
+        layer_fn, x, (params["layers"], cache["tm_x"], cache["wkv"],
+                      cache["cm_x"]))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, 0] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

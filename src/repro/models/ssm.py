@@ -1,0 +1,183 @@
+"""Mamba2 (SSD) block — the state-space component of zamba2.
+
+Training/prefill uses the chunked state-space-dual form: a single
+``lax.scan`` walks the chunks carrying the [B, H, N, P] state; each step
+computes the intra-chunk quadratic path and the inter-chunk state
+contribution for its chunk only, so the peak transient is one chunk's
+[B, Q, Q, H] decay tensor (~10 MB at production shapes) instead of the
+full sequence. All decay algebra in log space; exponents are <= 0 by
+construction (A < 0, dt > 0).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * b_t x_t^T        (per head)
+    y_t = c_t^T h_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import Axes, ParamBuilder, rms_norm, shard
+
+Array = jax.Array
+
+_P_HEAD = 64   # mamba2 head dim
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // _P_HEAD
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(b: ParamBuilder, cfg: ModelConfig, prefix: str = ""):
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    proj_out = 2 * d_inner + 2 * cfg.ssm_state + n_heads   # z, x, B, C, dt
+    b.dense(prefix + "in_proj", (d, proj_out), P("data", "model"))
+    b.dense(prefix + "conv_w", (cfg.conv_kernel, conv_dim), P(None, "model"),
+            scale=0.5)
+    b.zeros(prefix + "conv_b", (conv_dim,), P("model"))
+    b.zeros(prefix + "dt_bias", (n_heads,), P(None))
+    # A = -exp(A_log) in [-16, -1].
+    b.params[prefix + "A_log"] = jnp.log(
+        jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32))
+    b.specs[prefix + "A_log"] = P(None)
+    b.ones(prefix + "D", (n_heads,), P(None))
+    b.ones(prefix + "ssm_norm", (d_inner,), P("model"))
+    b.dense(prefix + "out_proj", (d_inner, d), P("model", "data"))
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, xs, bb, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xs, bb, cc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, kernel: int):
+    """Depthwise causal conv over [B, S, C]."""
+    pad = jnp.pad(xbc, ((0, 0), (kernel - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :]
+              for i in range(kernel))
+    return jax.nn.silu((out + conv_b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba2_block(p, x, cfg: ModelConfig, axes: Axes, *, chunk: int = 128,
+                 prefix: str = "", initial_state=None, return_state=False):
+    """x: [B, S, D] -> [B, S, D]. Optionally thread/return the SSM state."""
+    bsz, s, _ = x.shape
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+
+    proj = x @ p[prefix + "in_proj"]
+    z, xs, bmat, cmat, dt = _split_proj(proj, cfg)
+    xbc_raw = jnp.concatenate([xs, bmat, cmat], axis=-1)   # pre-conv (state)
+    xbc = _causal_conv(xbc_raw, p[prefix + "conv_w"], p[prefix + "conv_b"],
+                       cfg.conv_kernel)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p[prefix + "dt_bias"])          # [B, S, H]
+    a = -jnp.exp(p[prefix + "A_log"])                      # [H]
+    ldec = dt * a[None, None, :]                           # [B, S, H] (<= 0)
+
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        ldec = jnp.pad(ldec, ((0, 0), (0, pad), (0, 0)))
+
+    def chunked(t, *feat):   # [B, nc*q, ...] -> [nc, B, q, ...]
+        return t.reshape(bsz, nc, q, *feat).transpose(1, 0, 2, *range(3, 3 + len(feat)))
+
+    xs_c = chunked(xs.reshape(bsz, nc * q, n_heads, _P_HEAD), n_heads, _P_HEAD)
+    b_c = chunked(bmat, n)
+    c_c = chunked(cmat, n)
+    dt_c = chunked(dt, n_heads)
+    l_c = chunked(ldec, n_heads)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def scan_fn(state, inp):
+        xc, bc, cc_, dtc, lc = inp                    # [B, q, ...]
+        cum = jnp.cumsum(lc, axis=1)                  # [B, q, H]
+        xf = xc.astype(jnp.float32)
+        bf = bc.astype(jnp.float32)
+        cf = cc_.astype(jnp.float32)
+        # intra: y[t] = sum_{i<=t} (c_t.b_i) exp(cum_t-cum_i) dt_i x_i
+        dots = jnp.einsum("bts,bis->bti", cf, bf)     # [B, q, q]
+        # mask the EXPONENT, not the exponential: for i > t the difference is
+        # positive and exp overflows to +inf; where(tri, inf, 0) then leaks
+        # 0 * inf = NaN into the cotangent of exp in the backward pass.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]           # [B,q,q,H]
+        ddec = jnp.exp(jnp.where(tri[None, :, :, None], diff, -jnp.inf))
+        g = ddec * dots[..., None] * dtc[:, None, :, :]
+        y = jnp.einsum("btih,bihp->bthp", g, xf)
+        # inter: y[t] += exp(cum_t) c_t . state
+        y += jnp.einsum("bth,bts,bhsp->bthp", jnp.exp(cum), cf, state)
+        # state update: S <- exp(cum_Q) S + sum_i exp(cum_Q-cum_i) dt_i b_i x_i
+        tail = jnp.exp(cum[:, -1:, :] - cum) * dtc     # [B, q, H]
+        s_new = state * jnp.exp(cum[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("bih,bis,bihp->bhsp", tail, bf, xf)
+        return s_new, y
+
+    init = initial_state if initial_state is not None else \
+        jnp.zeros((bsz, n_heads, n, _P_HEAD), jnp.float32)
+    final_state, ys = jax.lax.scan(scan_fn, init, (xs_c, b_c, c_c, dt_c, l_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, n_heads, _P_HEAD)
+    y = y[:, :s] + p[prefix + "D"][None, None, :, None] \
+        * xs[:, :s].reshape(bsz, s, n_heads, _P_HEAD).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p[prefix + "ssm_norm"])
+    y = shard(y, axes, "dp", None, "tp")
+    out = y @ p[prefix + "out_proj"]
+    if return_state:
+        conv_state = xbc_raw[:, s - (cfg.conv_kernel - 1):s]
+        return out, (final_state, conv_state)
+    return out
+
+
+def mamba2_decode(p, x, state, cfg: ModelConfig, axes: Axes,
+                  prefix: str = ""):
+    """One-token step. x: [B, 1, D]; state = (ssm [B,H,N,P], conv [B,k-1,C]).
+
+    conv_state holds the last kernel-1 PRE-conv xBC rows (same convention as
+    ``mamba2_block(return_state=True)``), so prefill -> decode handoff is
+    exact."""
+    bsz = x.shape[0]
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    n = cfg.ssm_state
+    ssm_state, conv_state = state
+
+    proj = x[:, 0] @ p[prefix + "in_proj"]
+    z, xs, bmat, cmat, dt = _split_proj(proj, cfg)
+    xbc_new = jnp.concatenate([xs, bmat, cmat], axis=-1)    # [B, C]
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)
+    conv_w = p[prefix + "conv_w"]
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     conv_w.astype(jnp.float32)) + p[prefix + "conv_b"]
+    xbc = jax.nn.silu(out).astype(x.dtype)
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(bsz, n_heads, _P_HEAD)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p[prefix + "dt_bias"])
+    a = -jnp.exp(p[prefix + "A_log"])
+    dec = jnp.exp(dt * a[None, :])                          # [B, H]
+    upd = jnp.einsum("bh,bs,bhp->bhsp", dt, bmat.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    ssm_state = ssm_state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bs,bhsp->bhp", cmat.astype(jnp.float32), ssm_state)
+    y = y + p[prefix + "D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p[prefix + "ssm_norm"])
+    out = (y @ p[prefix + "out_proj"])[:, None]
+    return out, (ssm_state, window[:, 1:])

@@ -1,0 +1,259 @@
+"""Decoder-only LM family: qwen3 / internlm2 / gemma2 / olmo / qwen3-moe /
+grok-1 / chameleon (VQ-token early fusion shares the text backbone).
+
+Layers are stacked [n_groups, period, ...] and consumed by ``lax.scan`` over
+groups (period = 2 for gemma2's local/global alternation, else 1) so the HLO
+stays O(1) in depth — essential for compiling 64-94 layer models for 512
+SPMD devices on this box. Remat policy: save only the residual stream at
+group boundaries (``jax.checkpoint`` on the scan body).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .attention import (attention_block, decode_attention, init_attention)
+from .common import (Axes, ParamBuilder, chunked_cross_entropy, rms_norm,
+                     shard, stack_params, stack_specs)
+from .mlp import init_mlp, init_moe, mlp_block, moe_block
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_kinds(cfg: ModelConfig) -> tuple[str, ...]:
+    """Attention kind per slot within one pattern group."""
+    if cfg.local_global_period:
+        # gemma2: [local, global] alternating.
+        return tuple("local" if j % 2 == 0 else "global"
+                     for j in range(cfg.local_global_period))
+    return ("local" if cfg.window else "global",)
+
+
+def _norm_name(cfg: ModelConfig):
+    return None if not cfg.parametric_norm else "w"
+
+
+def _init_block(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    b = ParamBuilder(key, dtype)
+    init_attention(b, cfg)
+    if cfg.n_experts:
+        init_moe(b, cfg)
+    else:
+        init_mlp(b, cfg.d_model, cfg.d_ff)
+    if cfg.parametric_norm:
+        norm_init = b.zeros if cfg.gemma_plus_one else b.ones
+        norm_init("ln1", (cfg.d_model,), P(None))
+        norm_init("ln2", (cfg.d_model,), P(None))
+        if cfg.sandwich_norm:
+            norm_init("post_ln1", (cfg.d_model,), P(None))
+            norm_init("post_ln2", (cfg.d_model,), P(None))
+    return b.build()
+
+
+def init_lm(cfg: ModelConfig, key: Array, dtype=jnp.bfloat16):
+    period = max(cfg.local_global_period, 1)
+    assert cfg.n_layers % period == 0
+    n_groups = cfg.n_layers // period
+
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    spec_block = None
+    for i in range(cfg.n_layers):
+        p, s = _init_block(keys[i], cfg, dtype)
+        blocks.append(p)
+        spec_block = s
+    # stack to [G, period, ...]
+    stacked = stack_params(blocks)
+    stacked = jax.tree.map(
+        lambda a: a.reshape(n_groups, period, *a.shape[1:]), stacked)
+    layer_specs = jax.tree.map(lambda s: P(None, None, *s), spec_block,
+                               is_leaf=lambda x: isinstance(x, P))
+
+    b = ParamBuilder(keys[-1], dtype)
+    b.dense("embed", (cfg.vocab_size, cfg.d_model), P("model", "data"),
+            scale=cfg.d_model ** -0.5)
+    if not cfg.tie_embeddings:
+        b.dense("lm_head", (cfg.d_model, cfg.vocab_size), P("data", "model"))
+    if cfg.parametric_norm:
+        (b.zeros if cfg.gemma_plus_one else b.ones)(
+            "final_norm", (cfg.d_model,), P(None))
+    params, specs = b.build()
+    params["layers"], specs["layers"] = stacked, layer_specs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _maybe_norm(p, name: str, x, cfg: ModelConfig):
+    w = p.get(name) if cfg.parametric_norm else None
+    return rms_norm(x, w, plus_one=cfg.gemma_plus_one)
+
+
+def _block_fwd(pj, x, cfg: ModelConfig, axes: Axes, kind: str, *,
+               positions=None, collect_cache=False, q_chunk=512):
+    window = cfg.window if kind == "local" else None
+    h = _maybe_norm(pj, "ln1", x, cfg)
+    a, kv = attention_block(pj, h, cfg, axes, window=window,
+                            positions=positions, q_chunk=q_chunk)
+    # constrain the row-parallel block OUTPUT before the residual add: the
+    # partial-sum over 'model' then lowers to one reduce-scatter into the
+    # sequence-sharded layout instead of all-reduce + slice (§Perf cell C).
+    a = shard(a, axes, "dp", "tp", None)
+    if cfg.sandwich_norm:
+        a = _maybe_norm(pj, "post_ln1", a, cfg)
+    x = shard(x + a, axes, "dp", "tp", None)      # sequence-parallel residual
+    h = _maybe_norm(pj, "ln2", x, cfg)
+    m = (moe_block(pj, h, cfg, axes) if cfg.n_experts
+         else mlp_block(pj, h, axes))
+    m = shard(m, axes, "dp", "tp", None)
+    if cfg.sandwich_norm:
+        m = _maybe_norm(pj, "post_ln2", m, cfg)
+    x = shard(x + m, axes, "dp", "tp", None)
+    return x, (kv if collect_cache else None)
+
+
+def _block_decode(pj, x, cache_j, pos, cfg: ModelConfig, axes: Axes,
+                  kind: str):
+    window = cfg.window if kind == "local" else None
+    h = _maybe_norm(pj, "ln1", x, cfg)
+    a, ck, cv = decode_attention(pj, h, cache_j["k"], cache_j["v"], pos, cfg,
+                                 axes, window=window)
+    if cfg.sandwich_norm:
+        a = _maybe_norm(pj, "post_ln1", a, cfg)
+    x = x + a
+    h = _maybe_norm(pj, "ln2", x, cfg)
+    m = (moe_block(pj, h, cfg, axes) if cfg.n_experts
+         else mlp_block(pj, h, axes))
+    if cfg.sandwich_norm:
+        m = _maybe_norm(pj, "post_ln2", m, cfg)
+    return x + m, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.gemma_plus_one:                          # gemma scales embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True, collect_cache: bool = False,
+            inputs_embeds: Array | None = None,
+            q_chunk: int | None = None):
+    q_chunk = q_chunk or cfg.q_chunk
+    """Full-sequence forward. Returns (hidden [B,S,D], caches | None)."""
+    kinds = _layer_kinds(cfg)
+    period = len(kinds)
+    x = inputs_embeds if inputs_embeds is not None \
+        else _embed(params, tokens, cfg)
+    x = shard(x, axes, "dp", "tp", None)
+
+    def group_fn(x, gp):
+        caches = []
+        for j, kind in enumerate(kinds):
+            pj = jax.tree.map(lambda a: a[j], gp)
+            x, kv = _block_fwd(pj, x, cfg, axes, kind,
+                               collect_cache=collect_cache, q_chunk=q_chunk)
+            caches.append(kv)
+        ys = tuple(caches) if collect_cache else None
+        return x, ys
+
+    body = group_fn
+    if remat:
+        body = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = _maybe_norm(params, "final_norm", x, cfg)
+    return x, caches
+
+
+def lm_loss(params, batch, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True, q_chunk: int | None = None) -> Array:
+    q_chunk = q_chunk or cfg.q_chunk
+    hidden, _ = forward(params, batch["tokens"], cfg, axes, remat=remat,
+                        q_chunk=q_chunk)
+    b, s, d = hidden.shape
+    emb = params.get("lm_head")
+    emb = params["embed"] if emb is None else emb.T
+    return chunked_cross_entropy(
+        hidden.reshape(b * s, d), emb, batch["labels"].reshape(b * s),
+        logit_softcap=cfg.final_softcap)
+
+
+def _logits_last(params, hidden_last, cfg: ModelConfig):
+    """hidden_last: [B, D] -> [B, V]."""
+    emb = params.get("lm_head")
+    w = params["embed"].T if emb is None else emb
+    logits = (hidden_last @ w.astype(hidden_last.dtype)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    return min(cfg.window, seq_len) if (kind == "local" and cfg.window) \
+        else seq_len
+
+
+def prefill(params, tokens, cfg: ModelConfig, axes: Axes, *,
+            max_len: int | None = None, q_chunk: int = 512):
+    """Run the prompt, return (cache pytree, last-token logits [B, V]).
+
+    Local (windowed) layers keep a ring buffer of the last ``window``
+    positions (jnp.roll aligns absolute-position slots — see DESIGN.md)."""
+    kinds = _layer_kinds(cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    hidden, caches = forward(params, tokens, cfg, axes, collect_cache=True)
+    # caches: tuple over period slots of (k, v) each [G, B, S, KH, dh]
+    cache = {}
+    for j, kind in enumerate(kinds):
+        k, v = caches[j]
+        clen = _cache_len(cfg, kind, max_len)
+        if clen < s:
+            k = jnp.roll(k[:, :, -clen:], s % clen, axis=2)
+            v = jnp.roll(v[:, :, -clen:], s % clen, axis=2)
+        elif clen > s:
+            padw = ((0, 0), (0, 0), (0, clen - s), (0, 0), (0, 0))
+            k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+        cache[f"k{j}"], cache[f"v{j}"] = k, v
+    return cache, _logits_last(params, hidden[:, -1], cfg)
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, axes: Axes):
+    """One token for the whole stack. token: [B] int32, pos: scalar int32.
+
+    Returns (logits [B, V] fp32, updated cache)."""
+    kinds = _layer_kinds(cfg)
+    x = _embed(params, token[:, None], cfg)         # [B, 1, D]
+
+    def group_fn(x, xs):
+        gp, gcache = xs
+        new_cache = {}
+        for j, kind in enumerate(kinds):
+            pj = jax.tree.map(lambda a: a[j], gp)
+            cj = {"k": gcache[f"k{j}"], "v": gcache[f"v{j}"]}
+            x, cj = _block_decode(pj, x, cj, pos, cfg, axes, kind)
+            new_cache[f"k{j}"], new_cache[f"v{j}"] = cj["k"], cj["v"]
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+    x = _maybe_norm(params, "final_norm", x, cfg)
+    return _logits_last(params, x[:, 0], cfg), new_cache

@@ -1,0 +1,164 @@
+"""Zamba2 hybrid: a Mamba2 backbone with ONE shared attention+MLP block
+applied every ``attn_period`` layers (weight sharing — the Zamba trick).
+
+Layout: 54 mamba layers in groups of 6; after each group the shared
+transformer block runs (same weights every time, its own KV cache per
+application: cache leaves carry a leading [n_groups] dim).
+
+long_500k adaptation (DESIGN.md §5): the shared attention runs on a
+``shared_attn_window`` ring buffer when the cache length exceeds it — the
+Mamba2 state carries long-range information.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .attention import attention_block, decode_attention, init_attention
+from .common import (Axes, ParamBuilder, chunked_cross_entropy, rms_norm,
+                     shard, stack_params)
+from .mlp import init_mlp, mlp_block
+from .ssm import init_mamba2, mamba2_block, mamba2_decode, ssm_dims
+
+Array = jax.Array
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0
+    return cfg.n_layers // cfg.attn_period
+
+
+def init_zamba(cfg: ModelConfig, key: Array, dtype=jnp.bfloat16):
+    period = cfg.attn_period
+    groups = _n_groups(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i in range(cfg.n_layers):
+        b = ParamBuilder(keys[i], dtype)
+        init_mamba2(b, cfg)
+        b.ones("ln", (cfg.d_model,), P(None))
+        blocks.append(b.build())
+    stacked = stack_params([p for p, _ in blocks])
+    stacked = jax.tree.map(
+        lambda a: a.reshape(groups, period, *a.shape[1:]), stacked)
+    layer_specs = jax.tree.map(lambda s: P(None, None, *s), blocks[0][1],
+                               is_leaf=lambda x: isinstance(x, P))
+
+    sb = ParamBuilder(keys[-2], dtype)          # the ONE shared block
+    init_attention(sb, cfg)
+    init_mlp(sb, cfg.d_model, cfg.d_ff)
+    sb.ones("ln1", (cfg.d_model,), P(None))
+    sb.ones("ln2", (cfg.d_model,), P(None))
+    shared, shared_specs = sb.build()
+
+    b = ParamBuilder(keys[-1], dtype)
+    b.dense("embed", (cfg.vocab_size, cfg.d_model), P("model", "data"),
+            scale=cfg.d_model ** -0.5)
+    b.ones("final_norm", (cfg.d_model,), P(None))
+    params, specs = b.build()
+    params["layers"], specs["layers"] = stacked, layer_specs
+    params["shared"], specs["shared"] = shared, shared_specs
+    return params, specs
+
+
+def _shared_block_fwd(sp, x, cfg: ModelConfig, axes: Axes,
+                      collect_cache: bool):
+    a, kv = attention_block(sp, rms_norm(x, sp["ln1"]), cfg, axes,
+                            window=None)
+    x = x + a
+    x = x + mlp_block(sp, rms_norm(x, sp["ln2"]), axes)
+    return x, (kv if collect_cache else None)
+
+
+def forward(params, tokens, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True, collect_state: bool = False):
+    period = cfg.attn_period
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, axes, "dp", "tp", None)
+    shared = params["shared"]
+
+    def group_fn(x, gp):
+        ssm_states = []
+        for j in range(period):
+            pj = jax.tree.map(lambda a: a[j], gp)
+            h = mamba2_block(pj, rms_norm(x, pj["ln"]), cfg, axes,
+                             return_state=collect_state)
+            if collect_state:
+                h, st = h
+                ssm_states.append(st)
+            x = x + h
+            x = shard(x, axes, "dp", "tp", None)
+        x, kv = _shared_block_fwd(shared, x, cfg, axes, collect_state)
+        ys = (tuple(ssm_states), kv) if collect_state else None
+        return x, ys
+
+    body = group_fn
+    if remat:
+        body = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x, states
+
+
+def lm_loss(params, batch, cfg: ModelConfig, axes: Axes, *,
+            remat: bool = True) -> Array:
+    hidden, _ = forward(params, batch["tokens"], cfg, axes, remat=remat)
+    b, s, d = hidden.shape
+    return chunked_cross_entropy(hidden.reshape(b * s, d), params["embed"],
+                                 batch["labels"].reshape(b * s))
+
+
+def prefill(params, tokens, cfg: ModelConfig, axes: Axes, *,
+            max_len: int | None = None):
+    b, s = tokens.shape
+    max_len = max_len or s
+    hidden, states = forward(params, tokens, cfg, axes, remat=False,
+                             collect_state=True)
+    ssm_states, (k, v) = states           # tuples over period slots
+    clen = min(cfg.shared_attn_window, max_len)
+    if clen < s:
+        k = jnp.roll(k[:, :, -clen:], s % clen, axis=2)
+        v = jnp.roll(v[:, :, -clen:], s % clen, axis=2)
+    elif clen > s:
+        padw = ((0, 0), (0, 0), (0, clen - s), (0, 0), (0, 0))
+        k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+    cache = {"k": k, "v": v,
+             "ssm": tuple(st[0] for st in ssm_states),
+             "conv": tuple(st[1] for st in ssm_states)}
+    logits = (hidden[:, -1] @ params["embed"].T.astype(hidden.dtype)
+              ).astype(jnp.float32)
+    return cache, logits
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig, axes: Axes):
+    period = cfg.attn_period
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    shared = params["shared"]
+    window = cache["k"].shape[2]
+
+    def group_fn(x, xs):
+        gp, gcache = xs
+        new_ssm, new_conv = [], []
+        for j in range(period):
+            pj = jax.tree.map(lambda a: a[j], gp)
+            st = (gcache["ssm"][j], gcache["conv"][j])
+            h, st = mamba2_decode(pj, rms_norm(x, pj["ln"]), st, cfg, axes)
+            new_ssm.append(st[0])
+            new_conv.append(st[1])
+            x = x + h
+        a, ck, cv = decode_attention(
+            shared, rms_norm(x, shared["ln1"]), gcache["k"], gcache["v"],
+            pos, cfg, axes, window=cfg.shared_attn_window
+            if window == cfg.shared_attn_window else None)
+        x = x + a
+        x = x + mlp_block(shared, rms_norm(x, shared["ln2"]), axes)
+        return x, {"k": ck, "v": cv, "ssm": tuple(new_ssm),
+                   "conv": tuple(new_conv)}
+
+    x, new_cache = jax.lax.scan(group_fn, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"])
+    logits = (x[:, 0] @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache

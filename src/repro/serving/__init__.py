@@ -1,0 +1,4 @@
+from .engine import ServeConfig, ServingEngine
+from .sampling import greedy, sample_top_p
+
+__all__ = ["ServeConfig", "ServingEngine", "greedy", "sample_top_p"]

@@ -1,0 +1,172 @@
+"""Batched serving engine: continuous-batching request scheduler over the
+model zoo's prefill/decode API.
+
+Design (vLLM-style continuous batching, adapted to the static-shape JAX
+world — no paged KV, slots instead):
+
+  * A fixed decode batch of ``max_batch`` slots; the KV/state cache pytree
+    is allocated ONCE at [B = max_batch, S = max_len] (batch is dim 1 of
+    every cache leaf across all families).
+  * Admission: each new request is prefilled alone (batch = 1, one chunked
+    full-sequence pass — the FLOPs-efficient path) and its cache is
+    scattered into its slot with one ``dynamic_update_slice`` per leaf.
+  * Generation: ONE batched decode step advances every active slot per tick,
+    each at its own cursor — the decode paths accept a per-slot position
+    vector [B] (repro.models.attention.decode_attention). Parked slots write
+    to a scratch position and are fully overwritten on the next admission.
+  * Finished slots (EOS or length cap) free immediately and are refilled
+    from the queue on the next tick (continuous batching).
+
+The engine is mesh-agnostic: on a mesh the cache carries the NamedShardings
+from ``api.cache_specs`` and the same program runs SPMD (the production
+decode shardings are exercised by the dry-run's decode_32k / long_500k
+cells). Decoder-only and hybrid/ssm families are supported; enc-dec serving
+needs per-request encoder memory and uses its own example driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelAPI
+
+from .sampling import greedy
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8           # decode slots
+    max_len: int = 256           # cache capacity per slot
+    eos_token: int = 2
+    max_new_tokens: int = 64
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # [S] int32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Continuous batching over ModelAPI prefill/decode (decoder-only)."""
+
+    def __init__(self, api: ModelAPI, params, cfg: ServeConfig, *,
+                 sampler: Callable[..., Array] = greedy,
+                 key: Optional[Array] = None):
+        if api.cfg.family == "encdec":
+            raise ValueError("enc-dec serving needs per-request encoder "
+                             "memory; use examples/serve_lm.py's encdec path")
+        self.api = api
+        self.params = params
+        self.cfg = cfg
+        self.sampler = sampler
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * cfg.max_batch
+        self.slot_pos = np.zeros(cfg.max_batch, np.int32)
+        self._cache = None
+        self._uid = 0
+        self.ticks = 0
+
+    # ------------------------------------------------------------------ api
+
+    def submit(self, prompt) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32)))
+        return self._uid
+
+    def run(self, axes) -> dict:
+        """Drive everything to completion; returns {uid: generated tokens}."""
+        results: dict = {}
+        while self.queue or any(s is not None for s in self.slots):
+            self._admit(axes)
+            self._decode_tick(axes)
+            for i, req in enumerate(self.slots):
+                if req is not None and req.done:
+                    results[req.uid] = list(req.out_tokens)
+                    self.slots[i] = None
+        return results
+
+    # ------------------------------------------------------------ internals
+
+    def _fresh_cache(self, axes):
+        shape = _ShapeStub(self.cfg.max_batch, self.cfg.max_len)
+        cache_shapes, _ = self.api.cache_specs(shape, axes)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            cache_shapes)
+
+    def _admit(self, axes):
+        """Prefill queued requests into free slots (batch-1 prefill, then a
+        per-leaf slice write into batch dim 1 of the shared cache)."""
+        if self._cache is None:
+            self._cache = self._fresh_cache(axes)
+        for i in range(self.cfg.max_batch):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt[None, :])       # [1, S]
+            cache1, logits1 = self.api.prefill(
+                self.params, {"tokens": prompt}, axes,
+                max_len=self.cfg.max_len)
+            slot = i
+            self._cache = jax.tree.map(
+                lambda big, small: jax.lax.dynamic_update_slice_in_dim(
+                    big, small.astype(big.dtype), slot, axis=1),
+                self._cache, cache1)
+            self.slots[i] = req
+            self.slot_pos[i] = len(req.prompt)
+            self._sample_and_record(i, np.asarray(logits1[0]))
+
+    def _decode_tick(self, axes):
+        """One batched decode step for ALL active slots, each at its own
+        cursor (per-slot position vector)."""
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and not r.done]
+        if not active:
+            return
+        b = self.cfg.max_batch
+        tokens = np.zeros(b, np.int32)
+        # parked slots write their K/V into the last cache row; admission
+        # rewrites the whole slot so the scratch write is harmless.
+        pos = np.full(b, self.cfg.max_len - 1, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].out_tokens[-1]
+            pos[i] = self.slot_pos[i]
+        logits, self._cache = self.api.decode(
+            self.params, self._cache, jnp.asarray(tokens),
+            jnp.asarray(pos), axes)
+        self.ticks += 1
+        logits_np = np.asarray(logits)
+        for i in active:
+            self.slot_pos[i] += 1
+            self._sample_and_record(i, logits_np[i])
+
+    def _sample_and_record(self, slot: int, logits: np.ndarray):
+        req = self.slots[slot]
+        self.key, sub = jax.random.split(self.key)
+        tok = int(self.sampler(jnp.asarray(logits)[None, :], sub)[0])
+        req.out_tokens.append(tok)
+        if (tok == self.cfg.eos_token
+                or len(req.out_tokens) >= self.cfg.max_new_tokens
+                or int(self.slot_pos[slot]) >= self.cfg.max_len - 1):
+            req.done = True
+
+
+class _ShapeStub:
+    """Duck-typed ShapeConfig for cache allocation."""
+    kind = "decode"
+
+    def __init__(self, global_batch: int, seq_len: int):
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.name = f"serve_{seq_len}"

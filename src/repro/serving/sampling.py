@@ -1,0 +1,25 @@
+"""Token samplers for the serving engine (fp32 logits in, int32 tokens out)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def greedy(logits: Array, key: Array | None = None) -> Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_top_p(logits: Array, key: Array, *, top_p: float = 0.9,
+                 temperature: float = 1.0) -> Array:
+    """Nucleus sampling. logits: [B, V] -> [B] int32."""
+    logits = logits / jnp.maximum(temperature, 1e-6)
+    sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+    sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    # smallest prefix with cumulative mass >= top_p stays
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    masked = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)

@@ -1,0 +1,90 @@
+"""Pure-JAX AdamW with sharded state (no optax in this environment).
+
+m/v mirror the parameter PartitionSpecs exactly, so optimizer state is
+FSDP+TP sharded for free. ``opt_state_dtype='bfloat16'`` halves optimizer
+HBM for the 314B config (DESIGN.md §6 memory budget).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params, tcfg: TrainConfig) -> AdamWState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)   # noqa: E731
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def opt_state_specs(param_specs) -> AdamWState:
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def lr_schedule(step: Array, tcfg: TrainConfig) -> Array:
+    """Linear warmup then cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(tcfg.warmup_steps, 1)
+    frac = (step - tcfg.warmup_steps) / jnp.maximum(
+        tcfg.total_steps - tcfg.warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * frac))
+    return tcfg.learning_rate * jnp.where(step < tcfg.warmup_steps,
+                                          jnp.minimum(warm, 1.0), cos)
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def adamw_update(params, grads, state: AdamWState, tcfg: TrainConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tcfg.grad_clip else jnp.float32(1.0)
+    step = state.step + 1
+    lr = lr_schedule(step, tcfg)
+    b1, b2, eps = tcfg.b1, tcfg.b2, tcfg.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + tcfg.weight_decay \
+            * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_m, new_v), metrics

@@ -1,0 +1,58 @@
+"""train_step factory: value_and_grad -> clip -> AdamW, with optional
+microbatch gradient accumulation (a ``lax.scan`` over microbatch slices so
+the HLO stays O(1) in the accumulation factor)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.common import Axes
+from repro.models.registry import ModelAPI
+
+from .optim import AdamWState, adamw_update
+
+
+def make_train_step(api: ModelAPI, tcfg: TrainConfig, axes: Axes):
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` ready for jit with in_shardings from the spec trees."""
+
+    def loss_fn(params, batch):
+        return api.loss(params, batch, axes, remat=tcfg.remat)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        n = tcfg.microbatches
+
+        def slice_mb(x):
+            b = x.shape[0]
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        mbatches = jax.tree.map(slice_mb, batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), mbatches)
+        inv = 1.0 / n
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grad_sum)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = compute_grads(params, batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  tcfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step

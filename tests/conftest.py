@@ -1,0 +1,26 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see exactly
+one device; multi-device tests spawn subprocesses (see tests/_subproc.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def four_blobs(n_per: int = 200, sigma: float = 0.05, seed: int = 0):
+    """Well-separated 4-cluster 2D dataset (shuffled) + labels."""
+    rng = np.random.default_rng(seed)
+    centers = np.array([[0.25, 0.25], [0.75, 0.75],
+                        [0.25, 0.75], [0.75, 0.25]])
+    x = np.concatenate([rng.normal(c, sigma, size=(n_per, 2))
+                        for c in centers]).astype(np.float32)
+    y = np.repeat(np.arange(4), n_per).astype(np.int32)
+    perm = rng.permutation(len(x))
+    return x[perm], y[perm]
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    return four_blobs()

@@ -1,0 +1,174 @@
+"""Inner-loop (Eq.4-7) and mini-batch outer-loop (Alg.1) correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
+                        fit_dataset, gamma_from_dmax, get_kernel,
+                        kkmeans_fit_full, medoid_indices, nmi)
+from repro.core.kkmeans import kkmeans_fit
+from repro.core.minibatch import predict
+
+from conftest import four_blobs
+
+
+def _kernel_and_diag(x, spec):
+    k = spec(jnp.asarray(x), jnp.asarray(x))
+    return k, spec.diag(jnp.asarray(x))
+
+
+def test_inner_loop_converges_to_label_fixpoint(blobs):
+    """GD from a RANDOM labelling reaches a label fixpoint (Bottou & Bengio
+    a.s.-convergence); accuracy is NOT asserted here — random init can merge
+    clusters, which is exactly why the paper seeds with k-means++."""
+    x, _ = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    k, diag = _kernel_and_diag(x, spec)
+    labels0 = jnp.asarray(np.random.default_rng(0).integers(0, 4, len(x)),
+                          jnp.int32)
+    res = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
+    # fixpoint: one more sweep must not change labels
+    res2 = kkmeans_fit_full(k, diag, res.labels, n_clusters=4)
+    assert bool(jnp.all(res2.labels == res.labels))
+    assert int(res2.n_iter) == 1
+
+
+def test_inner_loop_with_pp_seeding_recovers_blobs(blobs):
+    """With the paper's kernel k-means++ seeding the blobs are recovered."""
+    x, y = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    k, diag = _kernel_and_diag(x, spec)
+    from repro.core import assign_to_medoids, kmeans_pp_indices
+    seeds = kmeans_pp_indices(jnp.asarray(x), diag, jax.random.PRNGKey(0),
+                              n_clusters=4, spec=spec)
+    seed_x = jnp.take(jnp.asarray(x), seeds, axis=0)
+    labels0, _ = assign_to_medoids(jnp.asarray(x), diag, seed_x,
+                                   spec.diag(seed_x), spec=spec)
+    res = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
+    assert clustering_accuracy(y, np.asarray(res.labels)) > 0.98
+
+
+def test_inner_loop_cost_not_worse_than_init(blobs):
+    x, _ = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    k, diag = _kernel_and_diag(x, spec)
+    rng = np.random.default_rng(1)
+    labels0 = jnp.asarray(rng.integers(0, 4, len(x)), jnp.int32)
+
+    # cost of the INITIAL labelling (one assignment sweep from labels0)
+    res1 = kkmeans_fit_full(k, diag, labels0, n_clusters=4, max_iters=1)
+    res = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
+    assert float(res.cost) <= float(res1.cost) + 1e-3
+
+
+def test_landmarks_s1_equals_full(blobs):
+    """s = 1 (landmarks == batch) must equal exact kernel k-means."""
+    x, _ = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    k, diag = _kernel_and_diag(x, spec)
+    labels0 = jnp.zeros((len(x),), jnp.int32).at[: len(x) // 2].set(1)
+    full = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
+    lidx = jnp.arange(len(x), dtype=jnp.int32)
+    lm = kkmeans_fit(k, lidx, diag, labels0, n_clusters=4)
+    assert bool(jnp.all(full.labels == lm.labels))
+    np.testing.assert_allclose(float(full.cost), float(lm.cost), rtol=1e-6)
+
+
+def test_medoid_is_brute_force_argmin(blobs):
+    x, _ = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    k, diag = _kernel_and_diag(x, spec)
+    labels0 = jnp.asarray(np.random.default_rng(2).integers(0, 4, len(x)),
+                          jnp.int32)
+    res = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
+    m_idx = medoid_indices(diag, res.f, res.labels, res.counts)
+    # brute force Eq.7: argmin_l K_ll - 2 f_{l,j}
+    score = np.asarray(diag)[:, None] - 2.0 * np.asarray(res.f)
+    np.testing.assert_array_equal(np.asarray(m_idx), score.argmin(axis=0))
+
+
+@pytest.mark.parametrize("sampling", ["stride", "block"])
+def test_minibatch_fit_recovers_blobs(sampling):
+    x, y = four_blobs(n_per=300, seed=3)
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=4, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=8.0),
+                          sampling=sampling, seed=0)
+    res = fit_dataset(x, cfg)
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.95
+    assert nmi(y, np.asarray(labels)) > 0.85
+    # cardinalities account for every sample exactly once
+    assert int(np.asarray(res.state.cardinalities).sum()) == len(x)
+
+
+def test_minibatch_b1_equals_full_kkmeans(blobs):
+    """B = 1 runs the exact algorithm; predicted labels must match running
+    kkmeans_fit_full directly from the same initialization."""
+    x, y = blobs
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=1, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0)
+    res = fit_dataset(x, cfg)
+    assert len(res.history) == 1
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.98
+
+
+def test_sparsity_knob_still_reasonable(blobs):
+    """s = 0.25 on easy blobs should barely hurt (paper Fig.5: robust for
+    s >= 0.2)."""
+    x, y = blobs
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=2, s=0.25,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0)
+    res = fit_dataset(x, cfg)
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.9
+
+
+def test_empty_cluster_keeps_global_medoid():
+    """A batch that cannot populate cluster j must leave m_j untouched
+    (alpha = 0 rule)."""
+    rng = np.random.default_rng(4)
+    # batch 0: two clusters near origin; batch 1: only one of them present
+    b0 = np.concatenate([rng.normal(0.0, 0.05, (64, 2)),
+                         rng.normal(5.0, 0.05, (64, 2))]).astype(np.float32)
+    b1 = rng.normal(0.0, 0.05, (128, 2)).astype(np.float32)
+    from repro.core.minibatch import fit
+    cfg = MiniBatchConfig(n_clusters=2, n_batches=2, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=0.5), seed=0)
+    res = fit([b0, b1], cfg)
+    # one medoid stays at ~5.0 even though batch 1 never saw that cluster
+    med = np.asarray(res.state.medoids)
+    dist_to_far = np.abs(med - 5.0).sum(axis=1).min()
+    assert dist_to_far < 0.5
+
+
+def test_gamma_from_dmax_mimics_linear(blobs):
+    """sigma = 4 d_max -> gamma so small the RBF kernel is near-linear
+    (paper §4.4); on blobs it must still cluster perfectly."""
+    x, y = blobs
+    gamma = gamma_from_dmax(jnp.asarray(x))
+    assert 0 < gamma < 10.0
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=1, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=gamma), seed=1)
+    res = fit_dataset(x, cfg)
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.95
+
+
+@pytest.mark.parametrize("name", ["linear", "rbf", "polynomial", "cosine"])
+def test_kernel_registry_psd_diag(name):
+    spec = KernelSpec(name, gamma=0.3)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(30, 5)),
+                    jnp.float32)
+    k = np.asarray(get_kernel(spec)(x, x))
+    np.testing.assert_allclose(np.diagonal(k), np.asarray(spec.diag(x)),
+                               rtol=1e-5, atol=1e-6)
+    # Mercer kernels are symmetric PSD
+    np.testing.assert_allclose(k, k.T, atol=1e-5)
+    w = np.linalg.eigvalsh((k + k.T) / 2)
+    assert w.min() > -1e-3

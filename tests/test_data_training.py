@@ -1,0 +1,175 @@
+"""Data pipeline + optimizer/training-step unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TrainConfig
+from repro.data.loader import PrefetchLoader
+from repro.data.sampling import split_batches, stream_blocks
+from repro.data.synthetic import (make_blobs, make_md_trajectory,
+                                  make_mnist_like, make_noisy_replicas,
+                                  make_rcv1_like, toy2d)
+from repro.training.optim import adamw_init, adamw_update, lr_schedule
+
+# ---------------------------------------------------------------------------
+# synthetic generators
+# ---------------------------------------------------------------------------
+
+
+def test_toy2d_envelope():
+    x, y = toy2d(n_per_cluster=100)
+    assert x.shape == (400, 2) and y.shape == (400,)
+    assert set(np.unique(y)) == {0, 1, 2, 3}
+
+
+def test_mnist_like_envelope():
+    x, y = make_mnist_like(n=2000)
+    assert x.shape == (2000, 784)
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    assert len(np.unique(y)) == 10
+
+
+def test_rcv1_like_envelope():
+    x, y = make_rcv1_like(n=3000, d=256, n_classes=20)
+    assert x.shape == (3000, 256)
+    assert len(np.unique(y)) == 20
+    sizes = np.bincount(y)
+    assert sizes.max() > 3 * sizes.min()        # heavy-tailed classes
+
+
+def test_noisy_replicas_multiplies_dataset():
+    x, y = make_blobs(100, 20, 4, seed=1)
+    nx, ny = make_noisy_replicas(x, y, n_replicas=5)
+    assert nx.shape == (500, 20) and ny.shape == (500,)
+    # the noise touches ~20% of features, so replicas differ from originals
+    assert not np.allclose(nx[:5], np.repeat(x[:1], 5, axis=0))
+
+
+def test_md_trajectory_has_dwell_correlation():
+    x, y = make_md_trajectory(n_frames=5000, n_atoms=8, n_states=5,
+                              dwell=200.0, seed=0)
+    assert x.shape == (5000, 24)
+    # consecutive frames usually share a state (metastability)
+    same = float(np.mean(y[1:] == y[:-1]))
+    assert same > 0.9
+
+
+# ---------------------------------------------------------------------------
+# sampling / loader
+# ---------------------------------------------------------------------------
+
+
+def test_stride_vs_block_sampling_composition():
+    x = np.arange(20, dtype=np.float32)[:, None]
+    stride = split_batches(x, 4, "stride")
+    block = split_batches(x, 4, "block")
+    np.testing.assert_array_equal(stride[0][:, 0], [0, 4, 8, 12, 16])
+    np.testing.assert_array_equal(block[0][:, 0], [0, 1, 2, 3, 4])
+    for batches in (stride, block):
+        allv = np.sort(np.concatenate([b[:, 0] for b in batches]))
+        np.testing.assert_array_equal(allv, np.arange(20))
+
+
+def test_stream_blocks_rechunks_exactly():
+    chunks = [np.ones((3, 2)) * i for i in range(7)]      # 21 rows total
+    batches = list(stream_blocks(iter(chunks), batch_size=5))
+    assert [len(b) for b in batches] == [5, 5, 5, 5, 1]
+    total = np.concatenate(batches)
+    assert total.shape == (21, 2)
+
+
+def test_prefetch_loader_preserves_order_and_values():
+    batches = [np.full((4, 3), i, np.float32) for i in range(10)]
+    out = list(PrefetchLoader(batches, depth=3))
+    assert len(out) == 10
+    for i, b in enumerate(out):
+        np.testing.assert_array_equal(np.asarray(b), batches[i])
+
+
+def test_prefetch_loader_propagates_errors():
+    def gen():
+        yield np.ones((2, 2))
+        raise RuntimeError("disk died")
+
+    loader = PrefetchLoader(gen(), depth=2)
+    with pytest.raises(RuntimeError, match="disk died"):
+        list(loader)
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedule / grad accumulation
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    tcfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                       weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params, tcfg)
+    loss_fn = lambda p: jnp.sum(p["w"] ** 2)              # noqa: E731
+    for _ in range(200):
+        g = jax.grad(loss_fn)(params)
+        params, opt, _ = adamw_update(params, g, opt, tcfg)
+    assert float(loss_fn(params)) < 1e-3
+
+
+def test_lr_schedule_warmup_and_decay():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(jnp.asarray(s), tcfg)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1e-3, rel=1e-5)       # warmup peak
+    assert lrs[100] == pytest.approx(1e-4, rel=1e-2)      # 10% floor
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[10:], lrs[11:]))  # decay
+
+
+def test_grad_clip_bounds_update():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=0, grad_clip=1e-3,
+                       weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params, tcfg)
+    huge = {"w": jnp.full(4, 1e9)}
+    _, _, metrics = adamw_update(params, huge, opt, tcfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e9, rel=1e-5)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    """grad-accum over 4 microbatches == single big batch (same loss/update,
+    up to fp32 accumulation order)."""
+    from repro.configs import get_arch
+    from repro.models import Axes, get_model
+    from repro.training.step import make_train_step
+
+    cfg = get_arch("olmo-1b", smoke=True)
+    api = get_model(cfg, tp_size=1)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    axes = Axes(dp=("data",), tp="model")
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (8, 16)), jnp.int32)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        t1 = TrainConfig(remat=False, microbatches=1)
+        t4 = TrainConfig(remat=False, microbatches=4)
+        p1, _, m1 = jax.jit(make_train_step(api, t1, axes))(
+            params, adamw_init(params, t1), batch)
+        p4, _, m4 = jax.jit(make_train_step(api, t4, axes))(
+            params, adamw_init(params, t4), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-3)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-2, atol=2e-4)
+
+
+def test_opt_state_bf16_mode():
+    tcfg = TrainConfig(opt_state_dtype="bfloat16")
+    params = {"w": jnp.zeros((8,), jnp.bfloat16)}
+    opt = adamw_init(params, tcfg)
+    assert opt.m["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((8,), jnp.bfloat16)}
+    p2, opt2, _ = adamw_update(params, g, opt, tcfg)
+    assert opt2.v["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(p2["w"].astype(jnp.float32))))

@@ -1,0 +1,75 @@
+"""Integration: the multi-pod dry-run entry point itself (deliverable e).
+
+Runs repro.launch.dryrun in a subprocess (it forces 512 host devices at
+import, which must never leak into this test process) on one cell per
+program kind, on BOTH production meshes, and checks the emitted JSON
+schema that §Roofline consumes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(tmp_path, *args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--out", str(tmp_path),
+         *args],
+        env=env, capture_output=True, text=True, timeout=560, cwd=_ROOT)
+    return out
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_both_meshes(tmp_path):
+    out = _run_dryrun(tmp_path, "--arch", "olmo-1b", "--shape", "train_4k",
+                      "--both-meshes")
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    for mesh, chips in (("sp", 256), ("mp", 512)):
+        d = json.load(open(tmp_path / f"olmo-1b__train_4k__{mesh}.json"))
+        assert d["ok"], d.get("error")
+        assert d["n_params"] > 1e9
+        la = d["loop_aware"]
+        assert la["flops_per_device"] > 0
+        assert la["bytes_per_device"] > 0
+        assert la["collective_bytes"] > 0
+        assert d["memory_analysis"]["peak_bytes"] is not None
+    # multi-pod halves per-device train FLOPs (batch shards over pod too)
+    sp = json.load(open(tmp_path / "olmo-1b__train_4k__sp.json"))
+    mp = json.load(open(tmp_path / "olmo-1b__train_4k__mp.json"))
+    ratio = sp["loop_aware"]["flops_per_device"] \
+        / mp["loop_aware"]["flops_per_device"]
+    assert 1.6 < ratio < 2.4, ratio
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell(tmp_path):
+    out = _run_dryrun(tmp_path, "--arch", "rwkv6-7b", "--shape",
+                      "long_500k")
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    d = json.load(open(tmp_path / "rwkv6-7b__long_500k__sp.json"))
+    assert d["ok"]
+    assert d["tokens_per_step"] == 1          # long_500k: global_batch 1
+
+
+@pytest.mark.slow
+def test_dryrun_cluster_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun_cluster",
+         "--mode", "paper-1d", "--out", str(tmp_path),
+         "--rows", str(2**18), "--landmarks", "16384"],
+        env=env, capture_output=True, text=True, timeout=560, cwd=_ROOT)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    d = json.load(open(tmp_path / "kkmeans-paper-1d__minibatch_1m__sp.json"))
+    assert d["ok"]
+    # the paper's bound: per-sweep collective bytes ~ |U| + C floats,
+    # orders of magnitude below the K-block memory traffic
+    la = d["loop_aware"]
+    assert la["collective_bytes"] < 0.05 * la["bytes_per_device"]

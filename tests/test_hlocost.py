@@ -1,0 +1,143 @@
+"""Unit tests for the loop-aware HLO cost model (repro.launch.hlocost) —
+every §Roofline number depends on it, so its FLOPs/trip-count/collective
+accounting is locked here against analytically-known programs."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlocost
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_of_matmuls_flops_exact():
+    """12-layer scan of [128,256]x[256,256] matmuls: trip-multiplied FLOPs
+    must match 12 * 2MNK within 1% (cost_analysis reports ~1/12 of this)."""
+    def f(x, w):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+    cost = hlocost.analyze(_hlo_of(f, x, w))
+    expect = 12 * 2 * 128 * 256 * 256
+    assert abs(cost.flops - expect) / expect < 0.01
+
+
+def test_single_matmul_flops_and_bytes():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    cost = hlocost.analyze(_hlo_of(f, a, b))
+    expect_flops = 2 * 64 * 512 * 128
+    assert abs(cost.flops - expect_flops) / expect_flops < 0.01
+    # traffic >= operands + result (may include copies)
+    min_bytes = (64 * 512 + 512 * 128 + 64 * 128) * 4
+    assert cost.bytes >= min_bytes
+    assert cost.bytes < 4 * min_bytes
+
+
+def test_nested_scan_trip_multiplication():
+    """outer scan 4 x inner scan 8 -> 32x the body cost."""
+    def f(x, w):
+        def inner(h, wi):
+            return h @ wi, None
+
+        def outer(h, _):
+            h, _ = jax.lax.scan(inner, h, w)
+            return h, None
+
+        h, _ = jax.lax.scan(outer, x, None, length=4)
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    cost = hlocost.analyze(_hlo_of(f, x, w))
+    expect = 4 * 8 * 2 * 32 * 64 * 64
+    assert abs(cost.flops - expect) / expect < 0.05
+
+
+def test_comment_stripping_in_tuples():
+    """Long HLO tuples embed /*index=N*/ comments whose '=' used to break
+    the instruction regex (regression guard)."""
+    comps = hlocost._split_computations(
+        "ENTRY %main (a: f32[4]) -> f32[4] {\n"
+        "  %t = (f32[4]{0}, /*index=1*/f32[4]{0}) tuple(%a, %a)\n"
+        "  ROOT %r = f32[4]{0} get-tuple-element(%t), index=0\n"
+        "}\n")
+    assert "main" in comps
+    assert len(comps["main"]) == 2
+    m = hlocost._INSTR_RE.match(comps["main"][0])
+    assert m and m.group(3) == "tuple"
+
+
+def test_known_trip_count_preferred():
+    line = ('%w = (s32[]) while(%t), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"42"}}')
+    assert hlocost._trip_count(line, ["%k = s32[] constant(99999)"]) == 42
+
+
+def test_trip_count_root_compare_fallback():
+    cond = [
+        "%big = s32[] constant(151936)",          # decoy (vocab-sized)
+        "%lim = s32[] constant(16)",
+        "%i = s32[] get-tuple-element(%arg), index=0",
+        "ROOT %cmp = pred[] compare(%i, %lim), direction=LT",
+    ]
+    assert hlocost._trip_count("%w = (s32[]) while(%t), condition=%c, "
+                               "body=%b", cond) == 16
+
+
+@pytest.mark.slow
+def test_sharded_collective_accounting():
+    """8-way sharded matmul sum: per-device FLOPs = total/8 and exactly one
+    all-reduce is recorded with ring cost 2*(g-1)/g * bytes."""
+    script = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import hlocost
+
+        def f(a, b):
+            return jnp.sum(a @ b)
+
+        mesh = jax.make_mesh((8,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        a = jax.ShapeDtypeStruct((256, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+        hlo = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P("d", None)),
+            NamedSharding(mesh, P(None, None)))).lower(a, b) \\
+            .compile().as_text()
+        c = hlocost.analyze(hlo)
+        print(json.dumps({"flops": c.flops,
+                          "ar": c.coll_counts["all-reduce"],
+                          "coll": c.coll_bytes}))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    import json
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    expect = 2 * 256 * 128 * 64 / 8
+    assert abs(res["flops"] - expect) / expect < 0.05
+    assert res["ar"] >= 1
+    # scalar all-reduce: 2*(8-1)/8 * 4 bytes = 7
+    assert 1 <= res["coll"] <= 64

@@ -1,0 +1,165 @@
+"""Per-kernel correctness: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle in repro.kernels.ref, swept over shapes / dtypes / kernel kinds.
+
+The sweep deliberately includes shapes that do NOT divide the default block
+sizes (padding paths) and bf16 inputs (fp32 accumulation contract).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KINDS = ["rbf", "linear", "polynomial", "cosine"]
+SHAPES = [
+    (8, 8, 4),          # tiny, everything padded
+    (100, 77, 30),      # ragged
+    (256, 256, 128),    # exactly one block
+    (300, 520, 129),    # multi-block ragged in all dims
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(m, n, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32)).astype(dtype)
+    y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    return x, y
+
+
+def _tol(dtype):
+    # bf16 features -> fp32 accumulation: error is bounded by input rounding.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_kernel_matrix_matches_oracle(kind, shape, dtype):
+    m, n, d = shape
+    x, y = _data(m, n, d, dtype)
+    got = ops.kernel_matrix(x, y, kind=kind, gamma=0.05, interpret=True)
+    want = ref.kernel_matrix_ref(x.astype(jnp.float32),
+                                 y.astype(jnp.float32), kind=kind, gamma=0.05)
+    assert got.shape == (m, n) and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("kind", ["rbf", "linear"])
+@pytest.mark.parametrize("shape", [(64, 32, 16), (300, 130, 40)],
+                         ids=["small", "ragged"])
+@pytest.mark.parametrize("n_clusters", [3, 7, 130])
+def test_assign_fused_matches_oracle(kind, shape, n_clusters):
+    m, lm, d = shape
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    landmarks = jnp.asarray(rng.normal(size=(lm, d)).astype(np.float32))
+    labels_l = jnp.asarray(rng.integers(0, n_clusters, lm).astype(np.int32))
+    counts = jnp.bincount(labels_l, length=n_clusters).astype(jnp.float32)
+    g = jnp.asarray(rng.random(n_clusters).astype(np.float32))
+
+    got_lab, got_min = ops.assign_fused(
+        x, landmarks, labels_l, counts, g, n_clusters=n_clusters, kind=kind,
+        gamma=0.05, interpret=True)
+
+    h = jax.nn.one_hot(labels_l, n_clusters) / jnp.maximum(counts, 1.0)[None]
+    g_masked = jnp.where(counts > 0, g, 1e30)
+    want_lab, want_min = ref.assign_fused_ref(x, landmarks, h, g_masked,
+                                              kind=kind, gamma=0.05)
+    assert bool(jnp.all(got_lab == want_lab))
+    np.testing.assert_allclose(np.asarray(got_min), np.asarray(want_min),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_assign_fused_empty_cluster_never_selected():
+    """Clusters with zero landmarks must be unjoinable (+BIG distance)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    landmarks = x[:20]
+    labels_l = jnp.asarray((np.arange(20) % 3).astype(np.int32))  # 0..2 only
+    n_clusters = 5                                                # 3, 4 empty
+    counts = jnp.bincount(labels_l, length=n_clusters).astype(jnp.float32)
+    g = jnp.zeros((n_clusters,), jnp.float32)
+    lab, _ = ops.assign_fused(x, landmarks, labels_l, counts, g,
+                              n_clusters=n_clusters, interpret=True)
+    assert int(jnp.max(lab)) <= 2
+
+
+def test_kernel_matrix_rbf_diag_is_one():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(40, 6)),
+                    jnp.float32)
+    k = ops.kernel_matrix(x, x, kind="rbf", gamma=0.7, interpret=True)
+    # ||x||^2 + ||x||^2 - 2 x.x cancels catastrophically in fp32: diag is
+    # 1 +- a few ulps of the squared norms, not exactly 1.
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(k)), 1.0, atol=1e-5)
+    # symmetry (not exploited by the layout — but true of the values)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k).T, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (EXPERIMENTS.md §Perf C3 kernel)
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, H, KH, Sq, Sk, dh, causal, softcap)
+    (2, 4, 4, 128, 128, 64, True, None),      # MHA, aligned
+    (1, 8, 2, 100, 100, 64, True, None),      # GQA + ragged (padding path)
+    (2, 4, 2, 256, 256, 128, True, 50.0),     # gemma-style softcap
+    (1, 2, 2, 64, 256, 64, False, None),      # cross attention (non-causal)
+    (1, 4, 1, 200, 200, 64, True, None),      # MQA
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=[f"B{c[0]}H{c[1]}KH{c[2]}S{c[3]}x{c[4]}"
+                              for c in FLASH_CASES])
+def test_flash_attention_matches_oracle(case):
+    b, h, kh, sq, sk, dh, causal, cap = case
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(b, h, sq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, kh, sk, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, kh, sk, dh)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, causal=causal, softcap=cap,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_attn_impl_flash_equals_chunked_end_to_end():
+    """attn_impl='flash' (Pallas path, interpret on CPU) produces the same
+    loss as the chunked pure-JAX attention on a full smoke model."""
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.models import Axes, get_model
+    axes = Axes(dp=("data",), tp="model")
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    base = get_arch("olmo-1b", smoke=True)
+    apic = get_model(base, tp_size=1)
+    apif = get_model(dataclasses.replace(base, attn_impl="flash"), tp_size=1)
+    params, _ = apic.init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    tok = jnp.asarray(rng.integers(1, base.vocab_size, (2, 64)), jnp.int32)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
+    with mesh:
+        lc = apic.loss(params, batch, axes, remat=False)
+        lf = apif.loss(params, batch, axes, remat=False)
+    assert float(lc) == float(lf)

@@ -1,0 +1,171 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MachineSpec, b_min, b_min_paper, clustering_accuracy,
+                        footprint_bytes, nmi, num_landmarks)
+from repro.data.sampling import batch_indices
+from repro.ft.straggler import WorkerStatus, replan_rows
+
+# ---------------------------------------------------------------------------
+# metrics invariants
+# ---------------------------------------------------------------------------
+
+labels_pair = st.integers(2, 6).flatmap(
+    lambda c: st.tuples(
+        st.lists(st.integers(0, c - 1), min_size=8, max_size=200),
+        st.just(c)))
+
+
+@given(labels_pair, st.randoms())
+@settings(max_examples=40, deadline=None)
+def test_accuracy_invariant_under_cluster_relabeling(pair, rnd):
+    """The majority-vote mapping makes accuracy invariant to any PERMUTATION
+    of the predicted cluster ids."""
+    labels, c = pair
+    y = np.asarray(labels)
+    u = np.asarray(labels)[::-1].copy()   # some prediction
+    perm = list(range(c))
+    rnd.shuffle(perm)
+    u_perm = np.asarray(perm)[u]
+    assert clustering_accuracy(y, u) == clustering_accuracy(y, u_perm)
+    assert abs(nmi(y, u) - nmi(y, u_perm)) < 1e-12
+
+
+@given(labels_pair)
+@settings(max_examples=40, deadline=None)
+def test_nmi_bounds_and_perfect(pair):
+    labels, _ = pair
+    y = np.asarray(labels)
+    if len(np.unique(y)) > 1:
+        assert abs(nmi(y, y) - 1.0) < 1e-9
+    assert -1e-9 <= nmi(y, np.zeros_like(y)) <= 1.0 + 1e-9
+    assert clustering_accuracy(y, y) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# sampling invariants (paper §3.1: B disjoint mini-batches covering X)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 200), st.integers(1, 17),
+       st.sampled_from(["stride", "block"]))
+@settings(max_examples=60, deadline=None)
+def test_batches_partition_dataset(n, b, strategy):
+    if b > n:
+        b = n
+    idx = batch_indices(n, b, strategy)
+    assert len(idx) == b
+    allidx = np.concatenate(idx)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n          # disjoint + complete
+
+
+@given(st.integers(1, 500), st.floats(0.01, 1.0), st.integers(1, 8),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_num_landmarks_bounds(batch, s, c, mult):
+    c = min(c, batch)
+    if mult > batch:
+        mult = 1
+    try:
+        l = num_landmarks(batch, s, n_clusters=c, multiple_of=mult)
+    except ValueError:
+        return  # batch too small for C landmarks in multiples — documented
+    assert c <= l <= batch or l == (batch // mult) * mult
+    assert l >= 1
+    if mult > 1:
+        assert l % mult == 0
+
+
+# ---------------------------------------------------------------------------
+# memory planner (Eq.19) invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(10_000, 10_000_000), st.integers(2, 100),
+       st.integers(1, 1024))
+@settings(max_examples=60, deadline=None)
+def test_bmin_is_minimal_and_sufficient(n, c, p):
+    m = MachineSpec(memory_bytes=2e9, n_processors=p)
+    b = b_min(n, c, m)
+    assert footprint_bytes(n, b, c, p) <= m.memory_bytes * (1 + 1e-9)
+    if b > 1:
+        assert footprint_bytes(n, b - 1, c, p) > m.memory_bytes
+
+
+@given(st.integers(100_000, 10_000_000), st.integers(2, 50))
+@settings(max_examples=30, deadline=None)
+def test_bmin_matches_paper_formula_in_paper_regime(n, c):
+    """The paper's printed Eq.19 drops a 4/P factor on R/Q under the root
+    (repro.core.memory docstring), so for C << R/Q the exact solution is
+    sqrt(P/4) x the printed one. Verify THAT relationship — it documents
+    the transcription bug faithfully. At P = 4 the two coincide."""
+    m = MachineSpec(memory_bytes=8e9, n_processors=16)
+    exact, printed = b_min(n, c, m), b_min_paper(n, c, m)
+    if printed >= 4:                       # below that, ceil() dominates
+        ratio = exact / printed
+        assert 0.8 <= ratio / 2.0 <= 1.3   # sqrt(16/4) = 2
+
+    m4 = MachineSpec(memory_bytes=8e9, n_processors=4)
+    assert abs(b_min(n, c, m4) - b_min_paper(n, c, m4)) <= 1
+
+
+@given(st.integers(10_000, 1_000_000), st.integers(2, 20),
+       st.floats(0.05, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_footprint_monotonic(n, c, s):
+    """More batches -> less memory; sparser landmarks -> less memory;
+    the fused path never needs more than the materializing path."""
+    p = 16
+    f1 = footprint_bytes(n, 1, c, p, s=s)
+    f4 = footprint_bytes(n, 4, c, p, s=s)
+    assert f4 < f1
+    assert footprint_bytes(n, 4, c, p, s=s / 2) <= f4
+    assert footprint_bytes(n, 4, c, p, s=s, fused=True) <= f4
+
+
+# ---------------------------------------------------------------------------
+# straggler replanner invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 64), st.integers(0, 63),
+       st.lists(st.floats(0.1, 100.0), min_size=1, max_size=16),
+       st.integers(0, 3))
+@settings(max_examples=60, deadline=None)
+def test_replan_rows_exact_cover(nq, extra, speeds, n_dead):
+    n_rows = nq * 8 + extra
+    statuses = [WorkerStatus(i, rows_per_second=s)
+                for i, s in enumerate(speeds)]
+    for i in range(min(n_dead, len(statuses) - 1)):
+        statuses[i] = WorkerStatus(i, healthy=False)
+    plan = replan_rows(n_rows, statuses)
+    spans = sorted(plan.values())
+    # exact, non-overlapping cover of [0, n_rows)
+    cursor = 0
+    for start, size in spans:
+        assert start == cursor and size >= 0
+        cursor += size
+    assert cursor == n_rows
+    for i in range(min(n_dead, len(statuses) - 1)):
+        assert i not in plan                      # dead workers get nothing
+
+
+# ---------------------------------------------------------------------------
+# merge rule (Eq.11-13) invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.0, 1e6), min_size=2, max_size=8),
+       st.lists(st.floats(0.0, 1e6), min_size=2, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_merge_alpha_is_convex_and_empty_safe(batch_counts, global_counts):
+    k = min(len(batch_counts), len(global_counts))
+    bc = jnp.asarray(batch_counts[:k], jnp.float32)
+    gc = jnp.asarray(global_counts[:k], jnp.float32)
+    alpha = bc / jnp.maximum(bc + gc, 1.0)
+    a = np.asarray(alpha)
+    assert np.all(a >= 0.0) and np.all(a <= 1.0)       # convex combination
+    assert np.all(a[np.asarray(bc) == 0.0] == 0.0)     # empty batch cluster

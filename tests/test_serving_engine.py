@@ -1,0 +1,83 @@
+"""Continuous-batching engine: scheduling + per-slot-cursor correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import Axes, get_model
+from repro.serving import ServeConfig, ServingEngine
+
+AXES = Axes(dp=("data",), tp="model")
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _engine(arch, **kw):
+    cfg = get_arch(arch, smoke=True)
+    api = get_model(cfg, tp_size=1)
+    params, _ = api.init(jax.random.PRNGKey(0), jnp.float32)
+    return cfg, api, params
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "rwkv6-7b", "zamba2-2.7b"])
+def test_engine_completes_more_requests_than_slots(arch):
+    cfg, api, params = _engine(arch)
+    eng = ServingEngine(api, params, ServeConfig(
+        max_batch=4, max_len=64, max_new_tokens=8, eos_token=-1))
+    rng = np.random.default_rng(0)
+    uids = [eng.submit(rng.integers(1, cfg.vocab_size, size=l))
+            for l in (5, 9, 3, 7, 6, 4)]
+    with _mesh():
+        out = eng.run(AXES)
+    assert sorted(out) == sorted(uids)
+    assert all(len(v) == 8 for v in out.values())
+    # 6 requests x 7 decode ticks each, 4 slots -> batching must beat
+    # sequential (42 ticks); allow scheduler slack.
+    assert eng.ticks < 30
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "rwkv6-7b"])
+def test_continuous_batching_matches_sequential(arch):
+    """Requests decoded together (different cursors, shared cache) must
+    produce exactly the tokens they produce alone — no cross-slot leakage."""
+    cfg, api, params = _engine(arch)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=l) for l in (5, 9, 3)]
+    with _mesh():
+        eng = ServingEngine(api, params, ServeConfig(
+            max_batch=2, max_len=64, max_new_tokens=6, eos_token=-1))
+        uids = [eng.submit(p) for p in prompts]
+        batch_out = eng.run(AXES)
+        for u, p in zip(uids, prompts):
+            solo = ServingEngine(api, params, ServeConfig(
+                max_batch=1, max_len=64, max_new_tokens=6, eos_token=-1))
+            su = solo.submit(p)
+            assert solo.run(AXES)[su] == batch_out[u], \
+                f"slot interference for request {u}"
+
+
+def test_eos_frees_slot_early():
+    cfg, api, params = _engine("olmo-1b")
+    with _mesh():
+        # find the greedy first token for the probe prompt, then use it as
+        # the EOS so the request terminates after one token.
+        probe = ServingEngine(api, params, ServeConfig(
+            max_batch=1, max_len=32, max_new_tokens=4, eos_token=-1))
+        up = probe.submit([5, 6, 7])
+        first = probe.run(AXES)[up][0]
+        eng = ServingEngine(api, params, ServeConfig(
+            max_batch=1, max_len=32, max_new_tokens=4, eos_token=first))
+        u = eng.submit([5, 6, 7])
+        out = eng.run(AXES)
+    assert out[u] == [first]
+
+
+def test_encdec_rejected():
+    cfg = get_arch("seamless-m4t-medium", smoke=True)
+    api = get_model(cfg, tp_size=1)
+    with pytest.raises(ValueError, match="enc-dec"):
+        ServingEngine(api, None, ServeConfig())
