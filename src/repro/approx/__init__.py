@@ -1,0 +1,42 @@
+# Explicit low-rank feature maps (RFF / Nystrom) that turn kernel k-means
+# into linear k-means in an m-dimensional embedded space — the second
+# accuracy/velocity knob next to the paper's (B, s). See DESIGN notes in
+# each module; dispatch happens in repro.core.minibatch via cfg.method.
+from __future__ import annotations
+
+import jax
+
+from repro.core.kernels import KernelSpec
+
+from .embed_kmeans import (EmbedInnerResult, EmbedState, assign_embedded,
+                           fit_embedded, lloyd_fit, predict_embedded)
+from .nystrom import NystromMap, make_nystrom, nystrom_features
+from .rff import RFFMap, make_rff, rff_features
+
+METHODS = ("rff", "nystrom")
+
+
+def default_embed_dim(n_clusters: int) -> int:
+    """m = 4*C — the smallest m at which both maps reliably recover the
+    exact clustering on separable data (tests/test_approx.py pins this)."""
+    return 4 * n_clusters
+
+
+def make_feature_map(method: str, key: jax.Array, x_sample: jax.Array,
+                     m: int, spec: KernelSpec, *, orthogonal: bool = False):
+    """Build an RFF or Nystrom map from a data sample (first mini-batch)."""
+    if method == "rff":
+        return make_rff(key, x_sample.shape[1], m, spec,
+                        orthogonal=orthogonal)
+    if method == "nystrom":
+        return make_nystrom(key, x_sample, m, spec)
+    raise ValueError(f"unknown feature-map method {method!r}; have {METHODS}")
+
+
+__all__ = [
+    "METHODS", "default_embed_dim", "make_feature_map",
+    "RFFMap", "make_rff", "rff_features",
+    "NystromMap", "make_nystrom", "nystrom_features",
+    "EmbedState", "EmbedInnerResult", "assign_embedded", "fit_embedded",
+    "lloyd_fit", "predict_embedded",
+]

@@ -1,0 +1,201 @@
+"""Mini-batch Lloyd in explicit feature space (the embedded-space driver).
+
+With an explicit map z = phi_m(x) (RFF or Nystrom), kernel k-means becomes
+linear k-means on Z — centroids are real [C, m] vectors, so the paper's
+medoid machinery (Eq.7/10) is unnecessary: batch centroids are exact cluster
+means and the Eq.12 convex merge
+
+    c_j <- (1 - a) c_j + a c_j^i,   a = |w_j^i| / (|w_j^i| + |w_j|)
+
+is computed *exactly* instead of re-approximated on the batch. Empty batch
+clusters (a = 0) leave the global centroid untouched — same empty-cluster
+rule as the exact path.
+
+Per batch the embedding is applied once ([n, m] resident for the whole inner
+loop: the Lloyd sweep then costs O(n*m*C) matmuls, no kernel evaluations at
+all); prediction can instead go through the fused Pallas embed+assign kernel
+(repro.kernels.embed_assign) where Z never round-trips HBM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Iterable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.init import kmeans_pp_indices
+from repro.core.kernels import KernelSpec
+from repro.core.kkmeans import BIG
+
+Array = jax.Array
+
+_LINEAR = KernelSpec("linear")
+
+
+class EmbedState(NamedTuple):
+    """O(C*m) cross-batch state of the embedded-space outer loop."""
+    centroids: Array      # [C, m] explicit feature-space centroids
+    cardinalities: Array  # [C]    accumulated |w_j|
+    batches_done: Array   # []     int32
+
+
+class EmbedInnerResult(NamedTuple):
+    labels: Array      # [n] int32
+    centroids: Array   # [C, m] batch cluster means
+    counts: Array      # [C]
+    n_iter: Array
+    cost: Array        # sum_i ||z_i - c_{u_i}||^2 at the fixpoint
+
+
+def assign_embedded(z: Array, centroids: Array, counts: Array | None = None
+                    ) -> tuple[Array, Array]:
+    """Nearest-centroid labels + squared distances in embedded space.
+
+    Clusters with ``counts == 0`` are unjoinable (+BIG), mirroring the exact
+    inner loop's empty-cluster rule.
+    """
+    zsq = jnp.sum(z.astype(jnp.float32) ** 2, axis=1)            # [n]
+    csq = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)    # [C]
+    cross = jax.lax.dot_general(
+        z, centroids, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                      # [n, C]
+    d2 = jnp.maximum(zsq[:, None] + csq[None, :] - 2.0 * cross, 0.0)
+    if counts is not None:
+        d2 = jnp.where(counts[None, :] > 0, d2, BIG)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def _means(z: Array, labels: Array, n_clusters: int):
+    h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)    # [n, C]
+    counts = jnp.sum(h, axis=0)
+    sums = jax.lax.dot_general(h, z, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # [C, m]
+    return sums / jnp.maximum(counts, 1.0)[:, None], counts
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def lloyd_fit(z: Array, labels0: Array, *, n_clusters: int,
+              max_iters: int = 100) -> EmbedInnerResult:
+    """Lloyd's iteration on embedded rows ``z`` [n, m] to label fixpoint."""
+
+    def body(state):
+        labels, _, t, _ = state
+        cents, counts = _means(z, labels, n_clusters)
+        new_labels, mind = assign_embedded(z, cents, counts)
+        changed = jnp.any(new_labels != labels)
+        return new_labels, changed, t + 1, jnp.sum(mind)
+
+    def cond(state):
+        _, changed, t, _ = state
+        return jnp.logical_and(changed, t < max_iters)
+
+    init = (labels0.astype(jnp.int32), jnp.array(True),
+            jnp.array(0, jnp.int32), jnp.array(jnp.inf, jnp.float32))
+    labels, _, t, cost = jax.lax.while_loop(cond, body, init)
+    cents, counts = _means(z, labels, n_clusters)
+    return EmbedInnerResult(labels, cents, counts, t, cost)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def _first_batch_step(z: Array, key: Array, *, n_clusters: int,
+                      max_iters: int):
+    """Batch 0: k-means++ seeding (linear kernel == embedded space)."""
+    diag = jnp.sum(z.astype(jnp.float32) ** 2, axis=1)
+    seeds = kmeans_pp_indices(z, diag, key, n_clusters=n_clusters,
+                              spec=_LINEAR)
+    labels0, _ = assign_embedded(z, jnp.take(z, seeds, axis=0))
+    res = lloyd_fit(z, labels0, n_clusters=n_clusters, max_iters=max_iters)
+    state = EmbedState(
+        centroids=res.centroids,
+        cardinalities=res.counts,
+        batches_done=jnp.array(1, jnp.int32),
+    )
+    return state, res
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def _next_batch_step(z: Array, state: EmbedState, *, n_clusters: int,
+                     max_iters: int):
+    """Batch i > 0: warm-start from global centroids, Lloyd, convex merge."""
+    labels0, _ = assign_embedded(z, state.centroids, state.cardinalities)
+    res = lloyd_fit(z, labels0, n_clusters=n_clusters, max_iters=max_iters)
+
+    alpha = res.counts / jnp.maximum(res.counts + state.cardinalities, 1.0)
+    merged = ((1.0 - alpha)[:, None] * state.centroids
+              + alpha[:, None] * res.centroids)
+    keep = (res.counts == 0)[:, None]
+    new_centroids = jnp.where(keep, state.centroids, merged)
+    disp = jnp.sum((new_centroids - state.centroids) ** 2, axis=1)
+
+    new_state = EmbedState(
+        centroids=new_centroids,
+        cardinalities=state.cardinalities + res.counts,
+        batches_done=state.batches_done + 1,
+    )
+    return new_state, res, disp
+
+
+def fit_embedded(
+    batches: Iterable[np.ndarray],
+    fmap: Callable[[Array], Array],
+    *,
+    n_clusters: int,
+    max_iters: int = 100,
+    seed: int = 0,
+    state: Optional[EmbedState] = None,
+    checkpoint_cb: Optional[Callable[[EmbedState, int], None]] = None,
+):
+    """Embedded-space outer loop. Returns ``(EmbedState, [BatchStats])``.
+
+    Mirrors ``repro.core.minibatch.fit``: host-side sequential batches,
+    O(C*m) state across batches, checkpoint callback after every merge.
+    """
+    from repro.core.minibatch import BatchStats  # cycle-free late import
+
+    key = jax.random.PRNGKey(seed)
+    history: list = []
+    start = int(state.batches_done) if state is not None else 0
+
+    for i, xb in enumerate(batches, start=start):
+        z = fmap(jnp.asarray(xb))
+        sub = jax.random.fold_in(key, i)
+        if state is None:
+            state, res = _first_batch_step(z, sub, n_clusters=n_clusters,
+                                           max_iters=max_iters)
+            disp = jnp.zeros((n_clusters,), jnp.float32)
+        else:
+            state, res, disp = _next_batch_step(z, state,
+                                                n_clusters=n_clusters,
+                                                max_iters=max_iters)
+        history.append(BatchStats(
+            inner_iters=int(res.n_iter),
+            cost=float(res.cost),
+            displacement=np.asarray(disp),
+            counts=np.asarray(res.counts),
+        ))
+        if checkpoint_cb is not None:
+            checkpoint_cb(state, i)
+    if state is None:
+        raise ValueError("empty batch iterable")
+    return state, history
+
+
+def predict_embedded(x: Array, state: EmbedState, fmap, *,
+                     use_fused: bool | None = None) -> Array:
+    """Label new samples by nearest centroid in embedded space.
+
+    On TPU (or with ``use_fused=True``) this goes through the fused Pallas
+    embed+assign kernel — the [n, m] embedding never materializes in HBM.
+    """
+    from repro.kernels.ops import embed_assign, use_pallas
+    fused = use_pallas() if use_fused is None else use_fused
+    if fused:
+        labels, _ = embed_assign(x, fmap, state.centroids,
+                                 state.cardinalities,
+                                 interpret=jax.default_backend() != "tpu")
+        return labels
+    labels, _ = assign_embedded(fmap(x), state.centroids,
+                                state.cardinalities)
+    return labels

@@ -1,0 +1,95 @@
+"""Nystrom landmark embedding (Williams & Seeger; Chitta et al. for k-means).
+
+Pick m landmarks L from a data sample (reusing the paper's uniform landmark
+selection, ``core/landmarks.py``), then whiten the landmark Gram matrix
+
+    K_LL = U diag(lam) U^T        (eigendecomposition, clamped at eps)
+    z(x) = K(x, L) U diag(lam)^{-1/2}          z: R^d -> R^m
+
+so that ``z(x) . z(y) = K(x, L) K_LL^+ K(L, y)`` — the rank-m Nystrom
+approximation of the full Gram matrix. Unlike RFF this works for *any*
+Mercer kernel and is exact on the landmark subspace, so the error decays
+with the kernel's spectrum rather than 1/sqrt(m).
+
+Gram blocks (K_LL here, K_xL per application) go through the same dispatch
+as the rest of the system: the Pallas tiled Gram kernel on TPU, the jnp
+Gram-block evaluator elsewhere (``repro.kernels.ops.use_pallas``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels import KernelSpec
+from repro.core.landmarks import choose_landmarks
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NystromMap:
+    """Frozen landmark embedding: z(x) = K(x, L) @ proj."""
+
+    landmarks: Array   # [m, d] landmark features
+    proj: Array        # [m, m] U diag(lam)^{-1/2} whitening
+    spec: KernelSpec   # kernel the map approximates
+
+    @property
+    def dim(self) -> int:
+        return self.proj.shape[1]
+
+    @property
+    def in_dim(self) -> int:
+        return self.landmarks.shape[1]
+
+    def __call__(self, x: Array) -> Array:
+        return nystrom_features(x, self)
+
+
+def _gram(x: Array, y: Array, spec: KernelSpec) -> Array:
+    """Gram block through the Pallas kernel on TPU, jnp otherwise."""
+    from repro.kernels.ops import kernel_matrix, use_pallas
+    if use_pallas():
+        return kernel_matrix(x, y, kind=spec.name, gamma=spec.gamma,
+                             coef0=spec.coef0, degree=spec.degree,
+                             interpret=False)
+    return spec(x, y).astype(jnp.float32)
+
+
+def make_nystrom(key: Array, x: Array, m: int, spec: KernelSpec, *,
+                 eps: float = 1e-6) -> NystromMap:
+    """Build an m-landmark Nystrom map from a data sample ``x`` [n, d].
+
+    Eigenvalues below ``eps * lam_max`` are zeroed in the whitening (their
+    directions carry no reliable kernel mass — inverting them amplifies
+    noise), so the effective rank may be < m on near-degenerate samples;
+    the embedding dim stays m for shape stability.
+    """
+    n = x.shape[0]
+    if not (1 <= m <= n):
+        raise ValueError(f"need 1 <= m <= n={n} landmarks, got m={m}")
+    l_idx = choose_landmarks(key, n, m)
+    landmarks = jnp.take(x, l_idx, axis=0)
+    k_ll = _gram(landmarks, landmarks, spec)                     # [m, m]
+    k_ll = 0.5 * (k_ll + k_ll.T)                                 # exact symmetry
+    lam, u = jnp.linalg.eigh(k_ll)
+    good = lam > eps * jnp.maximum(jnp.max(lam), eps)
+    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, eps)), 0.0)
+    return NystromMap(landmarks=landmarks, proj=u * inv_sqrt[None, :],
+                      spec=spec)
+
+
+def nystrom_features(x: Array, fmap: NystromMap) -> Array:
+    """z(X) -> [n, m] fp32."""
+    k_xl = _gram(x, fmap.landmarks, fmap.spec)                   # [n, m]
+    return jnp.dot(k_xl, fmap.proj, preferred_element_type=jnp.float32)
+
+
+jax.tree_util.register_pytree_node(
+    NystromMap,
+    lambda f: ((f.landmarks, f.proj), f.spec),
+    lambda spec, leaves: NystromMap(landmarks=leaves[0], proj=leaves[1],
+                                    spec=spec),
+)

@@ -5,7 +5,8 @@ from .kkmeans import (InnerResult, kkmeans_fit, kkmeans_fit_full,
                       medoid_indices)
 from .init import assign_to_medoids, kmeans_pp_indices
 from .landmarks import choose_landmarks, num_landmarks
-from .memory import MachineSpec, Plan, b_min, b_min_paper, footprint_bytes, plan
+from .memory import (MachineSpec, Plan, b_min, b_min_paper,
+                     embed_footprint_bytes, footprint_bytes, plan)
 from .metrics import clustering_accuracy, elbow, mean_displacement, nmi
 from .minibatch import (FitResult, GlobalState, MiniBatchConfig, fit,
                         fit_dataset, predict)
@@ -15,7 +16,8 @@ __all__ = [
     "InnerResult", "kkmeans_fit", "kkmeans_fit_full", "medoid_indices",
     "assign_to_medoids", "kmeans_pp_indices",
     "choose_landmarks", "num_landmarks",
-    "MachineSpec", "Plan", "b_min", "b_min_paper", "footprint_bytes", "plan",
+    "MachineSpec", "Plan", "b_min", "b_min_paper", "embed_footprint_bytes",
+    "footprint_bytes", "plan",
     "clustering_accuracy", "elbow", "mean_displacement", "nmi",
     "FitResult", "GlobalState", "MiniBatchConfig", "fit", "fit_dataset",
     "predict",

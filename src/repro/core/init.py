@@ -5,9 +5,15 @@ distance to the nearest already-chosen seed:
 
     d^2(x_i, x_c) = K_ii + K_cc - 2 K_ic
 
-Only C kernel *columns* are ever evaluated (one per chosen seed) — the full
-mini-batch Gram matrix is NOT required, which keeps seeding memory-aware in
-the same spirit as the rest of the paper.
+Greedy variant (Arthur & Vassilvitskii's remark; sklearn default): each step
+samples ``2 + floor(ln C)`` candidates from the D^2 distribution and keeps
+the one minimizing the resulting potential sum_i min d^2 — substantially
+more robust to unlucky draws (two seeds in one cluster) at the cost of a few
+extra kernel columns per step.
+
+Only O(C log C) kernel *columns* are ever evaluated — the full mini-batch
+Gram matrix is NOT required, which keeps seeding memory-aware in the same
+spirit as the rest of the paper.
 """
 from __future__ import annotations
 
@@ -34,8 +40,11 @@ def kmeans_pp_indices(
 
     Returns [C] int32 indices into ``x``.
     """
+    import math
+
     n = x.shape[0]
     diag_k = diag_k.astype(jnp.float32)
+    n_cand = 2 + int(math.log(max(n_clusters, 1)))  # greedy candidate pool
 
     key, sub = jax.random.split(key)
     first = jax.random.randint(sub, (), 0, n, dtype=jnp.int32)
@@ -47,11 +56,18 @@ def kmeans_pp_indices(
         kc = spec(x, x[c][None, :])[:, 0]                    # [n] one column
         d2 = jnp.maximum(diag_k + diag_k[c] - 2.0 * kc, 0.0)
         mind2 = jnp.minimum(mind2, d2)
-        # sample the next seed ~ mind2 (categorical over log-probs).
+        # sample candidate seeds ~ mind2 (categorical over log-probs).
         logp = jnp.where(mind2 > 0, jnp.log(jnp.maximum(mind2, 1e-30)), -jnp.inf)
         # all-zero guard (duplicate points): fall back to uniform.
         logp = jnp.where(jnp.all(~jnp.isfinite(logp)), jnp.zeros_like(logp), logp)
-        nxt = jax.random.categorical(key_t, logp).astype(jnp.int32)
+        cands = jax.random.categorical(key_t, logp,
+                                       shape=(n_cand,)).astype(jnp.int32)
+        # greedy: keep the candidate with the smallest resulting potential.
+        kc2 = spec(x, jnp.take(x, cands, axis=0))            # [n, n_cand]
+        d2c = jnp.maximum(diag_k[:, None] + jnp.take(diag_k, cands)[None, :]
+                          - 2.0 * kc2, 0.0)
+        pot = jnp.sum(jnp.minimum(mind2[:, None], d2c), axis=0)  # [n_cand]
+        nxt = cands[jnp.argmin(pot)]
         chosen = chosen.at[t + 1].set(nxt)
         return (mind2, chosen, t + 1), None
 

@@ -11,6 +11,16 @@ R/Q under the square root; ``b_min_paper`` reproduces the printed formula,
 C << R/Q). With landmarks the K-row term shrinks by s; with the fused
 assignment path (DESIGN.md §2) the K term disappears entirely and B_min is
 driven by feature storage — ``plan`` reports all three.
+
+Explicit feature maps (repro.approx) change the footprint shape entirely:
+the embedded mini-batch is linear in the batch size,
+
+    M_embed(B) = Q * ( N/(B*P) * m + C*m + map )         [bytes]
+
+(embedded rows + embedded centroids + the map parameters: m*d for RFF
+frequencies / Nystrom landmarks+whitening). ``plan`` computes this next to
+the kernel-block footprint and picks whichever method is cheaper at the
+chosen (B, s) — the embedded method wins whenever m < s*N/B + C.
 """
 from __future__ import annotations
 
@@ -45,6 +55,21 @@ def footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     return q * (k_term + nb + 2 * c + feat)
 
 
+def embed_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
+                          m: int, d: int = 0) -> float:
+    """Per-node bytes for one embedded-space (RFF/Nystrom) batch iteration.
+
+    Embedded rows Z [rows, m] + centroids [C, m] + the replicated map
+    parameters (frequencies/landmarks [m, d] and, generously, an [m, m]
+    whitening block for Nystrom). The fused embed+assign kernel would drop
+    the Z term too, but this reports the materialized (default) path.
+    """
+    nb = n / b
+    rows = nb / p
+    map_params = m * d + m * m if d else 0.0
+    return q * (rows * m + c * m + rows + map_params)
+
+
 def b_min(n: int, c: int, machine: MachineSpec, *, s: float = 1.0) -> int:
     """Smallest B such that footprint fits in machine.memory_bytes (exact).
 
@@ -77,9 +102,13 @@ class Plan:
     footprint: float
     fused_footprint: float
     note: str
+    embed_dim: int = 0                   # m used for the embedded estimate
+    embed_footprint: float = float("inf")
+    method: str = "exact"                # "exact" | "embed" (cheaper one)
 
 
 def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
+         embed_dim: int | None = None,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
     """§4.2 model-selection rationale, automated.
@@ -87,6 +116,14 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     Start at (B_min, s=1). If a target per-batch time is given together with a
     measured single-batch time, first shrink s (down to 0.2 — the paper's
     accuracy cliff), then increase B.
+
+    The embedded-space footprint (RFF/Nystrom at ``embed_dim``; default
+    m = 4*C, the tested accuracy floor) is always reported alongside, and
+    ``method`` names the cheaper representation at the chosen (B, s):
+    ``"exact"`` or ``"embed"``. ``"embed"`` means pick one of
+    ``MiniBatchConfig(method="rff")`` / ``method="nystrom"`` — the memory
+    model cannot choose between them (same footprint shape); that choice
+    follows from the kernel (rbf -> either; anything else -> nystrom).
     """
     b = b_min(n, c, machine)
     s = 1.0
@@ -103,12 +140,19 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
                 note = f"s floored at 0.2 (accuracy cliff), B raised x{residual:.2f}"
             else:
                 note = f"s lowered to {s:.3f} to hit the time target"
+    m = embed_dim if embed_dim is not None else 4 * c
+    p, q = machine.n_processors, machine.bytes_per_scalar
+    fp = footprint_bytes(n, b, c, p, q, s=s, d=d)
+    fp_embed = embed_footprint_bytes(n, b, c, p, q, m=m, d=d)
+    method = "embed" if fp_embed < fp else "exact"
+    if method == "embed":
+        note += f"; embedded space (m={m}) is cheaper — consider method='rff'/'nystrom'"
     return Plan(
         b=b, s=s,
-        footprint=footprint_bytes(n, b, c, machine.n_processors,
-                                  machine.bytes_per_scalar, s=s, d=d),
-        fused_footprint=footprint_bytes(n, b, c, machine.n_processors,
-                                        machine.bytes_per_scalar, s=s, d=d,
-                                        fused=True),
+        footprint=fp,
+        fused_footprint=footprint_bytes(n, b, c, p, q, s=s, d=d, fused=True),
         note=note,
+        embed_dim=m,
+        embed_footprint=fp_embed,
+        method=method,
     )

@@ -51,6 +51,16 @@ class MiniBatchConfig:
     seed: int = 0
     restrict_medoids_to_members: bool = False  # Eq.7 is unrestricted
     landmark_multiple_of: int = 1        # distributed runtime alignment
+    # -- explicit feature-map knobs (repro.approx; orthogonal to (B, s)) --
+    method: str = "exact"                # "exact" | "rff" | "nystrom"
+    embed_dim: int = 0                   # m; 0 -> approx.default_embed_dim(C)
+    rff_orthogonal: bool = False         # ORF variant (lower variance)
+
+    def __post_init__(self):
+        if self.method not in ("exact", "rff", "nystrom"):
+            raise ValueError(
+                f"method must be 'exact', 'rff' or 'nystrom', "
+                f"got {self.method!r}")
 
 
 class GlobalState(NamedTuple):
@@ -69,8 +79,20 @@ class BatchStats(NamedTuple):
 
 
 class FitResult(NamedTuple):
-    state: GlobalState
+    state: GlobalState          # EmbedState for embedded methods
     history: list[BatchStats]
+    fmap: object = None         # FeatureMap when method != "exact"
+    spec: Optional[KernelSpec] = None
+
+    def predict(self, x) -> Array:
+        """Label new samples with whatever space this result was fit in."""
+        x = jnp.asarray(x)
+        if self.fmap is not None:
+            from repro.approx import predict_embedded
+            return predict_embedded(x, self.state, self.fmap)
+        spec = self.spec if self.spec is not None else KernelSpec()
+        return predict(x, self.state.medoids, self.state.medoid_diag,
+                       spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +203,7 @@ def fit(
     *,
     state: Optional[GlobalState] = None,
     checkpoint_cb: Optional[Callable[[GlobalState, int], None]] = None,
+    fmap=None,
 ) -> FitResult:
     """Run the outer loop over an iterable of mini-batches.
 
@@ -188,7 +211,17 @@ def fit(
     (stride sampling over a known dataset) — see ``repro.data.sampling``.
     Passing a previous ``state`` resumes after a restart (the iterable should
     then yield only the remaining batches).
+
+    With ``cfg.method in ("rff", "nystrom")`` the loop runs in the explicit
+    m-dimensional embedded space instead (repro.approx): the feature map is
+    sampled from the first mini-batch, every batch is embedded once, and the
+    inner loop is plain Lloyd — no kernel-block evaluation at all. ``fmap``
+    carries a previously sampled map across a restart (required when
+    resuming an embedded fit; the map is part of the model).
     """
+    if cfg.method != "exact":
+        return _fit_embedded(batches, cfg, state=state,
+                             checkpoint_cb=checkpoint_cb, fmap=fmap)
     key = jax.random.PRNGKey(cfg.seed)
     history: list[BatchStats] = []
     start = int(state.batches_done) if state is not None else 0
@@ -215,7 +248,35 @@ def fit(
             checkpoint_cb(state, i)
     if state is None:
         raise ValueError("empty batch iterable")
-    return FitResult(state, history)
+    return FitResult(state, history, spec=cfg.kernel)
+
+
+def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
+                  checkpoint_cb=None, fmap=None) -> FitResult:
+    """Embedded-space dispatch target of ``fit`` (cfg.method != 'exact')."""
+    import itertools
+
+    from repro import approx
+
+    it = iter(batches)
+    if fmap is None:
+        if state is not None:
+            raise ValueError(
+                "resuming an embedded fit requires the original fmap "
+                "(the sampled feature map is part of the model)")
+        try:
+            first = jnp.asarray(next(it))
+        except StopIteration:
+            raise ValueError("empty batch iterable") from None
+        m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
+        fmap = approx.make_feature_map(
+            cfg.method, jax.random.PRNGKey(cfg.seed), first, m, cfg.kernel,
+            orthogonal=cfg.rff_orthogonal)
+        it = itertools.chain([first], it)
+    est, history = approx.fit_embedded(
+        it, fmap, n_clusters=cfg.n_clusters, max_iters=cfg.max_inner_iters,
+        seed=cfg.seed, state=state, checkpoint_cb=checkpoint_cb)
+    return FitResult(est, history, fmap=fmap, spec=cfg.kernel)
 
 
 def fit_dataset(x: np.ndarray, cfg: MiniBatchConfig, **kw) -> FitResult:

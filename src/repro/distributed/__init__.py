@@ -1,9 +1,11 @@
 from .mesh import axis_size, make_test_mesh, row_axes_of
+from .embed import DistributedEmbedKMeans
 from .inner import DistributedInnerConfig, distributed_kkmeans_fit
 from .outer import DistributedMiniBatchKMeans
 
 __all__ = [
     "axis_size", "make_test_mesh", "row_axes_of",
+    "DistributedEmbedKMeans",
     "DistributedInnerConfig", "distributed_kkmeans_fit",
     "DistributedMiniBatchKMeans",
 ]

@@ -1,0 +1,200 @@
+"""Distributed embedded-space (RFF/Nystrom) mini-batch k-means.
+
+The explicit feature map makes the heavy step embarrassingly parallel: each
+device embeds only its own rows, z = phi_m(x_local), and the Lloyd sweep
+needs exactly ONE collective per iteration — a psum of the per-cluster
+partial sums and counts, C*(m+1) floats. Compare Alg.1's inner loop, which
+allgathers the full label vector U (N/(B*P) ints) *and* psums g every
+iteration: the embedded path communicates O(C*m) independent of the batch
+size, strictly less whenever C*m < N/B (always, in the paper's regimes).
+
+Row padding (to divide the mesh) is weight-masked rather than replicated, so
+padded rows never bias the centroid means.
+
+Host-side outer loop mirrors ``repro.approx.embed_kmeans.fit_embedded``:
+O(C*m) state across batches, exact Eq.12-style convex merge (no medoid
+re-approximation — centroids are explicit vectors here).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.approx.embed_kmeans import EmbedState, assign_embedded
+from repro.core.init import kmeans_pp_indices
+from repro.core.kernels import KernelSpec
+from repro.core.kkmeans import BIG
+from repro.core.minibatch import BatchStats, FitResult, MiniBatchConfig
+
+from .compat import shard_map
+from .mesh import axis_size, row_axes_of
+
+Array = jax.Array
+
+_LINEAR = KernelSpec("linear")
+
+
+def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
+                 n_clusters: int, max_iters: int):
+    """Per-shard Lloyd body: local assign, one psum per iteration."""
+
+    def means(labels):
+        h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
+        h = h * wgt_local[:, None]                       # padded rows -> 0
+        counts = jax.lax.psum(jnp.sum(h, axis=0), row_axes)
+        sums = jax.lax.psum(
+            jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32),
+            row_axes)                                    # [C, m]
+        return sums / jnp.maximum(counts, 1.0)[:, None], counts
+
+    def assign(cents, counts):
+        labels, mind = assign_embedded(z_local, cents, counts)
+        return labels, mind
+
+    def body(state):
+        labels, _, t, _ = state
+        cents, counts = means(labels)
+        new_labels, mind = assign(cents, counts)
+        changed = jax.lax.psum(
+            jnp.sum((new_labels != labels).astype(jnp.int32)), row_axes) > 0
+        cost = jax.lax.psum(jnp.sum(mind * wgt_local), row_axes)
+        return new_labels, changed, t + 1, cost
+
+    def cond(state):
+        _, changed, t, _ = state
+        return jnp.logical_and(changed, t < max_iters)
+
+    # init: nearest centroid0 (masked like the single-device warm start).
+    d2 = (jnp.sum(z_local ** 2, axis=1)[:, None]
+          + jnp.sum(centroids0 ** 2, axis=1)[None, :]
+          - 2.0 * z_local @ centroids0.T)
+    d2 = jnp.where(mask0[None, :], d2, BIG)
+    labels0 = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+    init = (labels0, jnp.array(True), jnp.array(0, jnp.int32),
+            jnp.array(jnp.inf, jnp.float32))
+    labels, _, t, cost = jax.lax.while_loop(cond, body, init)
+    cents, counts = means(labels)
+    return labels, cents, counts, t, cost
+
+
+class DistributedEmbedKMeans:
+    """Mesh-resident embedded-space mini-batch k-means.
+
+    ``fmap`` may be passed pre-sampled (resume / multi-host determinism) or
+    is sampled from the first batch per ``cfg.method`` / ``cfg.embed_dim``.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *, fmap=None):
+        if cfg.method == "exact":
+            raise ValueError("DistributedEmbedKMeans needs cfg.method in "
+                             "('rff', 'nystrom'); use "
+                             "DistributedMiniBatchKMeans for 'exact'")
+        self.mesh = mesh
+        self.cfg = cfg
+        self.fmap = fmap
+        self.row_axes = row_axes_of(mesh)
+        self.d_size = axis_size(mesh, self.row_axes)
+        self._row_sharding = NamedSharding(mesh, P(self.row_axes, None))
+
+    def _ensure_fmap(self, first_batch: Array):
+        if self.fmap is None:
+            from repro import approx
+            cfg = self.cfg
+            m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
+            self.fmap = approx.make_feature_map(
+                cfg.method, jax.random.PRNGKey(cfg.seed), first_batch, m,
+                cfg.kernel, orthogonal=cfg.rff_orthogonal)
+        return self.fmap
+
+    def _batch_step(self, x: Array, wgt: Array, centroids0: Array,
+                    mask0: Array):
+        fn = partial(_shard_lloyd, row_axes=self.row_axes,
+                     n_clusters=self.cfg.n_clusters,
+                     max_iters=self.cfg.max_inner_iters)
+        rowspec = P(self.row_axes)
+        return shard_map(
+            lambda z, w, c, mk: fn(z, w, c, mk),
+            mesh=self.mesh,
+            in_specs=(P(self.row_axes, None), rowspec, P(None, None), P()),
+            out_specs=(rowspec, P(), P(), P(), P()),
+            check_vma=False,
+        )(x, wgt, centroids0, mask0)
+
+    def fit(self, batches: Iterable[np.ndarray], *,
+            state: Optional[EmbedState] = None,
+            checkpoint_cb=None) -> FitResult:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        history: list[BatchStats] = []
+        start = int(state.batches_done) if state is not None else 0
+        if state is not None and self.fmap is None:
+            raise ValueError("resuming requires the original fmap")
+
+        for i, xb in enumerate(batches, start=start):
+            xb = np.asarray(xb, np.float32)
+            fmap = self._ensure_fmap(jnp.asarray(xb))
+            n = len(xb)
+            pad = (-n) % self.d_size
+            wgt = np.ones((n + pad,), np.float32)
+            if pad:
+                xb = np.concatenate([xb, xb[:pad]], axis=0)
+                wgt[n:] = 0.0
+            x = jax.device_put(jnp.asarray(xb), self._row_sharding)
+            wgt = jax.device_put(jnp.asarray(wgt),
+                                 NamedSharding(self.mesh, P(self.row_axes)))
+            # embed rows shard-locally (embarrassingly parallel).
+            z = shard_map(lambda xl: fmap(xl).astype(jnp.float32),
+                          mesh=self.mesh,
+                          in_specs=P(self.row_axes, None),
+                          out_specs=P(self.row_axes, None),
+                          check_vma=False)(x)
+
+            sub = jax.random.fold_in(key, i)
+            if state is None:
+                # k-means++ seeds in embedded space (replicated, O(n*C)) —
+                # same seeding as the single-device first batch.
+                zsq = jnp.sum(z ** 2, axis=1)
+                seeds = kmeans_pp_indices(z, zsq, sub,
+                                          n_clusters=cfg.n_clusters,
+                                          spec=_LINEAR)
+                centroids0 = jnp.take(z, seeds, axis=0)
+                mask0 = jnp.ones((cfg.n_clusters,), bool)
+                cards = jnp.zeros((cfg.n_clusters,), jnp.float32)
+            else:
+                centroids0 = state.centroids
+                mask0 = state.cardinalities > 0
+                cards = state.cardinalities
+
+            labels, cents, counts, t, cost = self._batch_step(
+                z, wgt, centroids0, mask0)
+
+            if state is None:
+                new_centroids = cents
+                disp = jnp.zeros((cfg.n_clusters,), jnp.float32)
+                batches_done = jnp.array(1, jnp.int32)
+            else:
+                alpha = counts / jnp.maximum(counts + cards, 1.0)
+                merged = ((1.0 - alpha)[:, None] * state.centroids
+                          + alpha[:, None] * cents)
+                keep = (counts == 0)[:, None]
+                new_centroids = jnp.where(keep, state.centroids, merged)
+                disp = jnp.sum((new_centroids - state.centroids) ** 2, axis=1)
+                batches_done = state.batches_done + 1
+            state = EmbedState(centroids=new_centroids,
+                               cardinalities=cards + counts,
+                               batches_done=batches_done)
+            history.append(BatchStats(
+                inner_iters=int(t), cost=float(cost),
+                displacement=np.asarray(disp), counts=np.asarray(counts)))
+            if checkpoint_cb is not None:
+                checkpoint_cb(state, i)
+        if state is None:
+            raise ValueError("empty batch iterable")
+        return FitResult(state, history, fmap=self.fmap, spec=cfg.kernel)

@@ -39,6 +39,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.kernels import KernelSpec
 from repro.core.kkmeans import BIG
 
+from .compat import shard_map
+
 Array = jax.Array
 
 
@@ -178,7 +180,7 @@ def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
     colspec = P(col_axis) if col_axis is not None else P()
 
     fn = partial(_inner_shard_fn, cfg=cfg)
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         fn, mesh=mesh,
         in_specs=(
             P(row_axes, None),    # x rows

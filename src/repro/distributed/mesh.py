@@ -26,9 +26,8 @@ def make_test_mesh(axes: dict[str, int] | None = None) -> Mesh:
     shape = tuple(axes.values())
     if math.prod(shape) != n:
         raise ValueError(f"mesh {axes} needs {math.prod(shape)} devices, have {n}")
-    return jax.make_mesh(
-        shape, tuple(axes.keys()),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    from .compat import make_mesh
+    return make_mesh(shape, tuple(axes.keys()))
 
 
 def axis_size(mesh: Mesh, names: tuple[str, ...] | str) -> int:

@@ -29,6 +29,7 @@ from repro.core.kkmeans import BIG
 from repro.core.landmarks import choose_landmarks, num_landmarks
 from repro.core.minibatch import BatchStats, FitResult, GlobalState, MiniBatchConfig
 
+from .compat import shard_map
 from .inner import DistributedInnerConfig, distributed_kkmeans_fit
 
 Array = jax.Array
@@ -50,7 +51,7 @@ def _dist_argmin_rows(mesh: Mesh, row_axes, score: Array, n_local: int):
         best = jnp.argmin(vals, axis=0)                            # [C]
         return jnp.take_along_axis(gidxs, best[None, :], axis=0)[0]
 
-    return jax.shard_map(
+    return shard_map(
         shard_fn, mesh=mesh, in_specs=P(row_axes, None), out_specs=P(),
         check_vma=False)(score)
 
@@ -95,7 +96,7 @@ class DistributedMiniBatchKMeans:
                 - 2.0 * kt
             return jnp.argmin(d2, axis=1).astype(jnp.int32), kt
 
-        return jax.shard_map(
+        return shard_map(
             shard_fn, mesh=self.mesh,
             in_specs=(P(self.row_axes, None), P(self.row_axes)),
             out_specs=(P(self.row_axes), P(self.row_axes, None)),
@@ -125,7 +126,7 @@ class DistributedMiniBatchKMeans:
                         - 2.0 * (1.0 - alpha)[None, :] * kt_local
                         - 2.0 * alpha[None, :] * kxm)
 
-            score12 = jax.shard_map(
+            score12 = shard_map(
                 score_fn, mesh=self.mesh,
                 in_specs=(P(self.row_axes, None), P(self.row_axes),
                           P(self.row_axes, None)),
@@ -164,7 +165,7 @@ class DistributedMiniBatchKMeans:
             if pad:   # replicate final rows so shapes divide the mesh
                 xb = np.concatenate([xb, xb[:pad]], axis=0)
             x = self._put_rows(np.asarray(xb, np.float32))
-            diag = jax.shard_map(
+            diag = shard_map(
                 lambda xl: spec.diag(xl), mesh=self.mesh,
                 in_specs=P(self.row_axes, None), out_specs=P(self.row_axes),
                 check_vma=False)(x)
@@ -203,4 +204,4 @@ class DistributedMiniBatchKMeans:
                 checkpoint_cb(state, i)
         if state is None:
             raise ValueError("empty batch iterable")
-        return FitResult(state, history)
+        return FitResult(state, history, spec=cfg.kernel)

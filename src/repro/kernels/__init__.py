@@ -1,7 +1,9 @@
 # TPU compute hot-spots of the paper (kernel-matrix evaluation — the part the
 # paper offloads to the accelerator) as Pallas kernels, plus the beyond-paper
-# fused assignment. ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
-from .ops import assign_fused, assign_fused_ref, kernel_matrix, kernel_matrix_ref
+# fused assignment and the embedded-space fused embed+assign.
+# ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
+from .ops import (assign_fused, assign_fused_ref, embed_assign,
+                  embed_assign_ref, kernel_matrix, kernel_matrix_ref)
 
-__all__ = ["assign_fused", "assign_fused_ref", "kernel_matrix",
-           "kernel_matrix_ref"]
+__all__ = ["assign_fused", "assign_fused_ref", "embed_assign",
+           "embed_assign_ref", "kernel_matrix", "kernel_matrix_ref"]

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
 from .kernel_matrix import _epilogue
 
 
@@ -108,7 +109,7 @@ def assign_fused_pallas(x, landmarks, xsq, lsq, h_norm, g, *,
             pltpu.VMEM((bm, bl), jnp.float32),
             pltpu.VMEM((bm, cp), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

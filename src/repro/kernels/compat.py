@@ -1,0 +1,15 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+The pinned JAX exposes the TPU compiler-params dataclass as
+``pltpu.TPUCompilerParams``; newer releases renamed it to
+``pltpu.CompilerParams``. Every kernel in this package imports the name from
+here so the rename never breaks a pinned environment again.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .assign import assign_fused_pallas
+from .embed_assign import embed_assign_pallas
 from .flash_attention import flash_attention_pallas
 from .kernel_matrix import kernel_matrix_pallas
 
@@ -110,9 +111,71 @@ def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
     return labels[:m, 0], mind[:m, 0]
 
 
+def embed_panels(fmap, centroids: Array, counts: Array | None = None):
+    """Lower a feature map + centroids to the fused kernel's raw panels.
+
+    Returns ``(w, aux, v, csq, statics)`` where statics is the dict of
+    compile-time params (map_kind/gamma/coef0/degree/scale). Shared between
+    the Pallas wrapper and the oracle-comparison tests.
+    """
+    from repro.approx.nystrom import NystromMap
+    from repro.approx.rff import RFFMap
+
+    c32 = centroids.astype(jnp.float32)
+    csq = jnp.sum(c32 * c32, axis=1)
+    if counts is not None:
+        csq = jnp.where(counts > 0, csq, 1e30)
+    if isinstance(fmap, RFFMap):
+        statics = dict(map_kind="rff", gamma=1.0, coef0=1.0, degree=1,
+                       scale=fmap.scale)
+        return fmap.w, fmap.b[:, None], c32.T, csq, statics
+    if isinstance(fmap, NystromMap):
+        spec = fmap.spec
+        statics = dict(map_kind=spec.name, gamma=spec.gamma,
+                       coef0=spec.coef0, degree=spec.degree, scale=1.0)
+        aux = jnp.sum(fmap.landmarks.astype(jnp.float32) ** 2, axis=1,
+                      keepdims=True)
+        return fmap.landmarks, aux, fmap.proj.astype(jnp.float32) @ c32.T, \
+            csq, statics
+    raise TypeError(f"unsupported feature map {type(fmap).__name__}")
+
+
+@partial(jax.jit, static_argnames=("map_kind", "gamma", "coef0", "degree",
+                                   "scale", "interpret"))
+def _embed_assign_padded(x, w, aux, v, csq, *, map_kind, gamma, coef0,
+                         degree, scale, interpret):
+    n, d = x.shape
+    m = w.shape[0]
+    cp = _round_up(max(csq.shape[0], 128), 128)
+    bm, bme, bd = _pick_blocks(n, m, d, cp)
+    np_, mp, dp = _round_up(n, bm), _round_up(m, bme), _round_up(d, bd)
+    csq_p = jnp.full((1, cp), 1e30, jnp.float32).at[0, :csq.shape[0]].set(csq)
+    labels, score = embed_assign_pallas(
+        _pad2(x, np_, dp), _pad2(w, mp, dp), _sqnorms(x, np_),
+        _pad2(aux, mp, 1), _pad2(v, mp, cp), csq_p,
+        map_kind=map_kind, gamma=gamma, coef0=coef0, degree=degree,
+        scale=scale, bm=bm, bme=bme, bd=bd, interpret=interpret)
+    return labels[:n, 0], score[:n, 0]
+
+
+def embed_assign(x: Array, fmap, centroids: Array,
+                 counts: Array | None = None, *,
+                 interpret: bool = True) -> tuple[Array, Array]:
+    """Fused feature-map + nearest-centroid assignment.
+
+    labels, score = argmin/min_j (|c_j|^2 - 2 phi_m(x_i).c_j); the embedded
+    batch never materializes in HBM (see kernels/embed_assign.py). ``counts``
+    masks empty clusters (+BIG) like the exact assignment path.
+    """
+    w, aux, v, csq, statics = embed_panels(fmap, centroids, counts)
+    return _embed_assign_padded(x, w, aux, v, csq, interpret=interpret,
+                                **statics)
+
+
 # re-exported oracles so tests/benchmarks import one module
 kernel_matrix_ref = ref.kernel_matrix_ref
 assign_fused_ref = ref.assign_fused_ref
+embed_assign_ref = ref.embed_assign_ref
 
 
 @partial(jax.jit, static_argnames=("causal", "softcap", "interpret"))

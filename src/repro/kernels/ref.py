@@ -51,6 +51,32 @@ def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
     return jnp.argmin(dist, axis=1).astype(jnp.int32), jnp.min(dist, axis=1)
 
 
+def embed_assign_ref(x: Array, w: Array, v: Array, csq: Array, *,
+                     map_kind: str = "rff", gamma: float = 1.0,
+                     coef0: float = 1.0, degree: int = 3,
+                     scale: float = 1.0, b: Array | None = None):
+    """Fused embed+assign oracle (the kernel's correctness contract).
+
+    x: [n, d] rows; w: [M, d] RFF frequencies (map_kind="rff", with phases
+    ``b`` [M]) or Nystrom landmarks (map_kind = Mercer kind); v: [M, C]
+    value panel (centroids^T for RFF, proj @ centroids^T for Nystrom);
+    csq: [C] centroid squared norms (+BIG on masked clusters).
+    Returns (labels [n] int32, score [n] f32) with
+      z = phi_m(x)                               (never materialized on TPU)
+      score_ij = |c_j|^2 - 2 z_i . c_j           (= ||z-c||^2 - ||z||^2)
+      labels = argmin_j score_ij.
+    """
+    if map_kind == "rff":
+        a = x.astype(jnp.float32) @ w.astype(jnp.float32).T
+        e = scale * jnp.cos(a + b.astype(jnp.float32)[None, :])
+    else:
+        e = kernel_matrix_ref(x, w, kind=map_kind, gamma=gamma,
+                              coef0=coef0, degree=degree)
+    f = e @ v.astype(jnp.float32)
+    score = csq[None, :].astype(jnp.float32) - 2.0 * f
+    return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *,
                         causal: bool = True,
                         softcap: float | None = None) -> Array:

@@ -206,15 +206,11 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                    batch_shapes["pos"])
             compiled = lowered.compile()
 
-    cost = dict(compiled.cost_analysis() or {})
+    from repro.distributed.compat import cost_analysis as _ca
+    cost = _ca(compiled)
     try:
-        mem = compiled.memory_analysis()
-        mem_info = {
-            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
-        }
+        from repro.distributed.compat import memory_stats
+        mem_info = memory_stats(compiled)
     except Exception as e:  # CPU backend may not implement it
         mem_info = {"error": str(e)}
     hlo_text = compiled.as_text()

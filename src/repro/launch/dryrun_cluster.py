@@ -35,7 +35,9 @@ import traceback         # noqa: E402
 from functools import partial  # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
+import jax.numpy as jnp
+
+from repro.distributed.compat import shard_map  # noqa: E402
 
 from repro.core.kernels import KernelSpec                       # noqa: E402
 from repro.distributed.inner import DistributedInnerConfig  # noqa: E402,F401
@@ -54,15 +56,11 @@ MODES = {
 
 
 def _analyze(compiled):
-    cost = dict(compiled.cost_analysis() or {})
+    from repro.distributed.compat import cost_analysis as _ca
+    cost = _ca(compiled)
     try:
-        mem = compiled.memory_analysis()
-        mem_info = {
-            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
-        }
+        from repro.distributed.compat import memory_stats
+        mem_info = memory_stats(compiled)
     except Exception as e:
         mem_info = {"error": str(e)}
     hlo_text = compiled.as_text()
@@ -132,7 +130,7 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
 
     with mesh:
         if inner_mode == "fused":
-            fn = jax.shard_map(
+            fn = shard_map(
                 sweep_fused, mesh=mesh,
                 in_specs=(P(row_axes, None),
                           P(col_axis, None) if col_axis else P(None, None),
@@ -143,14 +141,14 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
             sweep_compiled = lowered.compile()
             gram_compiled = None
         else:
-            fn = jax.shard_map(
+            fn = shard_map(
                 sweep_mat, mesh=mesh,
                 in_specs=(kspec, llspec, colspec, rowspec, rowspec),
                 out_specs=rowspec, check_vma=False)
             lowered = jax.jit(lambda *a: fn(*a)).lower(
                 k_xl, k_ll, lidx, lidx, u)
             sweep_compiled = lowered.compile()
-            gfn = jax.shard_map(
+            gfn = shard_map(
                 gram, mesh=mesh,
                 in_specs=(P(row_axes, None),
                           P(col_axis, None) if col_axis else P(None, None)),

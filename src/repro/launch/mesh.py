@@ -11,12 +11,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def data_axes(multi_pod: bool = False) -> tuple[str, ...]:

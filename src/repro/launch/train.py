@@ -21,6 +21,8 @@ import math
 import time
 
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -42,8 +44,7 @@ def build_mesh(spec: str):
             "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     names = ("data", "model")[:len(dims)] if len(dims) <= 2 else \
         ("pod", "data", "model")
-    return jax.make_mesh(
-        dims, names, axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh(dims, names)
 
 
 def synthetic_batches(vocab: int, batch: int, seq: int, steps: int,

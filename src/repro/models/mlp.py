@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -167,7 +169,7 @@ def _moe_block_ep_shardmap(p, x, cfg: ModelConfig, axes: Axes, mesh,
         out = jnp.where(kept[:, None], out, 0.0)             * top_w.reshape(-1)[:, None]
         return jnp.sum(out.reshape(tl, k, d), axis=1).reshape(bl, sl, d)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, s_spec, None), P(None, None),
                   P("data", None, "model"), P("data", None, "model"),

@@ -1,0 +1,301 @@
+"""Tests for the explicit feature-map subsystem (repro.approx).
+
+Covers: Gram approximation quality (error shrinks with m), end-to-end
+``method="rff"|"nystrom"`` fits recovering the exact clustering, the fused
+embed+assign Pallas kernel vs its jnp oracle (interpret mode), the planner's
+embedded-space footprint, and the row-sharded distributed embedded path
+(subprocess, 8 forced host devices — same pattern as test_distributed.py).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import four_blobs
+from repro.approx import (default_embed_dim, make_feature_map, make_nystrom,
+                          make_rff, nystrom_features, rff_features)
+from repro.core import (KernelSpec, MachineSpec, MiniBatchConfig,
+                        embed_footprint_bytes, footprint_bytes, nmi, plan)
+from repro.core.minibatch import fit_dataset
+from repro.kernels import ops, ref
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _gram_err(k_approx, k_exact):
+    return float(jnp.mean(jnp.abs(k_approx - k_exact)))
+
+
+# ---------------------------------------------------------------------------
+# feature-map approximation quality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("orthogonal", [False, True], ids=["iid", "orf"])
+def test_rff_gram_error_shrinks_with_m(orthogonal):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(200, 6)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(120, 6)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.3)
+    k = spec(x, y)
+    errs = []
+    for m in (32, 2048):
+        fmap = make_rff(jax.random.PRNGKey(0), 6, m, spec,
+                        orthogonal=orthogonal)
+        errs.append(_gram_err(rff_features(x, fmap) @ rff_features(y, fmap).T,
+                              k))
+    assert errs[1] < errs[0] / 2, errs          # O(1/sqrt(m)) decay
+    assert errs[1] < 0.05
+
+
+def test_orthogonal_rff_beats_iid_at_same_m():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(256, 8)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.25)
+    k = spec(x, x)
+    errs = {}
+    for orth in (False, True):
+        e = []
+        for seed in range(5):
+            fmap = make_rff(jax.random.PRNGKey(seed), 8, 64, spec,
+                            orthogonal=orth)
+            z = rff_features(x, fmap)
+            e.append(_gram_err(z @ z.T, k))
+        errs[orth] = np.mean(e)
+    assert errs[True] <= errs[False] * 1.05     # ORF no worse on average
+
+
+def test_nystrom_gram_error_shrinks_with_m():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(300, 5)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.5)
+    k = spec(x, x)
+    errs = []
+    for m in (10, 150):
+        fmap = make_nystrom(jax.random.PRNGKey(0), x, m, spec)
+        z = nystrom_features(x, fmap)
+        errs.append(_gram_err(z @ z.T, k))
+    assert errs[1] < errs[0] / 2, errs
+    assert errs[1] < 0.02
+
+
+def test_nystrom_exact_on_landmarks():
+    """The Nystrom map reproduces K exactly on the landmark set itself."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=1.0)
+    fmap = make_nystrom(jax.random.PRNGKey(0), x, 64, spec)  # all landmarks
+    z = nystrom_features(fmap.landmarks, fmap)
+    np.testing.assert_allclose(np.asarray(z @ z.T),
+                               np.asarray(spec(fmap.landmarks,
+                                               fmap.landmarks)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rff_rejects_non_shift_invariant_kernels():
+    with pytest.raises(ValueError, match="shift-invariant"):
+        make_rff(jax.random.PRNGKey(0), 4, 16, KernelSpec("polynomial"))
+    with pytest.raises(ValueError):
+        make_feature_map("sketch", jax.random.PRNGKey(0),
+                         jnp.zeros((8, 4)), 16, KernelSpec("rbf"))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end embedded fits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["rff", "nystrom"])
+def test_embedded_fit_matches_exact_on_blobs(method, blobs):
+    x, y = blobs
+    spec = KernelSpec("rbf", gamma=8.0)
+    exact = fit_dataset(x, MiniBatchConfig(n_clusters=4, n_batches=4,
+                                           kernel=spec, seed=0))
+    labels_exact = np.asarray(exact.predict(x))
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=4, kernel=spec, seed=0,
+                          method=method)          # embed_dim=0 -> m = 4*C
+    res = fit_dataset(x, cfg)
+    assert res.fmap is not None and res.fmap.dim == default_embed_dim(4)
+    labels = np.asarray(res.predict(x))
+    assert nmi(labels_exact, labels) >= 0.9
+    assert nmi(y, labels) >= 0.9
+    # the convex merge accumulates every sample exactly once
+    assert int(np.asarray(res.state.cardinalities).sum()) == len(x)
+
+
+def test_embedded_fit_single_batch_and_config_validation(blobs):
+    x, y = blobs
+    res = fit_dataset(x, MiniBatchConfig(n_clusters=4, n_batches=1,
+                                         kernel=KernelSpec("rbf", gamma=8.0),
+                                         seed=0, method="rff", embed_dim=32))
+    assert res.fmap.dim == 32
+    assert nmi(y, np.asarray(res.predict(x))) >= 0.9
+    with pytest.raises(ValueError, match="method"):
+        MiniBatchConfig(n_clusters=4, method="sketch")
+
+
+# ---------------------------------------------------------------------------
+# fused embed+assign Pallas kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("map_kind", ["rff", "nystrom"])
+@pytest.mark.parametrize("shape", [(64, 16, 32, 5), (100, 30, 77, 13),
+                                   (300, 40, 260, 130)],
+                         ids=["small", "ragged", "multiblock"])
+def test_embed_assign_matches_oracle(map_kind, shape):
+    n, d, m, c = shape
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    centroids = jnp.asarray(rng.normal(size=(c, m)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    if map_kind == "rff":
+        fmap = make_rff(key, d, m, spec)
+    else:
+        fmap = make_nystrom(key, x, m, spec)
+    labels, score = ops.embed_assign(x, fmap, centroids, interpret=True)
+    w, aux, v, csq, statics = ops.embed_panels(fmap, centroids)
+    b = aux[:, 0] if map_kind == "rff" else None
+    want_labels, want_score = ref.embed_assign_ref(x, w, v, csq, b=b,
+                                                   **statics)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(want_labels))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(want_score),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_predict_masks_empty_clusters_like_jnp_path():
+    """predict_embedded must agree between the fused and jnp paths even
+    when a cluster is empty (zero centroid would otherwise win every
+    |c|^2 - 2 z.c comparison in the fused score)."""
+    from repro.approx import EmbedState, predict_embedded
+
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(20, 8)).astype(np.float32))
+    fmap = make_rff(jax.random.PRNGKey(0), 8, 16, KernelSpec("rbf"))
+    centroids = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+    centroids = centroids.at[1].set(0.0)          # empty cluster, zero mean
+    state = EmbedState(centroids=centroids,
+                       cardinalities=jnp.asarray([10.0, 0.0, 10.0]),
+                       batches_done=jnp.array(1, jnp.int32))
+    l_jnp = np.asarray(predict_embedded(x, state, fmap, use_fused=False))
+    l_fused = np.asarray(predict_embedded(x, state, fmap, use_fused=True))
+    np.testing.assert_array_equal(l_jnp, l_fused)
+    assert not np.any(l_fused == 1)
+
+
+def test_embed_assign_masks_empty_clusters():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(32, 8)).astype(np.float32))
+    centroids = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    fmap = make_rff(jax.random.PRNGKey(0), 8, 16, KernelSpec("rbf"))
+    counts = jnp.asarray([5.0, 0.0, 3.0, 2.0])
+    labels, _ = ops.embed_assign(x, fmap, centroids, counts, interpret=True)
+    assert not np.any(np.asarray(labels) == 1)
+
+
+# ---------------------------------------------------------------------------
+# memory planner
+# ---------------------------------------------------------------------------
+
+
+def test_plan_reports_embedded_footprint():
+    machine = MachineSpec(memory_bytes=16e9, n_processors=256)
+    p = plan(10_000_000, 100, machine, d=784)
+    assert p.embed_dim == 400                       # default m = 4*C
+    assert np.isfinite(p.embed_footprint) and p.embed_footprint > 0
+    # embedded rows are m wide vs s*N/B kernel columns: embed must win here
+    assert p.embed_footprint < p.footprint
+    assert p.method == "embed"
+    # explicit m overrides the default
+    assert plan(10_000_000, 100, machine, embed_dim=64).embed_dim == 64
+
+
+def test_embed_footprint_scaling():
+    base = embed_footprint_bytes(1_000_000, 10, 16, 8, m=64)
+    assert embed_footprint_bytes(1_000_000, 10, 16, 8, m=128) > base
+    assert embed_footprint_bytes(1_000_000, 20, 16, 8, m=64) < base
+    # kernel-block footprint grows with N/B quadratically; embedded linearly
+    k = footprint_bytes(1_000_000, 10, 16, 8)
+    assert base < k
+
+
+# ---------------------------------------------------------------------------
+# distributed embedded path
+# ---------------------------------------------------------------------------
+
+
+def _run_subprocess(body: str) -> dict:
+    script = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_embed_single_device_mesh(blobs):
+    """1-device mesh must reproduce the single-device embedded fit."""
+    from repro.data.sampling import split_batches
+    from repro.distributed import DistributedEmbedKMeans, make_test_mesh
+
+    x, y = blobs
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=4,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0,
+                          method="rff")
+    single = fit_dataset(x, cfg)
+    mesh = make_test_mesh({"data": 1})
+    dist = DistributedEmbedKMeans(mesh, cfg).fit(
+        split_batches(x, 4, strategy="stride"))
+    assert nmi(np.asarray(single.predict(x)),
+               np.asarray(dist.predict(x))) >= 0.99
+    assert int(np.asarray(dist.state.cardinalities).sum()) == len(x)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["rff", "nystrom"])
+def test_distributed_embed_matches_truth_8dev(method):
+    """Row-sharded embedded path on 8 devices recovers the clustering,
+    including the weight-masked row padding (n not divisible by 8)."""
+    res = _run_subprocess(f"""
+        from repro.core import MiniBatchConfig, KernelSpec
+        from repro.core.metrics import nmi
+        from repro.data.sampling import split_batches
+        from repro.distributed import DistributedEmbedKMeans
+        from repro.distributed.compat import make_mesh
+
+        rng = np.random.default_rng(0)
+        centers = np.array([[0.25,0.25],[0.75,0.75],[0.25,0.75],[0.75,0.25]])
+        X = np.concatenate([rng.normal(c, 0.05, size=(515, 2))
+                            for c in centers]).astype(np.float32)
+        y = np.repeat(np.arange(4), 515)
+        perm = rng.permutation(len(X)); X, y = X[perm], y[perm]
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = MiniBatchConfig(n_clusters=4, n_batches=4, seed=0,
+                              kernel=KernelSpec("rbf", gamma=8.0),
+                              method="{method}")
+        km = DistributedEmbedKMeans(mesh, cfg)
+        res = km.fit(split_batches(X, 4, strategy="stride"))
+        labels = np.asarray(res.predict(jnp.asarray(X)))
+        total = int(np.asarray(res.state.cardinalities).sum())
+        print(json.dumps({{"nmi": nmi(y, labels), "total": total,
+                           "n": len(X)}}))
+    """)
+    assert res["nmi"] >= 0.9
+    assert res["total"] == res["n"]     # padding never counted

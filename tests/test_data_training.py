@@ -1,5 +1,7 @@
 """Data pipeline + optimizer/training-step unit tests."""
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -148,8 +150,7 @@ def test_microbatch_accumulation_matches_full_batch():
     tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (8, 16)), jnp.int32)
     batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     with mesh:
         t1 = TrainConfig(remat=False, microbatches=1)
         t4 = TrainConfig(remat=False, microbatches=4)

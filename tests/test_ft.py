@@ -6,6 +6,8 @@ import sys
 import textwrap
 
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -90,6 +92,7 @@ def test_elastic_reshard_across_meshes():
         from repro.data.sampling import split_batches
         from repro.ft.checkpoint import CheckpointManager
         from repro.ft.elastic import ElasticClusteringRunner, SimulatedFailure
+        from repro.distributed.compat import make_mesh
 
         rng = np.random.default_rng(0)
         centers = np.array([[0.25,0.25],[0.75,0.75],[0.25,0.75],[0.75,0.25]])
@@ -102,7 +105,7 @@ def test_elastic_reshard_across_meshes():
 
         with tempfile.TemporaryDirectory() as d:
             runner = ElasticClusteringRunner(cfg, CheckpointManager(d))
-            mesh_big = jax.make_mesh((4, 2), ("data", "model"))
+            mesh_big = make_mesh((4, 2), ("data", "model"))
             try:
                 runner.run(mesh_big, batches, fail_after=2)
                 raise SystemExit("expected SimulatedFailure")
@@ -151,8 +154,7 @@ def test_training_checkpoint_restore_exact(tmp_path):
     tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 32)), jnp.int32)
     batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
     with mesh:
         p1, o1, _ = step(params, opt, batch)
         cm = CheckpointManager(str(tmp_path))

@@ -116,8 +116,8 @@ def test_sharded_collective_accounting():
         def f(a, b):
             return jnp.sum(a @ b)
 
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.distributed.compat import make_mesh
+        mesh = make_mesh((8,), ("d",))
         a = jax.ShapeDtypeStruct((256, 128), jnp.float32)
         b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
         hlo = jax.jit(f, in_shardings=(

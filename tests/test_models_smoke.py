@@ -5,6 +5,8 @@ forward/train step on CPU, and asserts output shapes + finite values. The
 full configs are exercised only via the dry-run (no allocation here).
 """
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -21,8 +23,7 @@ B, S = 2, 32
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _batch(cfg: ModelConfig, key=0):

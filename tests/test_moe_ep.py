@@ -2,6 +2,8 @@
 import dataclasses
 
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -24,8 +26,7 @@ def _setup(ep_groups, capacity_factor=100.0):
     cfg = dataclasses.replace(base, capacity_factor=capacity_factor,
                               moe_ep_groups=ep_groups)
     api = get_model(cfg, tp_size=1)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(0)
     tok = jnp.asarray(rng.integers(1, base.vocab_size, (2, 32)), jnp.int32)
     batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
@@ -89,6 +90,7 @@ def test_ep_multidevice_shardmap():
         from repro.configs import get_arch
         from repro.models import Axes, get_model
         from repro.models.common import set_ambient_mesh
+        from repro.distributed.compat import make_mesh
 
         AXES = Axes(dp=("data",), tp="model")
         base = get_arch("qwen3-moe-235b-a22b", smoke=True)
@@ -98,8 +100,7 @@ def test_ep_multidevice_shardmap():
         batch = {"tokens": tok, "labels": jnp.roll(tok, -1, 1)}
 
         def run(mesh_shape, ep):
-            mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            mesh = make_mesh(mesh_shape, ("data", "model"))
             cfg = dataclasses.replace(base, capacity_factor=100.0,
                                       moe_ep_groups=ep)
             api = get_model(cfg, tp_size=mesh_shape[1])

@@ -5,6 +5,8 @@ The sweep deliberately includes shapes that do NOT divide the default block
 sizes (padding paths) and bf16 inputs (fp32 accumulation contract).
 """
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -150,8 +152,7 @@ def test_attn_impl_flash_equals_chunked_end_to_end():
     from repro.configs import get_arch
     from repro.models import Axes, get_model
     axes = Axes(dp=("data",), tp="model")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     base = get_arch("olmo-1b", smoke=True)
     apic = get_model(base, tp_size=1)
     apif = get_model(dataclasses.replace(base, attn_impl="flash"), tp_size=1)

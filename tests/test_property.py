@@ -1,7 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (MachineSpec, b_min, b_min_paper, clustering_accuracy,
                         footprint_bytes, nmi, num_landmarks)

@@ -2,6 +2,8 @@
 must reproduce the full-sequence forward logits (the serving-correctness
 contract for every family's KV/state cache)."""
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,8 +16,7 @@ B, PREFIX, EXTRA = 2, 12, 4
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _tokens(cfg, s, seed=0):

@@ -1,5 +1,7 @@
 """Continuous-batching engine: scheduling + per-slot-cursor correctness."""
 import jax
+
+from repro.distributed.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,8 +14,7 @@ AXES = Axes(dp=("data",), tp="model")
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _engine(arch, **kw):
