@@ -1,11 +1,29 @@
-"""Shared benchmark utilities: result recording + table printing."""
+"""Shared benchmark utilities: result recording, table printing, and the
+nearest-centroid assignment every linear baseline shares."""
 from __future__ import annotations
 
 import json
 import os
 import time
 
+import numpy as np
+
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+
+def nearest_centroid(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
+    """argmin_j ||x_i - c_j||^2 -> [n] labels.
+
+    The full expansion ||x||^2 - 2 x.c + ||c||^2 — the per-cluster
+    ||c_j||^2 term varies with j and MUST be included (dropping it once
+    misreported every Tab.2 baseline metric); the row-constant ||x||^2 is
+    kept only so the distances are true squared distances.
+    """
+    x = np.asarray(x, np.float64)
+    centers = np.asarray(centers, np.float64)
+    d = ((x ** 2).sum(1)[:, None] - 2.0 * x @ centers.T
+         + (centers ** 2).sum(1)[None, :])
+    return d.argmin(1)
 
 
 def save(name: str, payload: dict):

@@ -29,8 +29,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (hours); default is fast mode")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-size runs (the default; explicit flag for "
+                         "smoke-test invocations)")
     ap.add_argument("--only", default=None, choices=sorted(ALL))
     args = ap.parse_args(argv)
+    if args.full and args.fast:
+        ap.error("--full and --fast are mutually exclusive")
 
     todo = {args.only: ALL[args.only]} if args.only else ALL
     failures = []

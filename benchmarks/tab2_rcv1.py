@@ -1,11 +1,20 @@
 """Paper Tab.2: RCV1 (log TF-IDF -> 256-d random projection) for
-B in {4, 16, 64}.
+B in {4, 16, 64}, plus the O(nnz) sparse high-dim path the projection
+exists to avoid.
 
 Paper: acc ~16-17%, NMI 0.13-0.15 (50+ heavy-tailed classes are HARD), time
 falls ~B x. Claims validated: same envelope on the synthetic RCV1 generator
-— absolute accuracy is low for everyone, the mini-batch approximation stays
-within noise of B=4, time drops with B, and kernel k-means beats the
-paper's own linear baseline on NMI.
+— the mini-batch approximation stays within noise of B=4 and time drops
+with B. NOTE: an earlier revision reported the linear baseline with a
+nearest-centroid formula that dropped the per-cluster +||c||^2 term
+(benchmarks/common.nearest_centroid fixes it); with the correct assignment
+the linear baseline is strong on this synthetic envelope and the
+"kernel NMI >= linear" claim is recorded but not expected to hold.
+
+The ``sparse`` grid runs ``MiniBatchConfig(method="sketch")`` directly on
+the CSR term vectors (no dense 256-d projection at all): count-sketch
+embeds each mini-batch in O(nnz), so the full vocab dimensionality flows
+through fit/predict while only [n, m] embeddings ever materialize.
 """
 from __future__ import annotations
 
@@ -15,10 +24,11 @@ import jax.numpy as jnp
 from repro.baselines.lloyd import kmeans
 from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
                         gamma_from_dmax, nmi)
-from repro.core.minibatch import fit_dataset, predict
-from repro.data.synthetic import make_rcv1_like
+from repro.core.minibatch import fit, fit_dataset, predict
+from repro.data.sparse import split_csr, take_rows
+from repro.data.synthetic import make_rcv1_like, make_rcv1_sparse
 
-from .common import Timer, save, table
+from .common import Timer, nearest_centroid, save, table
 
 
 def run(fast: bool = True):
@@ -35,9 +45,7 @@ def run(fast: bool = True):
     rows, payload = [], {"B": {}}
     with Timer() as t:
         base = kmeans(x_tr[:20000], c, n_init=1, seed=0)
-    d = ((x_te ** 2).sum(1)[:, None]
-         - 2 * x_te @ np.asarray(base.centers).T)
-    bl = d.argmin(1)
+    bl = nearest_centroid(x_te, np.asarray(base.centers))
     payload["baseline"] = {"acc": clustering_accuracy(y_te, bl),
                            "nmi": nmi(y_te, bl), "seconds": t.seconds}
     rows.append(["baseline (linear)",
@@ -56,15 +64,42 @@ def run(fast: bool = True):
                      f"{t.seconds:.1f}s"])
         payload["B"][b] = {"acc": acc, "nmi": nm, "seconds": t.seconds}
 
+    # -- true sparse high-dim path: CSR term vectors, count-sketch embedding,
+    #    no dense projection; d = full vocab, embedding cost O(nnz).
+    vocab = 4096 if fast else 47236
+    xs, ys = make_rcv1_sparse(n + n_test, vocab=vocab,
+                              n_classes=n_classes, seed=0)
+    xs_tr = take_rows(xs, np.arange(n))
+    xs_te = take_rows(xs, np.arange(n, n + n_test))
+    ys_te = ys[n:]
+    payload["sparse"] = {"vocab": vocab, "nnz_per_row": xs.nnz / len(xs),
+                         "B": {}}
+    for b in bs:
+        cfg = MiniBatchConfig(n_clusters=c, n_batches=b,
+                              kernel=KernelSpec("linear"), seed=0,
+                              method="sketch", embed_dim=256)
+        with Timer() as t:
+            res = fit(split_csr(xs_tr, b, strategy="stride"), cfg)
+        labels = np.asarray(res.predict(xs_te))
+        acc, nm = clustering_accuracy(ys_te, labels), nmi(ys_te, labels)
+        rows.append([f"sketch d={vocab} B={b}", f"{acc*100:.2f}",
+                     f"{nm:.3f}", f"{t.seconds:.1f}s"])
+        payload["sparse"]["B"][b] = {"acc": acc, "nmi": nm,
+                                     "seconds": t.seconds}
+
     table(f"Tab.2 — RCV1-like ({n} docs, {c} classes), B sweep",
           ["run", "accuracy %", "NMI", "time"], rows)
     times = [payload["B"][b]["seconds"] for b in bs]
     payload["claim_time_drops_with_B"] = bool(times[-1] < times[0])
     payload["claim_kernel_nmi_ge_linear"] = bool(
         payload["B"][bs[0]]["nmi"] >= payload["baseline"]["nmi"] - 0.01)
-    print(f"[tab2] NMI(B): "
-          f"{[f'{payload['B'][b]['nmi']:.3f}' for b in bs]} vs linear "
-          f"{payload['baseline']['nmi']:.3f}")
+    payload["claim_sparse_beats_baseline_nmi"] = bool(
+        max(payload["sparse"]["B"][b]["nmi"] for b in bs)
+        >= payload["baseline"]["nmi"] - 0.01)
+    nmi_b = ["%.3f" % payload["B"][b]["nmi"] for b in bs]
+    nmi_sp = ["%.3f" % payload["sparse"]["B"][b]["nmi"] for b in bs]
+    print("[tab2] NMI(B): %s vs linear %.3f; sparse sketch NMI(B): %s"
+          % (nmi_b, payload["baseline"]["nmi"], nmi_sp))
     save("tab2_rcv1", payload)
     return payload
 

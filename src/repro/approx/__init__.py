@@ -1,7 +1,39 @@
-# Explicit low-rank feature maps (RFF / Nystrom) that turn kernel k-means
-# into linear k-means in an m-dimensional embedded space — the second
-# accuracy/velocity knob next to the paper's (B, s). See DESIGN notes in
-# each module; dispatch happens in repro.core.minibatch via cfg.method.
+"""Explicit feature maps that turn kernel k-means into linear k-means.
+
+Every map obeys one FeatureMap contract — ``dim`` (embedding width m),
+``in_dim`` (d), ``__call__`` (rows -> [n, m] f32) and pytree registration —
+so the embedded mini-batch driver, ``FitResult.predict``, the fused Pallas
+kernels and the row-sharded distributed path are map-agnostic; dispatch
+happens in ``repro.core.minibatch`` via ``MiniBatchConfig.method``.
+
+Choosing a method
+-----------------
+* ``exact`` — the paper's medoid algorithm; any Mercer kernel, no
+  approximation beyond (B, s). Kernel evaluations cost O(s (N/B)^2) per
+  batch: the right choice when batches are small or the kernel is exotic.
+* ``rff`` (+ ``rff_orthogonal=True``) — random Fourier features, **rbf
+  only**; O(n d m) dense projection, error O(1/sqrt(m)) independent of the
+  data. Use for dense mid-dimensional rbf workloads (images, trajectories).
+* ``nystrom`` — landmark embedding, **any Mercer kernel**, exact on the
+  landmark subspace, error tracks the kernel's spectral decay; costs an
+  [m, m] eigendecomposition up front plus O(n m) kernel evaluations per
+  batch. Best accuracy-per-m on smooth kernels; the only embedded choice
+  for non-rbf, non-polynomial kernels.
+* ``sketch`` — count-sketch / feature hashing, **linear kernel**; applying
+  it touches only nonzero coordinates, so on CSR batches
+  (``repro.data.sparse``) the embedding is O(nnz) — independent of d. The
+  sparse path wins whenever d is huge and rows are sparse (RCV1-style text:
+  d ~ 50k, ~100 nnz/row) where even materializing the dense batch is the
+  bottleneck; the map itself stores two O(d) integer tables, vs the O(m d)
+  dense RFF frequency matrix.
+* ``tensorsketch`` — Pham-Pagh FFT composition of count-sketches,
+  **polynomial kernel** ``(gamma x.y + coef0)^degree``; O(p (nnz + m log m))
+  per row, also d-free. The only embedded polynomial map that never forms
+  the degree-p tensor product.
+
+``core.memory.plan`` compares the kernel-block, dense-embedded and sketch
+footprints and names the cheapest method for a workload.
+"""
 from __future__ import annotations
 
 import jax
@@ -12,8 +44,12 @@ from .embed_kmeans import (EmbedInnerResult, EmbedState, assign_embedded,
                            fit_embedded, lloyd_fit, predict_embedded)
 from .nystrom import NystromMap, make_nystrom, nystrom_features
 from .rff import RFFMap, make_rff, rff_features
+from .sketch import (CountSketchMap, TensorSketchMap, count_sketch_features,
+                     count_sketch_features_csr, make_count_sketch,
+                     make_tensor_sketch, tensor_sketch_features,
+                     tensor_sketch_features_csr)
 
-METHODS = ("rff", "nystrom")
+METHODS = ("rff", "nystrom", "sketch", "tensorsketch")
 
 
 def default_embed_dim(n_clusters: int) -> int:
@@ -22,12 +58,28 @@ def default_embed_dim(n_clusters: int) -> int:
     return 4 * n_clusters
 
 
-def make_feature_map(method: str, key: jax.Array, x_sample: jax.Array,
-                     m: int, spec: KernelSpec, *, orthogonal: bool = False):
-    """Build an RFF or Nystrom map from a data sample (first mini-batch)."""
+def make_feature_map(method: str, key: jax.Array, x_sample, m: int,
+                     spec: KernelSpec, *, orthogonal: bool = False):
+    """Build a feature map from a data sample (first mini-batch).
+
+    ``x_sample`` may be dense [n, d] or a ``repro.data.sparse.CSRBatch``;
+    the data-oblivious sketch maps only read its column count, while
+    RFF/Nystrom need dense rows (Nystrom gathers landmark rows, RFF the
+    feature dim) — a sparse sample is rejected for those.
+    """
+    from repro.data.sparse import is_sparse
+
+    d = x_sample.shape[1]
+    if method == "sketch":
+        return make_count_sketch(key, d, m, spec)
+    if method == "tensorsketch":
+        return make_tensor_sketch(key, d, m, spec)
+    if is_sparse(x_sample):
+        raise ValueError(
+            f"method {method!r} needs dense samples; only the sketch maps "
+            "('sketch' | 'tensorsketch') accept CSR batches")
     if method == "rff":
-        return make_rff(key, x_sample.shape[1], m, spec,
-                        orthogonal=orthogonal)
+        return make_rff(key, d, m, spec, orthogonal=orthogonal)
     if method == "nystrom":
         return make_nystrom(key, x_sample, m, spec)
     raise ValueError(f"unknown feature-map method {method!r}; have {METHODS}")
@@ -37,6 +89,10 @@ __all__ = [
     "METHODS", "default_embed_dim", "make_feature_map",
     "RFFMap", "make_rff", "rff_features",
     "NystromMap", "make_nystrom", "nystrom_features",
+    "CountSketchMap", "make_count_sketch", "count_sketch_features",
+    "count_sketch_features_csr",
+    "TensorSketchMap", "make_tensor_sketch", "tensor_sketch_features",
+    "tensor_sketch_features_csr",
     "EmbedState", "EmbedInnerResult", "assign_embedded", "fit_embedded",
     "lloyd_fit", "predict_embedded",
 ]

@@ -1,6 +1,7 @@
 """Mini-batch Lloyd in explicit feature space (the embedded-space driver).
 
-With an explicit map z = phi_m(x) (RFF or Nystrom), kernel k-means becomes
+With an explicit map z = phi_m(x) (RFF, Nystrom or a sketch map), kernel
+k-means becomes
 linear k-means on Z — centroids are real [C, m] vectors, so the paper's
 medoid machinery (Eq.7/10) is unnecessary: batch centroids are exact cluster
 means and the Eq.12 convex merge
@@ -28,6 +29,7 @@ import numpy as np
 from repro.core.init import kmeans_pp_indices
 from repro.core.kernels import KernelSpec
 from repro.core.kkmeans import BIG
+from repro.data.sparse import is_sparse
 
 Array = jax.Array
 
@@ -159,7 +161,7 @@ def fit_embedded(
     start = int(state.batches_done) if state is not None else 0
 
     for i, xb in enumerate(batches, start=start):
-        z = fmap(jnp.asarray(xb))
+        z = fmap(xb if is_sparse(xb) else jnp.asarray(xb))
         sub = jax.random.fold_in(key, i)
         if state is None:
             state, res = _first_batch_step(z, sub, n_clusters=n_clusters,
@@ -182,14 +184,20 @@ def fit_embedded(
     return state, history
 
 
-def predict_embedded(x: Array, state: EmbedState, fmap, *,
+def predict_embedded(x, state: EmbedState, fmap, *,
                      use_fused: bool | None = None) -> Array:
     """Label new samples by nearest centroid in embedded space.
 
     On TPU (or with ``use_fused=True``) this goes through the fused Pallas
     embed+assign kernel — the [n, m] embedding never materializes in HBM.
+    CSR batches take the O(nnz) jnp sketch path instead (the fused kernel
+    consumes dense row tiles).
     """
     from repro.kernels.ops import embed_assign, use_pallas
+    if is_sparse(x):
+        labels, _ = assign_embedded(fmap(x), state.centroids,
+                                    state.cardinalities)
+        return labels
     fused = use_pallas() if use_fused is None else use_fused
     if fused:
         labels, _ = embed_assign(x, fmap, state.centroids,

@@ -21,6 +21,16 @@ the embedded mini-batch is linear in the batch size,
 frequencies / Nystrom landmarks+whitening). ``plan`` computes this next to
 the kernel-block footprint and picks whichever method is cheaper at the
 chosen (B, s) — the embedded method wins whenever m < s*N/B + C.
+
+Sketch maps (count-sketch / TensorSketch, repro.approx.sketch) shrink the
+map-parameter term to O(d) integer tables and — on sparse inputs — the
+batch storage to O(nnz):
+
+    M_sketch(B) = Q * ( N/(B*P) * m + C*m ) + 5*d + 2*Q*rho*d*N/(B*P)
+
+(rho = input density; data+index pairs for the CSR rows, 4-byte hash +
+1-byte sign per input dim). ``plan(sketchable=True)`` lets the auto-pick
+name "sketch" for linear/polynomial-kernel workloads.
 """
 from __future__ import annotations
 
@@ -61,13 +71,34 @@ def embed_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
 
     Embedded rows Z [rows, m] + centroids [C, m] + the replicated map
     parameters (frequencies/landmarks [m, d] and, generously, an [m, m]
-    whitening block for Nystrom). The fused embed+assign kernel would drop
-    the Z term too, but this reports the materialized (default) path.
+    whitening block for Nystrom) + the dense input rows themselves (d > 0:
+    the batch must live on-node to be projected — the term the sparse
+    sketch path shrinks to O(nnz)). The fused embed+assign kernel would
+    drop the Z term too, but this reports the materialized (default) path.
     """
     nb = n / b
     rows = nb / p
-    map_params = m * d + m * m if d else 0.0
+    map_params = (m * d + m * m + rows * d) if d else 0.0
     return q * (rows * m + c * m + rows + map_params)
+
+
+def sketch_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
+                           m: int, d: int = 0,
+                           density: float = 1.0) -> float:
+    """Per-node bytes for one sketch-embedded (count-sketch) batch iteration.
+
+    Embedded rows Z [rows, m] + centroids [C, m] like the dense-embedded
+    path, but the map parameters are two O(d) tables (int32 hash + int8
+    sign = 5 bytes/dim, replicated) instead of the [m, d] float projection,
+    and the input rows are stored sparse: ``density`` * d (value, index)
+    pairs per row. At RCV1-like density (~1e-2) this is what makes d ~ 50k
+    workloads fit where the dense-embedded path cannot even hold X.
+    """
+    nb = n / b
+    rows = nb / p
+    sparse_rows = 2.0 * q * rows * d * density if d else 0.0
+    tables = 5.0 * d
+    return q * (rows * m + c * m + rows) + tables + sparse_rows
 
 
 def b_min(n: int, c: int, machine: MachineSpec, *, s: float = 1.0) -> int:
@@ -104,11 +135,13 @@ class Plan:
     note: str
     embed_dim: int = 0                   # m used for the embedded estimate
     embed_footprint: float = float("inf")
-    method: str = "exact"                # "exact" | "embed" (cheaper one)
+    method: str = "exact"        # "exact" | "embed" | "sketch" (cheapest)
+    sketch_footprint: float = float("inf")
 
 
 def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
          embed_dim: int | None = None,
+         sketchable: bool = False, density: float = 1.0,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
     """§4.2 model-selection rationale, automated.
@@ -124,6 +157,13 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     ``MiniBatchConfig(method="rff")`` / ``method="nystrom"`` — the memory
     model cannot choose between them (same footprint shape); that choice
     follows from the kernel (rbf -> either; anything else -> nystrom).
+
+    ``sketchable=True`` declares the workload sketch-compatible (linear or
+    polynomial kernel — the planner cannot infer that from shapes): the
+    sketch footprint (O(d) map tables + ``density``-sparse input rows,
+    ``sketch_footprint_bytes``) then competes in the auto-pick and
+    ``method`` may come back ``"sketch"`` — i.e.
+    ``MiniBatchConfig(method="sketch" | "tensorsketch")`` on CSR batches.
     """
     b = b_min(n, c, machine)
     s = 1.0
@@ -144,8 +184,16 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     p, q = machine.n_processors, machine.bytes_per_scalar
     fp = footprint_bytes(n, b, c, p, q, s=s, d=d)
     fp_embed = embed_footprint_bytes(n, b, c, p, q, m=m, d=d)
-    method = "embed" if fp_embed < fp else "exact"
-    if method == "embed":
+    fp_sketch = (sketch_footprint_bytes(n, b, c, p, q, m=m, d=d,
+                                        density=density)
+                 if sketchable else float("inf"))
+    method = "exact"
+    if fp_sketch < min(fp, fp_embed):
+        method = "sketch"
+        note += (f"; O(nnz) sketch (m={m}, density={density:g}) is cheapest "
+                 "— consider method='sketch'/'tensorsketch' on CSR batches")
+    elif fp_embed < fp:
+        method = "embed"
         note += f"; embedded space (m={m}) is cheaper — consider method='rff'/'nystrom'"
     return Plan(
         b=b, s=s,
@@ -155,4 +203,5 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
         embed_dim=m,
         embed_footprint=fp_embed,
         method=method,
+        sketch_footprint=fp_sketch,
     )

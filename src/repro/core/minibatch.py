@@ -52,14 +52,16 @@ class MiniBatchConfig:
     restrict_medoids_to_members: bool = False  # Eq.7 is unrestricted
     landmark_multiple_of: int = 1        # distributed runtime alignment
     # -- explicit feature-map knobs (repro.approx; orthogonal to (B, s)) --
-    method: str = "exact"                # "exact" | "rff" | "nystrom"
+    method: str = "exact"  # "exact" | "rff" | "nystrom" | "sketch" | "tensorsketch"
     embed_dim: int = 0                   # m; 0 -> approx.default_embed_dim(C)
     rff_orthogonal: bool = False         # ORF variant (lower variance)
 
+    _METHODS = ("exact", "rff", "nystrom", "sketch", "tensorsketch")
+
     def __post_init__(self):
-        if self.method not in ("exact", "rff", "nystrom"):
+        if self.method not in self._METHODS:
             raise ValueError(
-                f"method must be 'exact', 'rff' or 'nystrom', "
+                f"method must be one of {self._METHODS}, "
                 f"got {self.method!r}")
 
 
@@ -85,14 +87,24 @@ class FitResult(NamedTuple):
     spec: Optional[KernelSpec] = None
 
     def predict(self, x) -> Array:
-        """Label new samples with whatever space this result was fit in."""
-        x = jnp.asarray(x)
+        """Label new samples with whatever space this result was fit in.
+
+        ``x`` may be dense rows or a ``repro.data.sparse.CSRBatch`` (sketch
+        maps only).
+        """
+        from repro.data.sparse import is_sparse
+        if not is_sparse(x):
+            x = jnp.asarray(x)
         if self.fmap is not None:
             from repro.approx import predict_embedded
             return predict_embedded(x, self.state, self.fmap)
-        spec = self.spec if self.spec is not None else KernelSpec()
+        if self.spec is None:
+            raise ValueError(
+                "FitResult.spec is not set: exact-path prediction needs the "
+                "KernelSpec the model was fit with (a default rbf/gamma=1.0 "
+                "would silently assign with the wrong kernel)")
         return predict(x, self.state.medoids, self.state.medoid_diag,
-                       spec=spec)
+                       spec=self.spec)
 
 
 # ---------------------------------------------------------------------------
@@ -212,12 +224,14 @@ def fit(
     Passing a previous ``state`` resumes after a restart (the iterable should
     then yield only the remaining batches).
 
-    With ``cfg.method in ("rff", "nystrom")`` the loop runs in the explicit
+    With ``cfg.method != "exact"`` the loop runs in the explicit
     m-dimensional embedded space instead (repro.approx): the feature map is
     sampled from the first mini-batch, every batch is embedded once, and the
     inner loop is plain Lloyd — no kernel-block evaluation at all. ``fmap``
     carries a previously sampled map across a restart (required when
-    resuming an embedded fit; the map is part of the model).
+    resuming an embedded fit; the map is part of the model). The sketch
+    methods additionally accept ``repro.data.sparse.CSRBatch`` mini-batches,
+    keeping the embedding step O(nnz) for high-dimensional sparse rows.
     """
     if cfg.method != "exact":
         return _fit_embedded(batches, cfg, state=state,
@@ -231,7 +245,12 @@ def fit(
         n = xb.shape[0]
         n_l = num_landmarks(n, cfg.s, n_clusters=cfg.n_clusters,
                             multiple_of=cfg.landmark_multiple_of)
-        key, sub = jax.random.split(jax.random.fold_in(key, i))
+        # Pure per-batch key schedule: batch i's key depends only on
+        # (cfg.seed, i), never on how many batches this process has already
+        # run — a resumed fit (state restored, i starting at batches_done)
+        # must draw the same landmarks as the uninterrupted run
+        # (checkpoint/restart guarantee; same schedule as the embedded path).
+        sub = jax.random.fold_in(key, i)
         if state is None:
             state, res = _first_batch_step(xb, sub, cfg=cfg, n_landmarks=n_l)
             disp = jnp.zeros((cfg.n_clusters,), jnp.float32)
@@ -257,6 +276,7 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
     import itertools
 
     from repro import approx
+    from repro.data.sparse import is_sparse
 
     it = iter(batches)
     if fmap is None:
@@ -265,9 +285,11 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
                 "resuming an embedded fit requires the original fmap "
                 "(the sampled feature map is part of the model)")
         try:
-            first = jnp.asarray(next(it))
+            first = next(it)
         except StopIteration:
             raise ValueError("empty batch iterable") from None
+        if not is_sparse(first):
+            first = jnp.asarray(first)
         m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
         fmap = approx.make_feature_map(
             cfg.method, jax.random.PRNGKey(cfg.seed), first, m, cfg.kernel,

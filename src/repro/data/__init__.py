@@ -1,11 +1,16 @@
 from .sampling import batch_indices, split_batches, stream_blocks
+from .sparse import (CSRBatch, csr_from_dense, is_sparse, split_csr,
+                     take_rows, to_dense)
 from .synthetic import (make_blobs, make_md_trajectory, make_mnist_like,
-                        make_noisy_replicas, make_rcv1_like, toy2d)
+                        make_noisy_replicas, make_rcv1_like,
+                        make_rcv1_sparse, toy2d)
 from .loader import PrefetchLoader
 
 __all__ = [
     "batch_indices", "split_batches", "stream_blocks",
+    "CSRBatch", "csr_from_dense", "is_sparse", "split_csr", "take_rows",
+    "to_dense",
     "make_blobs", "make_md_trajectory", "make_mnist_like",
-    "make_noisy_replicas", "make_rcv1_like", "toy2d",
+    "make_noisy_replicas", "make_rcv1_like", "make_rcv1_sparse", "toy2d",
     "PrefetchLoader",
 ]

@@ -85,6 +85,53 @@ def make_rcv1_like(n: int = 188000, d: int = 256, n_classes: int = 50,
     return x[perm], y[perm]
 
 
+def make_rcv1_sparse(n: int = 188000, vocab: int = 20000,
+                     n_classes: int = 50, *, words_per_topic: float = 48.0,
+                     seed: int = 0):
+    """RCV1 envelope *before* the paper's dense 256-d projection: log TF-IDF
+    documents kept sparse over a ``vocab``-dimensional term space (~tens of
+    nonzeros per document, heavy-tailed class sizes).
+
+    Returns ``(CSRBatch [n, vocab], y int32 [n])`` — the workload the
+    O(nnz) count-sketch path exists for; densifying it is exactly what
+    ``benchmarks/tab2_rcv1.py``'s sparse grid avoids.
+    """
+    from .sparse import CSRBatch
+
+    rng = np.random.default_rng(seed)
+    sizes = (1.0 / np.arange(1, n_classes + 1)) ** 1.1
+    sizes = np.maximum((sizes / sizes.sum() * n).astype(np.int64), 1)
+    sizes[0] += n - sizes.sum()
+    y = np.repeat(np.arange(n_classes), sizes).astype(np.int32)
+
+    datas, cols, lens = [], [], []
+    for j in range(n_classes):
+        n_j = int(sizes[j])
+        topic = np.where(rng.random(vocab) < (words_per_topic / vocab))[0]
+        if len(topic) == 0:
+            topic = rng.integers(0, vocab, size=8)
+        base = rng.exponential(1.0, size=len(topic))
+        counts = rng.poisson(lam=base, size=(n_j, len(topic)))
+        counts = counts * (rng.random((n_j, len(topic))) < 0.5)
+        vals = np.log1p(counts.astype(np.float32))
+        norms = np.sqrt((vals ** 2).sum(axis=1, keepdims=True))
+        vals = vals / np.maximum(norms, 1e-9)
+        for r in range(n_j):
+            nz = np.nonzero(vals[r])[0]
+            datas.append(vals[r, nz])
+            cols.append(topic[nz])
+            lens.append(len(nz))
+
+    perm = rng.permutation(n)
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(np.asarray(lens)[perm], out=indptr[1:])
+    data = np.concatenate([datas[i] for i in perm]).astype(np.float32)
+    indices = np.concatenate([cols[i] for i in perm]).astype(np.int32)
+    batch = CSRBatch(data=data, indices=indices,
+                     indptr=indptr.astype(np.int32), shape=(n, vocab))
+    return batch, y[perm]
+
+
 def make_noisy_replicas(x: np.ndarray, y: np.ndarray, *, n_replicas: int = 20,
                         frac_features: float = 0.2, seed: int = 0):
     """Paper's 'Noisy MNIST': each sample perturbed ``n_replicas`` times with

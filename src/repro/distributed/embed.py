@@ -1,4 +1,4 @@
-"""Distributed embedded-space (RFF/Nystrom) mini-batch k-means.
+"""Distributed embedded-space (RFF/Nystrom/sketch) mini-batch k-means.
 
 The explicit feature map makes the heavy step embarrassingly parallel: each
 device embeds only its own rows, z = phi_m(x_local), and the Lloyd sweep
@@ -93,8 +93,9 @@ class DistributedEmbedKMeans:
 
     def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *, fmap=None):
         if cfg.method == "exact":
-            raise ValueError("DistributedEmbedKMeans needs cfg.method in "
-                             "('rff', 'nystrom'); use "
+            raise ValueError("DistributedEmbedKMeans needs an embedded "
+                             "cfg.method ('rff', 'nystrom', 'sketch', "
+                             "'tensorsketch'); use "
                              "DistributedMiniBatchKMeans for 'exact'")
         self.mesh = mesh
         self.cfg = cfg

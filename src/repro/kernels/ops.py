@@ -17,6 +17,7 @@ from .assign import assign_fused_pallas
 from .embed_assign import embed_assign_pallas
 from .flash_attention import flash_attention_pallas
 from .kernel_matrix import kernel_matrix_pallas
+from .sketch_assign import sketch_assign_pallas
 
 Array = jax.Array
 
@@ -121,10 +122,7 @@ def embed_panels(fmap, centroids: Array, counts: Array | None = None):
     from repro.approx.nystrom import NystromMap
     from repro.approx.rff import RFFMap
 
-    c32 = centroids.astype(jnp.float32)
-    csq = jnp.sum(c32 * c32, axis=1)
-    if counts is not None:
-        csq = jnp.where(counts > 0, csq, 1e30)
+    c32, csq = _masked_csq(centroids, counts)
     if isinstance(fmap, RFFMap):
         statics = dict(map_kind="rff", gamma=1.0, coef0=1.0, degree=1,
                        scale=fmap.scale)
@@ -158,6 +156,54 @@ def _embed_assign_padded(x, w, aux, v, csq, *, map_kind, gamma, coef0,
     return labels[:n, 0], score[:n, 0]
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def _sketch_assign_padded(x, h, sign, v, csq, *, interpret):
+    n, d = x.shape
+    m = v.shape[0]
+    cp = _round_up(max(csq.shape[0], 128), 128)
+    bm, bme, bd = _pick_blocks(n, m, d, cp)
+    np_, mp, dp = _round_up(n, bm), _round_up(m, bme), _round_up(d, bd)
+    # padded columns: h = -1 matches no bucket, sign/x = 0 keep the dot exact
+    h_p = jnp.full((dp, 1), -1, jnp.int32).at[:d, 0].set(h)
+    sign_p = jnp.zeros((dp, 1), jnp.float32).at[:d, 0].set(sign)
+    csq_p = jnp.full((1, cp), 1e30, jnp.float32).at[0, :csq.shape[0]].set(csq)
+    labels, score = sketch_assign_pallas(
+        _pad2(x, np_, dp), h_p, sign_p, _pad2(v, mp, cp), csq_p,
+        bm=bm, bme=bme, bd=bd, interpret=interpret)
+    return labels[:n, 0], score[:n, 0]
+
+
+def _masked_csq(centroids: Array, counts: Array | None):
+    c32 = centroids.astype(jnp.float32)
+    csq = jnp.sum(c32 * c32, axis=1)
+    if counts is not None:
+        csq = jnp.where(counts > 0, csq, 1e30)
+    return c32, csq
+
+
+def sketch_assign(x: Array, fmap, centroids: Array,
+                  counts: Array | None = None, *,
+                  interpret: bool = True) -> tuple[Array, Array]:
+    """Fused count-sketch + nearest-centroid assignment (dense rows).
+
+    Same contract as ``embed_assign``; the sketch tile is built in VMEM from
+    the O(d) hash/sign tables (see kernels/sketch_assign.py) so Z never
+    materializes in HBM.
+    """
+    c32, csq = _masked_csq(centroids, counts)
+    return _sketch_assign_padded(x, fmap.h, fmap.sign, c32.T, csq,
+                                 interpret=interpret)
+
+
+@jax.jit
+def _embed_assign_jnp(z: Array, centroids: Array, csq: Array):
+    f = jax.lax.dot_general(z, centroids.astype(jnp.float32),
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    score = csq[None, :] - 2.0 * f
+    return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
+
+
 def embed_assign(x: Array, fmap, centroids: Array,
                  counts: Array | None = None, *,
                  interpret: bool = True) -> tuple[Array, Array]:
@@ -166,7 +212,20 @@ def embed_assign(x: Array, fmap, centroids: Array,
     labels, score = argmin/min_j (|c_j|^2 - 2 phi_m(x_i).c_j); the embedded
     batch never materializes in HBM (see kernels/embed_assign.py). ``counts``
     masks empty clusters (+BIG) like the exact assignment path.
+
+    Dispatch: RFF/Nystrom go through the projection-epilogue kernel,
+    CountSketch through the scatter-add variant (kernels/sketch_assign.py).
+    TensorSketch has no fused kernel — its FFT convolution does not lower to
+    a Pallas tile epilogue — so it takes the documented jnp fallback:
+    Z materializes ([n, m] HBM round-trip), flops are unchanged.
     """
+    from repro.approx.sketch import CountSketchMap, TensorSketchMap
+
+    if isinstance(fmap, CountSketchMap):
+        return sketch_assign(x, fmap, centroids, counts, interpret=interpret)
+    if isinstance(fmap, TensorSketchMap):
+        c32, csq = _masked_csq(centroids, counts)
+        return _embed_assign_jnp(fmap(x), c32, csq)
     w, aux, v, csq, statics = embed_panels(fmap, centroids, counts)
     return _embed_assign_padded(x, w, aux, v, csq, interpret=interpret,
                                 **statics)
@@ -176,6 +235,7 @@ def embed_assign(x: Array, fmap, centroids: Array,
 kernel_matrix_ref = ref.kernel_matrix_ref
 assign_fused_ref = ref.assign_fused_ref
 embed_assign_ref = ref.embed_assign_ref
+sketch_assign_ref = ref.sketch_assign_ref
 
 
 @partial(jax.jit, static_argnames=("causal", "softcap", "interpret"))

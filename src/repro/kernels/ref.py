@@ -77,6 +77,24 @@ def embed_assign_ref(x: Array, w: Array, v: Array, csq: Array, *,
     return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
 
 
+def sketch_assign_ref(x: Array, h: Array, sign: Array, v: Array, csq: Array):
+    """Fused count-sketch + assign oracle (kernels/sketch_assign.py contract).
+
+    x: [n, d] rows; h: [d] int32 bucket ids (-1 = padded column, lands
+    nowhere); sign: [d] f32; v: [m, C] value panel (centroids^T); csq: [C]
+    centroid squared norms (+BIG on masked clusters).
+    Returns (labels [n] int32, score [n] f32) with
+      z_j = sum_{i: h_i = j} sign_i * x_i         (never materialized on TPU)
+      score_ij = |c_j|^2 - 2 z_i . c_j
+      labels = argmin_j score_ij.
+    """
+    m = v.shape[0]
+    s = jax.nn.one_hot(h, m, dtype=jnp.float32) * sign[:, None]   # [d, m]
+    z = x.astype(jnp.float32) @ s
+    score = csq[None, :].astype(jnp.float32) - 2.0 * z @ v.astype(jnp.float32)
+    return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *,
                         causal: bool = True,
                         softcap: float | None = None) -> Array:

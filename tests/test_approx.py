@@ -102,6 +102,10 @@ def test_rff_rejects_non_shift_invariant_kernels():
     with pytest.raises(ValueError, match="shift-invariant"):
         make_rff(jax.random.PRNGKey(0), 4, 16, KernelSpec("polynomial"))
     with pytest.raises(ValueError):
+        make_feature_map("bogus", jax.random.PRNGKey(0),
+                         jnp.zeros((8, 4)), 16, KernelSpec("rbf"))
+    # "sketch" is a valid method now but still gated to the linear kernel
+    with pytest.raises(ValueError, match="linear"):
         make_feature_map("sketch", jax.random.PRNGKey(0),
                          jnp.zeros((8, 4)), 16, KernelSpec("rbf"))
 
@@ -137,7 +141,7 @@ def test_embedded_fit_single_batch_and_config_validation(blobs):
     assert res.fmap.dim == 32
     assert nmi(y, np.asarray(res.predict(x))) >= 0.9
     with pytest.raises(ValueError, match="method"):
-        MiniBatchConfig(n_clusters=4, method="sketch")
+        MiniBatchConfig(n_clusters=4, method="bogus")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,63 @@
+"""Benchmark-layer smoke coverage.
+
+The Tab.2 baseline once shipped a nearest-centroid assignment that dropped
+the per-cluster +||c||^2 term and misreported every baseline metric — a
+class of bug only catchable at the benchmark layer. Two guards:
+
+* a fast unit test of ``benchmarks.common.nearest_centroid`` on a case the
+  broken formula gets wrong, and
+* a ``slow``-marked subprocess smoke of ``benchmarks/run.py --fast --only
+  tab2_rcv1`` (CI sizes) asserting the run finishes and emits the full JSON
+  schema, sparse sketch grid included.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+
+from benchmarks.common import nearest_centroid  # noqa: E402
+
+
+def test_nearest_centroid_includes_center_norms():
+    """Dropping ||c||^2 makes big-norm centroids win every argmin — the
+    exact bug the Tab.2 baseline shipped with."""
+    centers = np.array([[0.0, 0.0], [10.0, 0.0]], np.float32)
+    x = np.array([[1.0, 0.0], [9.0, 0.0]], np.float32)
+    # without +||c||^2 the scores for row 0 are [1, -19] -> wrong label 1
+    np.testing.assert_array_equal(nearest_centroid(x, centers), [0, 1])
+
+
+def test_nearest_centroid_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(100, 7)) * 3.0
+    centers = rng.normal(size=(11, 7)) * np.arange(1, 12)[:, None]
+    want = np.argmin(((x[:, None, :] - centers[None]) ** 2).sum(-1), axis=1)
+    np.testing.assert_array_equal(nearest_centroid(x, centers), want)
+
+
+@pytest.mark.slow
+def test_tab2_fast_smoke(tmp_path):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               REPRO_RESULTS=str(tmp_path))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast",
+         "--only", "tab2_rcv1"],
+        cwd=_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    with open(tmp_path / "tab2_rcv1.json") as f:
+        payload = json.load(f)
+    assert {"baseline", "B", "sparse"} <= set(payload)
+    assert payload["baseline"]["acc"] > 0.2          # not the broken formula
+    assert payload["sparse"]["B"], "sparse sketch grid missing"
+    for rec in payload["sparse"]["B"].values():
+        assert 0.0 <= rec["acc"] <= 1.0 and rec["seconds"] > 0
+    # the O(nnz) path clusters the sparse envelope at least as well as the
+    # dense linear baseline (it sees the un-projected vocab space)
+    assert payload["claim_sparse_beats_baseline_nmi"]

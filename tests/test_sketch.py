@@ -1,0 +1,311 @@
+"""Sketch feature maps (count-sketch / TensorSketch) + the sparse path.
+
+Covers: the shared FeatureMap contract over every map the system ships
+(rff / orf / nystrom / sketch / tensorsketch), sketch unbiasedness
+E[z(x).z(y)] ~= K(x, y), the CSR O(nnz) application against the dense
+oracle, end-to-end ``method="sketch"`` fit/predict on CSR batches matching
+the dense-oracle labels exactly, the fused Pallas sketch+assign kernel vs
+its jnp oracle (interpret mode), and the planner's sketch footprint.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.approx import (CountSketchMap, TensorSketchMap, make_count_sketch,
+                          make_feature_map, make_tensor_sketch)
+from repro.core import (KernelSpec, MachineSpec, MiniBatchConfig, nmi, plan,
+                        sketch_footprint_bytes)
+from repro.core.minibatch import FitResult, GlobalState, fit
+from repro.data.sampling import split_batches
+from repro.data.sparse import (CSRBatch, csr_from_dense, split_csr,
+                               take_rows, to_dense)
+from repro.data.synthetic import make_rcv1_sparse
+from repro.kernels import ops, ref
+
+# ---------------------------------------------------------------------------
+# FeatureMap contract — every map the system ships
+# ---------------------------------------------------------------------------
+
+_SPECS = {
+    "rff": KernelSpec("rbf", gamma=0.5),
+    "orf": KernelSpec("rbf", gamma=0.5),
+    "nystrom": KernelSpec("rbf", gamma=0.5),
+    "sketch": KernelSpec("linear"),
+    "tensorsketch": KernelSpec("polynomial", gamma=1.0, coef0=0.5, degree=2),
+}
+
+
+def _make_map(case: str, key, x, m: int):
+    method = "rff" if case == "orf" else case
+    return make_feature_map(method, key, x, m, _SPECS[case],
+                            orthogonal=(case == "orf"))
+
+
+@pytest.mark.parametrize("case", sorted(_SPECS))
+def test_feature_map_contract(case):
+    n, d, m = 40, 12, 24
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    fmap = _make_map(case, jax.random.PRNGKey(0), x, m)
+
+    assert fmap.dim == m
+    assert fmap.in_dim == d
+    z = fmap(x)
+    assert z.shape == (n, m)
+    assert z.dtype == jnp.float32
+
+    # pytree round-trip preserves behaviour (checkpointing / shard_map)
+    leaves, treedef = jax.tree_util.tree_flatten(fmap)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(rebuilt) is type(fmap)
+    np.testing.assert_allclose(np.asarray(rebuilt(x)), np.asarray(z),
+                               rtol=1e-6, atol=1e-6)
+
+    # jit-ability with the map as a traced pytree argument
+    z_jit = jax.jit(lambda f, xs: f(xs))(fmap, x)
+    np.testing.assert_allclose(np.asarray(z_jit), np.asarray(z),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("case", ["sketch", "tensorsketch"])
+def test_sketch_unbiased(case):
+    """E[z(x).z(y)] ~= K(x, y), error shrinking ~1/sqrt(#seeds)."""
+    n_seeds, d, m = 300, 30, 64
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(25, d)).astype(np.float32)
+    y = rng.normal(size=(25, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    y /= np.linalg.norm(y, axis=1, keepdims=True)
+    spec = _SPECS[case]
+    k = np.asarray(spec(jnp.asarray(x), jnp.asarray(y)))
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    est = np.zeros_like(k)
+    for s in range(n_seeds):
+        fmap = _make_map(case, jax.random.PRNGKey(s), xj, m)
+        est += np.asarray(fmap(xj) @ fmap(yj).T)
+    err = np.abs(est / n_seeds - k).mean()
+    assert err < 0.02, (case, err, np.abs(k).mean())
+
+
+def test_sketch_gates_wrong_kernels():
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="linear"):
+        make_count_sketch(key, 8, 16, KernelSpec("rbf"))
+    with pytest.raises(ValueError, match="polynomial"):
+        make_tensor_sketch(key, 8, 16, KernelSpec("rbf"))
+    with pytest.raises(ValueError, match="gamma"):
+        make_tensor_sketch(key, 8, 16,
+                           KernelSpec("polynomial", gamma=-1.0))
+
+
+# ---------------------------------------------------------------------------
+# CSR batches: round-trip oracle + O(nnz) application
+# ---------------------------------------------------------------------------
+
+
+def _random_sparse(n, d, density, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x[rng.random(x.shape) >= density] = 0.0
+    return x
+
+
+def test_csr_dense_roundtrip():
+    x = _random_sparse(37, 53, 0.1, 2)
+    b = csr_from_dense(x)
+    np.testing.assert_array_equal(to_dense(b), x)
+    assert b.nnz == int((x != 0).sum())
+    # row selection matches dense row selection
+    idx = np.asarray([31, 4, 4, 0])
+    np.testing.assert_array_equal(to_dense(take_rows(b, idx)), x[idx])
+    # stride split matches the dense splitter
+    dense_parts = split_batches(x, 3, strategy="stride")
+    for sp, dn in zip(split_csr(b, 3, strategy="stride"), dense_parts):
+        np.testing.assert_array_equal(to_dense(sp), dn)
+
+
+@pytest.mark.parametrize("case", ["sketch", "tensorsketch"])
+def test_sketch_csr_matches_dense(case):
+    x = _random_sparse(50, 64, 0.08, 3)
+    b = csr_from_dense(x)
+    fmap = _make_map(case, jax.random.PRNGKey(0), jnp.asarray(x), 32)
+    z_dense = np.asarray(fmap(jnp.asarray(x)))
+    z_csr = np.asarray(fmap(b))
+    np.testing.assert_allclose(z_csr, z_dense, rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_sample_rejected_for_dense_maps():
+    b = csr_from_dense(_random_sparse(16, 8, 0.2, 4))
+    with pytest.raises(ValueError, match="dense"):
+        make_feature_map("rff", jax.random.PRNGKey(0), b, 16,
+                         KernelSpec("rbf"))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end sparse fit/predict == dense oracle
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_fit_csr_matches_dense_oracle():
+    """fit/predict on CSR batches must label exactly like the same fit on
+    the densified batches — the O(nnz) path changes cost, not results."""
+    xs, y = make_rcv1_sparse(1500, vocab=512, n_classes=6, seed=0)
+    cfg = MiniBatchConfig(n_clusters=6, n_batches=3,
+                          kernel=KernelSpec("linear"), seed=0,
+                          method="sketch", embed_dim=64)
+    res_sparse = fit(split_csr(xs, 3, strategy="stride"), cfg)
+    xd = to_dense(xs)
+    res_dense = fit(split_batches(xd, 3, strategy="stride"), cfg)
+
+    labels_sparse = np.asarray(res_sparse.predict(xs))
+    labels_dense = np.asarray(res_dense.predict(jnp.asarray(xd)))
+    np.testing.assert_array_equal(labels_sparse, labels_dense)
+    np.testing.assert_allclose(
+        np.asarray(res_sparse.state.centroids),
+        np.asarray(res_dense.state.centroids), rtol=1e-4, atol=1e-5)
+    assert int(np.asarray(res_sparse.state.cardinalities).sum()) == len(xs)
+    assert nmi(y, labels_sparse) >= 0.5      # clusters are real, not noise
+    assert isinstance(res_sparse.fmap, CountSketchMap)
+
+
+def test_tensorsketch_fit_runs_on_csr():
+    xs, y = make_rcv1_sparse(900, vocab=256, n_classes=4, seed=1)
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=3,
+                          kernel=KernelSpec("polynomial", gamma=1.0,
+                                            coef0=0.5, degree=2),
+                          seed=0, method="tensorsketch", embed_dim=64)
+    res = fit(split_csr(xs, 3, strategy="stride"), cfg)
+    assert isinstance(res.fmap, TensorSketchMap)
+    labels = np.asarray(res.predict(xs))
+    assert labels.shape == (len(xs),)
+    assert nmi(y, labels) >= 0.3
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas sketch+assign kernel vs oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(64, 16, 32, 5), (100, 30, 77, 13),
+                                   (300, 520, 260, 130)],
+                         ids=["small", "ragged", "multiblock"])
+def test_sketch_assign_matches_oracle(shape):
+    n, d, m, c = shape
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    centroids = jnp.asarray(rng.normal(size=(c, m)).astype(np.float32))
+    fmap = make_count_sketch(jax.random.PRNGKey(0), d, m,
+                             KernelSpec("linear"))
+    labels, score = ops.embed_assign(x, fmap, centroids, interpret=True)
+    c32 = centroids.astype(jnp.float32)
+    csq = jnp.sum(c32 * c32, axis=1)
+    want_labels, want_score = ref.sketch_assign_ref(x, fmap.h, fmap.sign,
+                                                    c32.T, csq)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.asarray(want_labels))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(want_score),
+                               rtol=1e-4, atol=1e-4)
+    # and the oracle itself agrees with the materialized embedding
+    z = fmap(x)
+    d2 = jnp.argmin(((z[:, None, :] - c32[None]) ** 2).sum(-1), axis=1)
+    np.testing.assert_array_equal(np.asarray(labels), np.asarray(d2))
+
+
+def test_sketch_assign_masks_empty_clusters():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(32, 24)).astype(np.float32))
+    centroids = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    fmap = make_count_sketch(jax.random.PRNGKey(0), 24, 16,
+                             KernelSpec("linear"))
+    counts = jnp.asarray([5.0, 0.0, 3.0, 2.0])
+    labels, _ = ops.embed_assign(x, fmap, centroids, counts, interpret=True)
+    assert not np.any(np.asarray(labels) == 1)
+
+
+def test_fused_sketch_predict_matches_jnp_path():
+    from repro.approx import EmbedState, predict_embedded
+
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(40, 20)).astype(np.float32))
+    fmap = make_count_sketch(jax.random.PRNGKey(0), 20, 16,
+                             KernelSpec("linear"))
+    centroids = jnp.asarray(rng.normal(size=(3, 16)).astype(np.float32))
+    state = EmbedState(centroids=centroids,
+                       cardinalities=jnp.asarray([10.0, 4.0, 10.0]),
+                       batches_done=jnp.array(1, jnp.int32))
+    l_jnp = np.asarray(predict_embedded(x, state, fmap, use_fused=False))
+    l_fused = np.asarray(predict_embedded(x, state, fmap, use_fused=True))
+    np.testing.assert_array_equal(l_jnp, l_fused)
+
+
+def test_distributed_embed_sketch_single_device_mesh():
+    """The sketch map flows through the row-sharded distributed path (the
+    pytree registration makes it shard_map-closable) and reproduces the
+    single-device fit on a 1-device mesh."""
+    from repro.core.minibatch import fit_dataset
+    from repro.distributed import DistributedEmbedKMeans, make_test_mesh
+
+    rng = np.random.default_rng(0)
+    centers = np.array([[0.25, 0.25], [0.75, 0.75],
+                        [0.25, 0.75], [0.75, 0.25]])
+    x = np.concatenate([rng.normal(c, 0.05, size=(200, 2))
+                        for c in centers]).astype(np.float32)
+    y = np.repeat(np.arange(4), 200)
+    perm = rng.permutation(len(x))
+    x, y = x[perm], y[perm]
+
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=4,
+                          kernel=KernelSpec("linear"), seed=0,
+                          method="sketch", embed_dim=16)
+    single = fit_dataset(x, cfg)
+    dist = DistributedEmbedKMeans(make_test_mesh({"data": 1}), cfg).fit(
+        split_batches(x, 4, strategy="stride"))
+    labels = np.asarray(dist.predict(jnp.asarray(x)))
+    assert nmi(np.asarray(single.predict(x)), labels) >= 0.99
+    assert nmi(y, labels) >= 0.9
+    assert int(np.asarray(dist.state.cardinalities).sum()) == len(x)
+
+
+# ---------------------------------------------------------------------------
+# planner + predict-spec guard
+# ---------------------------------------------------------------------------
+
+
+def test_plan_names_sketch_for_sparse_highdim():
+    machine = MachineSpec(memory_bytes=16e9, n_processors=256)
+    # RCV1-ish: huge sparse d, linear kernel -> sketch must win
+    p = plan(1_000_000, 50, machine, d=47236, embed_dim=256,
+             sketchable=True, density=2e-3)
+    assert np.isfinite(p.sketch_footprint)
+    assert p.sketch_footprint < p.embed_footprint
+    assert p.method == "sketch"
+    assert "sketch" in p.note
+    # default stays sketch-free (planner can't know the kernel is linear)
+    p0 = plan(1_000_000, 50, machine, d=47236, embed_dim=256)
+    assert p0.method in ("exact", "embed")
+    assert not np.isfinite(p0.sketch_footprint)
+
+
+def test_sketch_footprint_scaling():
+    base = sketch_footprint_bytes(1_000_000, 10, 16, 8, m=64, d=50_000,
+                                  density=1e-2)
+    # sketch map tables are O(d), dense-embedded map params are O(m*d):
+    from repro.core import embed_footprint_bytes
+    assert base < embed_footprint_bytes(1_000_000, 10, 16, 8, m=64,
+                                        d=50_000)
+    # denser rows cost more
+    assert sketch_footprint_bytes(1_000_000, 10, 16, 8, m=64, d=50_000,
+                                  density=1e-1) > base
+
+
+def test_predict_requires_spec():
+    state = GlobalState(
+        medoids=jnp.zeros((2, 2), jnp.float32),
+        medoid_diag=jnp.ones((2,), jnp.float32),
+        cardinalities=jnp.ones((2,), jnp.float32),
+        batches_done=jnp.array(1, jnp.int32))
+    res = FitResult(state, [], spec=None)
+    with pytest.raises(ValueError, match="KernelSpec"):
+        res.predict(np.zeros((3, 2), np.float32))
