@@ -153,7 +153,18 @@ def fit_embedded(
 
     Mirrors ``repro.core.minibatch.fit``: host-side sequential batches,
     O(C*m) state across batches, checkpoint callback after every merge.
+    Consumes ``batches``: a closable source (``repro.data.BatchSource``) is
+    closed on exit, success or failure.
     """
+    from repro.data.loader import closing_source
+    with closing_source(batches):
+        return _fit_embedded_loop(batches, fmap, n_clusters=n_clusters,
+                                  max_iters=max_iters, seed=seed,
+                                  state=state, checkpoint_cb=checkpoint_cb)
+
+
+def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
+                       checkpoint_cb):
     from repro.core.minibatch import BatchStats  # cycle-free late import
 
     key = jax.random.PRNGKey(seed)

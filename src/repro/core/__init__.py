@@ -6,8 +6,8 @@ from .kkmeans import (InnerResult, kkmeans_fit, kkmeans_fit_full,
 from .init import assign_to_medoids, kmeans_pp_indices
 from .landmarks import choose_landmarks, num_landmarks
 from .memory import (MachineSpec, Plan, b_min, b_min_paper,
-                     embed_footprint_bytes, footprint_bytes, plan,
-                     sketch_footprint_bytes)
+                     embed_footprint_bytes, footprint_bytes,
+                     host_staging_bytes, plan, sketch_footprint_bytes)
 from .metrics import clustering_accuracy, elbow, mean_displacement, nmi
 from .minibatch import (FitResult, GlobalState, MiniBatchConfig, fit,
                         fit_dataset, predict)
@@ -18,7 +18,8 @@ __all__ = [
     "assign_to_medoids", "kmeans_pp_indices",
     "choose_landmarks", "num_landmarks",
     "MachineSpec", "Plan", "b_min", "b_min_paper", "embed_footprint_bytes",
-    "footprint_bytes", "plan", "sketch_footprint_bytes",
+    "footprint_bytes", "host_staging_bytes", "plan",
+    "sketch_footprint_bytes",
     "clustering_accuracy", "elbow", "mean_displacement", "nmi",
     "FitResult", "GlobalState", "MiniBatchConfig", "fit", "fit_dataset",
     "predict",

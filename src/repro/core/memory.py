@@ -31,6 +31,16 @@ batch storage to O(nnz):
 (rho = input density; data+index pairs for the CSR rows, 4-byte hash +
 1-byte sign per input dim). ``plan(sketchable=True)`` lets the auto-pick
 name "sketch" for linear/polynomial-kernel workloads.
+
+Streaming mode adds a HOST-side term the device formulas above ignore: the
+prefetch pipeline (``repro.data.PrefetchLoader``) keeps up to ``depth``
+staged batches in flight next to the one being consumed, so the host
+footprint is (1 + depth) batches — dense ``Q * N/B * d`` each, or
+``(Q+4)*rho*d*N/B`` (Q-byte value, int32 index) pairs when the stream
+stays CSR.
+``plan(prefetch_depth=)`` reports it as ``Plan.host_footprint``; it is what
+bounds ``depth`` on a RAM-tight ingest node, exactly the §3.3
+producer/consumer trade the paper makes on the CPU side.
 """
 from __future__ import annotations
 
@@ -126,6 +136,23 @@ def b_min_paper(n: int, c: int, machine: MachineSpec) -> int:
     return max(1, math.ceil((2.0 * n / p) / denom))
 
 
+def host_staging_bytes(n: int, b: int, q: int = 4, *, d: int = 0,
+                       density: float = 1.0, sparse: bool = False,
+                       prefetch_depth: int = 2) -> float:
+    """Host bytes for the streaming ingest pipeline: the resident batch plus
+    ``prefetch_depth`` staged batches in the producer queue.
+
+    Dense batches cost ``Q * (N/B) * d`` each; CSR batches cost the
+    (value, index) pairs of their nonzeros — Q-byte values plus int32
+    (4-byte) indices, whatever Q is — plus the int32 indptr."""
+    nb = n / b
+    if sparse:
+        batch = (q + 4.0) * density * nb * d + 4.0 * (nb + 1)
+    else:
+        batch = q * nb * d
+    return (1.0 + max(0, prefetch_depth)) * batch
+
+
 @dataclasses.dataclass(frozen=True)
 class Plan:
     b: int
@@ -137,11 +164,13 @@ class Plan:
     embed_footprint: float = float("inf")
     method: str = "exact"        # "exact" | "embed" | "sketch" (cheapest)
     sketch_footprint: float = float("inf")
+    host_footprint: float = 0.0  # ingest node: (1 + prefetch_depth) batches
 
 
 def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
          embed_dim: int | None = None,
          sketchable: bool = False, density: float = 1.0,
+         prefetch_depth: int = 2,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
     """§4.2 model-selection rationale, automated.
@@ -164,6 +193,11 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     ``sketch_footprint_bytes``) then competes in the auto-pick and
     ``method`` may come back ``"sketch"`` — i.e.
     ``MiniBatchConfig(method="sketch" | "tensorsketch")`` on CSR batches.
+
+    ``prefetch_depth`` sizes the streaming host footprint
+    (``Plan.host_footprint``): the resident batch plus that many staged
+    batches in the prefetch queue, CSR-priced when the sketch method wins
+    (the stream then never densifies) and dense-priced otherwise.
     """
     b = b_min(n, c, machine)
     s = 1.0
@@ -204,4 +238,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
         embed_footprint=fp_embed,
         method=method,
         sketch_footprint=fp_sketch,
+        host_footprint=host_staging_bytes(
+            n, b, q, d=d, density=density, sparse=(method == "sketch"),
+            prefetch_depth=prefetch_depth),
     )

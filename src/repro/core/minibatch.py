@@ -232,15 +232,35 @@ def fit(
     resuming an embedded fit; the map is part of the model). The sketch
     methods additionally accept ``repro.data.sparse.CSRBatch`` mini-batches,
     keeping the embedding step O(nnz) for high-dimensional sparse rows.
+
+    ``batches`` may also be a ``repro.data.BatchSource`` (the unified
+    ingestion handle: list / live stream / prefetch); fit consumes it, so a
+    closable source is closed on exit — success or failure — and the
+    prefetch producer thread never leaks.
     """
+    from repro.data.loader import closing_source
+    with closing_source(batches):
+        return _fit(batches, cfg, state=state, checkpoint_cb=checkpoint_cb,
+                    fmap=fmap)
+
+
+def _fit(batches, cfg, *, state, checkpoint_cb, fmap) -> FitResult:
     if cfg.method != "exact":
         return _fit_embedded(batches, cfg, state=state,
                              checkpoint_cb=checkpoint_cb, fmap=fmap)
+    from repro.data.sparse import is_sparse
+
     key = jax.random.PRNGKey(cfg.seed)
     history: list[BatchStats] = []
     start = int(state.batches_done) if state is not None else 0
 
     for i, xb in enumerate(batches, start=start):
+        if is_sparse(xb):
+            raise ValueError(
+                "method='exact' evaluates kernel blocks on dense rows and "
+                "cannot take CSRBatch mini-batches; use a sketch method "
+                "(method='sketch'|'tensorsketch') to stay O(nnz), or "
+                "densify explicitly with repro.data.sparse.to_dense")
         xb = jnp.asarray(xb)
         n = xb.shape[0]
         n_l = num_landmarks(n, cfg.s, n_clusters=cfg.n_clusters,
@@ -301,7 +321,9 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
     return FitResult(est, history, fmap=fmap, spec=cfg.kernel)
 
 
-def fit_dataset(x: np.ndarray, cfg: MiniBatchConfig, **kw) -> FitResult:
-    """Convenience: stride/block-split a known dataset then ``fit``."""
-    from repro.data.sampling import split_batches
-    return fit(split_batches(x, cfg.n_batches, strategy=cfg.sampling), cfg, **kw)
+def fit_dataset(x, cfg: MiniBatchConfig, **kw) -> FitResult:
+    """Convenience: stride/block-split a resident dataset (dense [n, d] or
+    ``CSRBatch``) into the unified ``BatchSource``, then ``fit``."""
+    from repro.data.loader import BatchSource
+    return fit(BatchSource.from_dataset(x, cfg.n_batches,
+                                        strategy=cfg.sampling), cfg, **kw)

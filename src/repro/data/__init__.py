@@ -1,16 +1,18 @@
 from .sampling import batch_indices, split_batches, stream_blocks
-from .sparse import (CSRBatch, csr_from_dense, is_sparse, split_csr,
-                     take_rows, to_dense)
+from .sparse import (CSRBatch, concat_csr, csr_from_dense, is_sparse,
+                     pad_csr_capacity, shard_csr, shard_row_mask,
+                     slice_rows, split_csr, take_rows, to_dense)
 from .synthetic import (make_blobs, make_md_trajectory, make_mnist_like,
                         make_noisy_replicas, make_rcv1_like,
                         make_rcv1_sparse, toy2d)
-from .loader import PrefetchLoader
+from .loader import BatchSource, PrefetchLoader
 
 __all__ = [
     "batch_indices", "split_batches", "stream_blocks",
-    "CSRBatch", "csr_from_dense", "is_sparse", "split_csr", "take_rows",
-    "to_dense",
+    "CSRBatch", "concat_csr", "csr_from_dense", "is_sparse",
+    "pad_csr_capacity", "shard_csr", "shard_row_mask", "slice_rows",
+    "split_csr", "take_rows", "to_dense",
     "make_blobs", "make_md_trajectory", "make_mnist_like",
     "make_noisy_replicas", "make_rcv1_like", "make_rcv1_sparse", "toy2d",
-    "PrefetchLoader",
+    "BatchSource", "PrefetchLoader",
 ]

@@ -9,6 +9,7 @@
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Iterator
 
 import numpy as np
@@ -35,18 +36,85 @@ def split_batches(x: np.ndarray, n_batches: int,
     return [x[idx] for idx in batch_indices(len(x), n_batches, strategy)]
 
 
-def stream_blocks(stream: Iterator[np.ndarray], batch_size: int) -> Iterator[np.ndarray]:
+def _chunk_slice(chunk, start: int, stop: int):
+    """Row slice of a dense array (view) or CSRBatch (O(slice nnz))."""
+    from .sparse import is_sparse, slice_rows
+    if is_sparse(chunk):
+        return slice_rows(chunk, start, stop)
+    return chunk[start:stop]
+
+
+def _chunk_cat(pieces: list):
+    """Assemble one mini-batch from buffered pieces. A batch touched by any
+    CSR piece is promoted to CSR (dense pieces are sparsified — sparse data
+    is NEVER densified, the whole point of the streaming CSR path).
+
+    Pieces are views of chunks the rechunker already owns (copied on
+    arrival, see ``stream_blocks``), so a single-piece batch is returned
+    as-is — no second copy, and nothing can overwrite it."""
+    from .sparse import concat_csr, csr_from_dense, is_sparse
+    if len(pieces) == 1:
+        return pieces[0]
+    if any(is_sparse(p) for p in pieces):
+        return concat_csr([p if is_sparse(p) else csr_from_dense(p)
+                           for p in pieces])
+    return np.concatenate(pieces, axis=0)
+
+
+def stream_blocks(stream: Iterator, batch_size: int) -> Iterator:
     """Re-chunk an arbitrary sample stream into block mini-batches — the
-    'process a data stream' mode of §3.1 (clustering starts at first batch)."""
-    buf: list[np.ndarray] = []
-    have = 0
+    'process a data stream' mode of §3.1 (clustering starts at first batch).
+
+    Chunks may be dense [k, d] arrays or ``repro.data.sparse.CSRBatch``es of
+    any ragged sizes (heterogeneous streams are fine; a mixed batch comes
+    out CSR). The buffer carries an offset into its head chunk instead of
+    re-concatenating the whole tail on every yield — the old implementation
+    was quadratic in chunks-per-batch.
+
+    Each chunk is copied ONCE, on arrival: the stream must own its buffer,
+    because chunks are held across subsequent pulls and producers routinely
+    reuse one read buffer (``buf[:] = ...; yield buf``) — holding a view
+    would let the next read silently corrupt queued batches. Slicing and
+    single-chunk assembly are view-only after that.
+    """
+    from .sparse import CSRBatch, is_sparse
+
+    if batch_size < 1:
+        raise ValueError(f"need batch_size >= 1, got {batch_size}")
+    buf: deque = deque()
+    offset = 0                      # rows of buf[0] already consumed
+    have = 0                        # unconsumed rows buffered
+
+    def take(n_rows: int):
+        nonlocal offset, have
+        pieces = []
+        need = n_rows
+        while need:
+            head = buf[0]
+            avail = len(head) - offset
+            use = min(avail, need)
+            pieces.append(_chunk_slice(head, offset, offset + use))
+            offset += use
+            need -= use
+            if offset == len(head):
+                buf.popleft()
+                offset = 0
+        have -= n_rows
+        return _chunk_cat(pieces)
+
     for chunk in stream:
-        buf.append(np.atleast_2d(chunk))
-        have += len(buf[-1])
+        if is_sparse(chunk):          # own the chunk (see docstring)
+            chunk = CSRBatch(data=np.array(chunk.data),
+                             indices=np.array(chunk.indices),
+                             indptr=np.array(chunk.indptr),
+                             shape=chunk.shape)
+        else:
+            chunk = np.array(np.atleast_2d(chunk))
+        if len(chunk) == 0:
+            continue
+        buf.append(chunk)
+        have += len(chunk)
         while have >= batch_size:
-            flat = np.concatenate(buf, axis=0)
-            yield flat[:batch_size]
-            rest = flat[batch_size:]
-            buf, have = ([rest] if len(rest) else []), len(rest)
+            yield take(batch_size)
     if have:
-        yield np.concatenate(buf, axis=0)
+        yield take(have)

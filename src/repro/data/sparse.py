@@ -12,8 +12,17 @@ that flows through jit: the three arrays are pytree leaves, the logical
 code path is tested against — any operation on a ``CSRBatch`` must produce
 bit-identical results to the same operation on ``to_dense(batch)``.
 
-Host-side helpers (``csr_from_dense``, ``take_rows``, ``split_csr``) are
-numpy — they run in the streaming outer loop, not inside jit.
+Host-side helpers (``csr_from_dense``, ``take_rows``, ``split_csr``,
+``concat_csr``, ``slice_rows``, ``shard_csr``) are numpy — they run in the
+streaming outer loop, not inside jit.
+
+Capacity contract: a ``CSRBatch`` may carry *slack* nnz capacity — stored
+slots at positions >= ``indptr[-1]`` that belong to no row (zero data,
+column 0). ``shard_csr`` uses this to give every mesh shard identical leaf
+shapes (shard_map needs them) without gathering; ``to_dense`` and every
+other consumer honors only ``data[:indptr[-1]]``. Slack slots are inert in
+the O(nnz) sketch paths too: their values are 0 and their scatter targets
+fall outside (or add zero to) the embedding.
 """
 from __future__ import annotations
 
@@ -44,6 +53,7 @@ class CSRBatch:
 
     @property
     def nnz(self) -> int:
+        """Stored slots, including any slack capacity (see module doc)."""
         return self.data.shape[0]
 
     def __len__(self) -> int:
@@ -77,12 +87,17 @@ def csr_from_dense(x: np.ndarray) -> CSRBatch:
 
 
 def to_dense(batch: CSRBatch) -> np.ndarray:
-    """CSRBatch -> dense [n, d] f32 (numpy) — the round-trip oracle."""
+    """CSRBatch -> dense [n, d] f32 (numpy) — the round-trip oracle.
+
+    Honors the capacity contract: only ``data[:indptr[-1]]`` is row payload;
+    slack slots (equal-shape mesh shards) are ignored.
+    """
     n, d = batch.shape
     out = np.zeros((n, d), np.float32)
-    data = np.asarray(batch.data)
-    indices = np.asarray(batch.indices)
     indptr = np.asarray(batch.indptr)
+    stored = int(indptr[-1])
+    data = np.asarray(batch.data)[:stored]
+    indices = np.asarray(batch.indices)[:stored]
     rows = np.repeat(np.arange(n), np.diff(indptr))
     out[rows, indices] = data
     return out
@@ -125,3 +140,115 @@ def split_csr(batch: CSRBatch, n_batches: int,
     semantics — same index sets as ``split_batches`` on the dense oracle)."""
     return [take_rows(batch, idx)
             for idx in batch_indices(len(batch), n_batches, strategy)]
+
+
+def slice_rows(batch: CSRBatch, start: int, stop: int) -> CSRBatch:
+    """Contiguous row slice [start, stop) — the O(slice nnz) primitive the
+    streaming re-chunker is built on (no index gather, no concat churn)."""
+    n = batch.shape[0]
+    start, stop = max(0, min(n, int(start))), max(0, min(n, int(stop)))
+    if stop < start:
+        raise ValueError(f"need start <= stop, got [{start}, {stop})")
+    indptr = np.asarray(batch.indptr)
+    lo, hi = int(indptr[start]), int(indptr[stop])
+    # data/indices stay VIEWS when dtypes already match — the streaming
+    # re-chunker copies each row's payload once, at batch assembly, not here
+    return CSRBatch(
+        data=np.asarray(np.asarray(batch.data)[lo:hi], dtype=np.float32),
+        indices=np.asarray(np.asarray(batch.indices)[lo:hi], dtype=np.int32),
+        indptr=np.asarray(indptr[start:stop + 1] - lo, dtype=np.int32),
+        shape=(stop - start, batch.shape[1]))
+
+
+def concat_csr(parts: list[CSRBatch]) -> CSRBatch:
+    """Row-stack CSR batches (host side). The inverse of slicing: indptr
+    surgery only — per-part offsets accumulate, slack capacity is dropped."""
+    if not parts:
+        raise ValueError("need at least one CSRBatch to concatenate")
+    d = parts[0].shape[1]
+    if any(p.shape[1] != d for p in parts):
+        raise ValueError(
+            f"column counts differ: {[p.shape[1] for p in parts]}")
+    datas, indices, indptrs = [], [], [np.zeros((1,), np.int64)]
+    off = 0
+    for p in parts:
+        ptr = np.asarray(p.indptr).astype(np.int64)
+        stored = int(ptr[-1])
+        datas.append(np.asarray(p.data)[:stored])
+        indices.append(np.asarray(p.indices)[:stored])
+        indptrs.append(ptr[1:] + off)
+        off += stored
+    return CSRBatch(
+        data=np.concatenate(datas).astype(np.float32),
+        indices=np.concatenate(indices).astype(np.int32),
+        indptr=np.concatenate(indptrs).astype(np.int32),
+        shape=(sum(p.shape[0] for p in parts), d))
+
+
+def shard_row_mask(n: int, n_shards: int) -> np.ndarray:
+    """[n_shards, rows_per_shard] bool — True on real rows, False on the
+    padded tail ``shard_csr`` appends so every shard has equal row count."""
+    rows = -(-n // n_shards)
+    gids = np.arange(n_shards * rows).reshape(n_shards, rows)
+    return gids < n
+
+
+def pad_csr_capacity(pieces: list[CSRBatch], *, rows: int | None = None,
+                     nnz_multiple: int = 1) -> list[CSRBatch]:
+    """Equalize a list of CSR pieces into mesh-ready shards: every output
+    has ``rows`` rows (short pieces get empty tail rows) and one shared nnz
+    capacity (max piece nnz rounded up to ``nnz_multiple``; slack beyond
+    ``indptr[-1]`` per the capacity contract). The single O(nnz) copy of
+    the sharding path — feed it view pieces (``slice_rows``/``take_rows``)
+    and each stored value is copied exactly once."""
+    if not pieces:
+        raise ValueError("need at least one piece")
+    rows = max(p.shape[0] for p in pieces) if rows is None else int(rows)
+    cap = max(int(np.asarray(p.indptr)[-1]) for p in pieces)
+    cap = -(-cap // nnz_multiple) * nnz_multiple
+    out = []
+    for p in pieces:
+        if p.shape[0] > rows:
+            raise ValueError(f"piece has {p.shape[0]} rows > rows={rows}")
+        ptr = np.asarray(p.indptr).astype(np.int32)
+        stored = int(ptr[-1])
+        if p.shape[0] < rows:                       # empty-row tail padding
+            ptr = np.concatenate(
+                [ptr, np.full((rows - p.shape[0],), stored, np.int32)])
+        data = np.zeros((cap,), np.float32)
+        data[:stored] = np.asarray(p.data)[:stored]
+        indices = np.zeros((cap,), np.int32)
+        indices[:stored] = np.asarray(p.indices)[:stored]
+        out.append(CSRBatch(data=data, indices=indices, indptr=ptr,
+                            shape=(rows, p.shape[1])))
+    return out
+
+
+def shard_csr(batch: CSRBatch, n_shards: int, *,
+              nnz_multiple: int = 1) -> list[CSRBatch]:
+    """Row-split ``batch`` into ``n_shards`` equal-shape CSR shards — the
+    indptr surgery that puts one mini-batch across the mesh.
+
+    Shard k owns the contiguous rows [k*rows, (k+1)*rows) with
+    rows = ceil(n / n_shards); its indptr is rebased to start at 0. Two
+    paddings make the shards mesh-ready (identical leaf shapes for
+    shard_map / device_put with a row NamedSharding):
+
+    * row padding — trailing shards short on rows get *empty* rows
+      appended. ``to_dense`` shows them as all-zero rows; they must be
+      weight-masked downstream so they never bias centroids
+      (``shard_row_mask`` gives the mask).
+    * nnz padding — every shard's data/indices are zero-filled up to the
+      max shard nnz (rounded up to ``nnz_multiple``). The slack lives
+      beyond ``indptr[-1]`` per the module's capacity contract.
+
+    Oracle: ``to_dense(shard_csr(b, p)[k])`` equals the dense row block
+    ``to_dense(b)[k*rows:(k+1)*rows]`` zero-padded to ``rows`` rows.
+    """
+    if n_shards < 1:
+        raise ValueError(f"need n_shards >= 1, got {n_shards}")
+    n = batch.shape[0]
+    rows = -(-n // n_shards)
+    pieces = [slice_rows(batch, k * rows, min((k + 1) * rows, n))
+              for k in range(n_shards)]
+    return pad_csr_capacity(pieces, rows=rows, nnz_multiple=nnz_multiple)

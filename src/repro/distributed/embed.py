@@ -11,12 +11,29 @@ size, strictly less whenever C*m < N/B (always, in the paper's regimes).
 Row padding (to divide the mesh) is weight-masked rather than replicated, so
 padded rows never bias the centroid means.
 
+Ingestion is staged: ``stage`` turns a raw host batch — dense [n, d] rows
+OR a ``repro.data.sparse.CSRBatch`` — into a mesh-resident ``StagedBatch``
+whose leaves were ``device_put`` with the row ``NamedSharding``, so the H2D
+copy lands pre-sharded. A CSR batch is row-split on the host with the
+``slice_rows``/``take_rows`` indptr surgery (``shard_csr`` is the tested
+reference form of that split; ``_stage_csr`` additionally replicates
+weight-masked ghost rows and writes shards straight into flat staging
+buffers) and each device runs the O(nnz) count-sketch on its own shard
+inside shard_map
+(``repro.approx.sketch.count_sketch_features_csr`` — the jnp twin of the
+Pallas scatter-add kernel in ``kernels/sketch_assign.py``, which consumes
+dense row tiles and therefore serves the dense/predict path). No [n, d]
+dense array exists anywhere between disk and device. ``source`` wraps a raw
+batch iterable in a ``BatchSource`` that runs ``stage`` in a background
+prefetch thread (the paper's §3.3 producer/consumer offload).
+
 Host-side outer loop mirrors ``repro.approx.embed_kmeans.fit_embedded``:
 O(C*m) state across batches, exact Eq.12-style convex merge (no medoid
 re-approximation — centroids are explicit vectors here).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Iterable, Optional
 
@@ -30,13 +47,46 @@ from repro.core.init import kmeans_pp_indices
 from repro.core.kernels import KernelSpec
 from repro.core.kkmeans import BIG
 from repro.core.minibatch import BatchStats, FitResult, MiniBatchConfig
+from repro.data.loader import BatchSource
+from repro.data.sparse import (CSRBatch, concat_csr, is_sparse, slice_rows,
+                               take_rows)
 
 from .compat import shard_map
-from .mesh import axis_size, row_axes_of
+from .mesh import axis_size, ghost_row_ids, row_axes_of
 
 Array = jax.Array
 
 _LINEAR = KernelSpec("linear")
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedBatch:
+    """A mini-batch already resident on the mesh, row-sharded.
+
+    Dense: ``x`` [P*rows, d] with spec (rows, None). CSR: the three CSR
+    leaves flattened shard-major — device k owns shard k's slice of
+    ``data``/``indices`` [P*cap] and ``indptr`` [P*(rows+1)] — so a
+    shard_map body can rebuild its local ``CSRBatch`` with static shape
+    (rows, d). ``wgt`` [P*rows] is 0 on padded rows (they never bias
+    centroids). ``n`` is the logical (unpadded) row count.
+    """
+
+    wgt: Array
+    n: int
+    rows: int                 # rows per shard
+    d: int
+    x: Optional[Array] = None
+    data: Optional[Array] = None
+    indices: Optional[Array] = None
+    indptr: Optional[Array] = None
+    cap: int = 0              # nnz capacity per shard
+
+    @property
+    def sparse(self) -> bool:
+        return self.x is None
+
+    def __len__(self) -> int:
+        return self.n
 
 
 def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
@@ -103,34 +153,187 @@ class DistributedEmbedKMeans:
         self.row_axes = row_axes_of(mesh)
         self.d_size = axis_size(mesh, self.row_axes)
         self._row_sharding = NamedSharding(mesh, P(self.row_axes, None))
-
-    def _ensure_fmap(self, first_batch: Array):
-        if self.fmap is None:
-            from repro import approx
-            cfg = self.cfg
-            m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
-            self.fmap = approx.make_feature_map(
-                cfg.method, jax.random.PRNGKey(cfg.seed), first_batch, m,
-                cfg.kernel, orthogonal=cfg.rff_orthogonal)
-        return self.fmap
-
-    def _batch_step(self, x: Array, wgt: Array, centroids0: Array,
-                    mask0: Array):
+        self._vec_sharding = NamedSharding(mesh, P(self.row_axes))
+        # mesh programs are built once and jitted: a streaming fit calls
+        # them once per mini-batch, and rebuilding the shard_map wrapper
+        # each call would re-trace (and re-compile) every batch.
+        self._embed_fns: dict = {}
         fn = partial(_shard_lloyd, row_axes=self.row_axes,
-                     n_clusters=self.cfg.n_clusters,
-                     max_iters=self.cfg.max_inner_iters)
+                     n_clusters=cfg.n_clusters,
+                     max_iters=cfg.max_inner_iters)
         rowspec = P(self.row_axes)
-        return shard_map(
+        self._lloyd_fn = jax.jit(shard_map(
             lambda z, w, c, mk: fn(z, w, c, mk),
             mesh=self.mesh,
             in_specs=(P(self.row_axes, None), rowspec, P(None, None), P()),
             out_specs=(rowspec, P(), P(), P(), P()),
-            check_vma=False,
-        )(x, wgt, centroids0, mask0)
+            check_vma=False))
 
-    def fit(self, batches: Iterable[np.ndarray], *,
+    def _ensure_fmap(self, sample):
+        """Sample the feature map from a batch (dense rows or CSRBatch); a
+        pre-staged first batch passes a structural sample instead — enough
+        for the data-oblivious maps (sketch/tensorsketch read only d; a
+        dense StagedBatch hands its mesh-resident rows to RFF/Nystrom)."""
+        if self.fmap is None:
+            from repro import approx
+            cfg = self.cfg
+            if isinstance(sample, StagedBatch):
+                # dense: the UNPADDED rows, so a data-dependent map
+                # (Nystrom landmarks) sees exactly what the inline path's
+                # raw batch gives it — ghost rows must not alter the model.
+                sample = (CSRBatch(data=np.zeros((0,), np.float32),
+                                   indices=np.zeros((0,), np.int32),
+                                   indptr=np.zeros((1,), np.int32),
+                                   shape=(0, sample.d))
+                          if sample.sparse else sample.x[:sample.n])
+            m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
+            self.fmap = approx.make_feature_map(
+                cfg.method, jax.random.PRNGKey(cfg.seed), sample, m,
+                cfg.kernel, orthogonal=cfg.rff_orthogonal)
+        return self.fmap
+
+    # -- staging: host batch -> mesh-resident, pre-sharded -----------------
+
+    def stage(self, xb) -> "StagedBatch":
+        """Pad + shard + device_put one raw batch (dense or CSR). Runs on
+        the host (a PrefetchLoader producer thread via ``source``, or inline
+        in ``fit``); the H2D copies land pre-sharded on the mesh."""
+        if isinstance(xb, StagedBatch):
+            return xb
+        if is_sparse(xb):
+            return self._stage_csr(xb)
+        return self._stage_dense(np.asarray(xb, np.float32))
+
+    def _wgt(self, n: int, pad: int) -> np.ndarray:
+        wgt = np.ones((n + pad,), np.float32)
+        if pad:
+            wgt[n:] = 0.0
+        return wgt
+
+    def _stage_dense(self, xb: np.ndarray) -> "StagedBatch":
+        n = len(xb)
+        idx = ghost_row_ids(n, self.d_size)
+        pad = len(idx)
+        if pad:   # replicate head rows so ghost rows are real points ...
+            xb = np.concatenate([xb, xb[idx]], axis=0)
+        wgt = self._wgt(n, pad)   # ... but weight-masked out of the means
+        # device_put straight from the HOST array: routing through
+        # jnp.asarray would commit the whole batch to the default device
+        # first and reshard device-to-device — the copy must land sharded.
+        x = jax.device_put(xb, self._row_sharding)
+        return StagedBatch(
+            wgt=jax.device_put(wgt, self._vec_sharding),
+            n=n, rows=(n + pad) // self.d_size, d=xb.shape[1], x=x)
+
+    def _stage_csr(self, xb: CSRBatch) -> "StagedBatch":
+        n, d = xb.shape
+        idx = ghost_row_ids(n, self.d_size)
+        pad = len(idx)
+        wgt = self._wgt(n, pad)
+        # Shard the PADDED row space [batch ++ ghost rows] directly: pieces
+        # are views (slice_rows) except where a shard straddles the ghost
+        # boundary — this is the prefetch producer's hot path, and a
+        # concat-then-reshard would copy every stored value twice.
+        rows = (n + pad) // self.d_size
+        pieces = []
+        for k in range(self.d_size):
+            a, z = k * rows, (k + 1) * rows
+            if z <= n:
+                pieces.append(slice_rows(xb, a, z))
+            elif a >= n:
+                pieces.append(take_rows(xb, idx[a - n:z - n]))
+            else:
+                pieces.append(concat_csr([slice_rows(xb, a, n),
+                                          take_rows(xb, idx[:z - n])]))
+        # nnz capacity quantized (geometric, ~12.5% max slack) so a long
+        # stream of ragged batches maps to a handful of leaf shapes — each
+        # distinct cap is a fresh trace + compile of the memoized embed
+        # program otherwise.
+        est = max(256, xb.nnz // self.d_size)   # lower bound on shard cap
+        quantum = max(256, 1 << max(0, est.bit_length() - 3))
+        stored = [int(np.asarray(p.indptr)[-1]) for p in pieces]
+        cap = -(-max(stored) // quantum) * quantum
+        # shard payloads are written straight into the flat [P*cap] staging
+        # buffers — the one O(nnz) copy this path pays.
+        p_ = self.d_size
+        data_g = np.zeros((p_ * cap,), np.float32)
+        idx_g = np.zeros((p_ * cap,), np.int32)
+        ptr_g = np.empty((p_ * (rows + 1),), np.int32)
+        for k, p in enumerate(pieces):
+            s = stored[k]
+            data_g[k * cap:k * cap + s] = np.asarray(p.data)[:s]
+            idx_g[k * cap:k * cap + s] = np.asarray(p.indices)[:s]
+            ptr_g[k * (rows + 1):(k + 1) * (rows + 1)] = \
+                np.asarray(p.indptr, dtype=np.int32)
+        put = lambda a: jax.device_put(a,   # noqa: E731  (host array in:
+            self._vec_sharding)             # the H2D copy lands sharded)
+        return StagedBatch(
+            wgt=put(wgt), n=n, rows=rows, d=d,
+            data=put(data_g), indices=put(idx_g),
+            indptr=put(ptr_g), cap=cap)
+
+    def source(self, batches: Iterable, *, depth: int = 2,
+               skip: int = 0) -> BatchSource:
+        """Wrap raw batches in a ``BatchSource`` whose background producer
+        stages each one onto this mesh (pre-sharded H2D overlap, §3.3)."""
+        return BatchSource(batches, stage=self.stage, prefetch=depth,
+                           skip=skip)
+
+    # -- per-device embedding ----------------------------------------------
+
+    def _embed_fn(self, kind_key):
+        """Memoized jitted shard_map program for one batch geometry. The
+        feature map rides in as a (replicated) pytree ARGUMENT, not a
+        closure, so the callable — and its compile cache — survives across
+        batches and fmap updates."""
+        if kind_key not in self._embed_fns:
+            rowvec = P(self.row_axes)
+            if kind_key[0] == "csr":
+                _, rows, d = kind_key
+
+                def shard_fn(fmap, data, indices, indptr):
+                    local = CSRBatch(data=data, indices=indices,
+                                     indptr=indptr, shape=(rows, d))
+                    return fmap(local).astype(jnp.float32)
+
+                in_specs = (P(), rowvec, rowvec, rowvec)
+            else:
+                shard_fn = lambda fmap, xl: (  # noqa: E731
+                    fmap(xl).astype(jnp.float32))
+                in_specs = (P(), P(self.row_axes, None))
+            self._embed_fns[kind_key] = jax.jit(shard_map(
+                shard_fn, mesh=self.mesh, in_specs=in_specs,
+                out_specs=P(self.row_axes, None), check_vma=False))
+        return self._embed_fns[kind_key]
+
+    def _embed(self, st: "StagedBatch") -> Array:
+        """z = phi_m(rows) shard-locally; CSR shards run the O(nnz) sketch
+        on their own (data, indices, indptr) slices — the embedding is the
+        only dense array ever built from a sparse batch, and it is [rows, m]
+        per device, never [n, d]."""
+        if st.sparse:
+            fn = self._embed_fn(("csr", st.rows, st.d))
+            return fn(self.fmap, st.data, st.indices, st.indptr)
+        return self._embed_fn(("dense",))(self.fmap, st.x)
+
+    def _batch_step(self, x: Array, wgt: Array, centroids0: Array,
+                    mask0: Array):
+        return self._lloyd_fn(x, wgt, centroids0, mask0)
+
+    def fit(self, batches: Iterable, *,
             state: Optional[EmbedState] = None,
             checkpoint_cb=None) -> FitResult:
+        """Run the outer loop. ``batches`` may yield raw host batches (dense
+        rows or ``CSRBatch`` — staged inline) or pre-staged ``StagedBatch``es
+        (a ``source``/``BatchSource`` with the background producer). A
+        closable source is closed on exit, success or failure, so an early
+        error never leaks the producer thread."""
+        from repro.data.loader import closing_source
+        with closing_source(batches):
+            return self._fit(batches, state=state,
+                             checkpoint_cb=checkpoint_cb)
+
+    def _fit(self, batches: Iterable, *, state, checkpoint_cb) -> FitResult:
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed)
         history: list[BatchStats] = []
@@ -139,33 +342,25 @@ class DistributedEmbedKMeans:
             raise ValueError("resuming requires the original fmap")
 
         for i, xb in enumerate(batches, start=start):
-            xb = np.asarray(xb, np.float32)
-            fmap = self._ensure_fmap(jnp.asarray(xb))
-            n = len(xb)
-            pad = (-n) % self.d_size
-            wgt = np.ones((n + pad,), np.float32)
-            if pad:
-                xb = np.concatenate([xb, xb[:pad]], axis=0)
-                wgt[n:] = 0.0
-            x = jax.device_put(jnp.asarray(xb), self._row_sharding)
-            wgt = jax.device_put(jnp.asarray(wgt),
-                                 NamedSharding(self.mesh, P(self.row_axes)))
-            # embed rows shard-locally (embarrassingly parallel).
-            z = shard_map(lambda xl: fmap(xl).astype(jnp.float32),
-                          mesh=self.mesh,
-                          in_specs=P(self.row_axes, None),
-                          out_specs=P(self.row_axes, None),
-                          check_vma=False)(x)
+            self._ensure_fmap(xb)
+            st = self.stage(xb)
+            wgt = st.wgt
+            # embed rows shard-locally (embarrassingly parallel, O(nnz) on
+            # CSR shards).
+            z = self._embed(st)
 
             sub = jax.random.fold_in(key, i)
             if state is None:
                 # k-means++ seeds in embedded space (replicated, O(n*C)) —
-                # same seeding as the single-device first batch.
-                zsq = jnp.sum(z ** 2, axis=1)
-                seeds = kmeans_pp_indices(z, zsq, sub,
+                # over the UNPADDED rows only: ghost rows would double some
+                # points' D^2 mass and shift every categorical draw, and the
+                # seeding must match the single-host oracle bit-for-bit.
+                zn = z[:st.n]
+                zsq = jnp.sum(zn ** 2, axis=1)
+                seeds = kmeans_pp_indices(zn, zsq, sub,
                                           n_clusters=cfg.n_clusters,
                                           spec=_LINEAR)
-                centroids0 = jnp.take(z, seeds, axis=0)
+                centroids0 = jnp.take(zn, seeds, axis=0)
                 mask0 = jnp.ones((cfg.n_clusters,), bool)
                 cards = jnp.zeros((cfg.n_clusters,), jnp.float32)
             else:

@@ -10,6 +10,7 @@ from __future__ import annotations
 import math
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -42,3 +43,14 @@ def axis_size(mesh: Mesh, names: tuple[str, ...] | str) -> int:
 def row_axes_of(mesh: Mesh) -> tuple[str, ...]:
     """Row (data-parallel) axes: every mesh axis except 'model'."""
     return tuple(n for n in mesh.axis_names if n != "model")
+
+
+def ghost_row_ids(n: int, multiple: int) -> np.ndarray:
+    """Source row ids for the ghost rows that pad an n-row batch up to a
+    ``multiple`` of the mesh row count: head rows repeated modulo n, so a
+    tail batch SMALLER than the mesh (a stream's last yield) pads correctly
+    instead of indexing past the batch. Shared by the dense, CSR and exact
+    staging paths — the replication convention must not drift apart."""
+    if n < 1:
+        raise ValueError("cannot stage an empty batch onto the mesh")
+    return np.arange((-n) % multiple) % n

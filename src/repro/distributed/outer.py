@@ -31,6 +31,7 @@ from repro.core.minibatch import BatchStats, FitResult, GlobalState, MiniBatchCo
 
 from .compat import shard_map
 from .inner import DistributedInnerConfig, distributed_kkmeans_fit
+from .mesh import ghost_row_ids
 
 Array = jax.Array
 
@@ -161,16 +162,26 @@ class DistributedMiniBatchKMeans:
 
         for i, xb in enumerate(batches, start=start):
             n = len(xb)
-            pad = (-n) % self.d_size
-            if pad:   # replicate final rows so shapes divide the mesh
-                xb = np.concatenate([xb, xb[:pad]], axis=0)
+            idx = ghost_row_ids(n, self.d_size)
+            if len(idx):
+                # Replicate rows so shapes divide the mesh. KNOWN BIAS: the
+                # exact inner loop has no row weights, so the <= P-1 ghost
+                # rows of a non-divisible batch are counted in cardinalities
+                # and the Eq.12 alpha (an O(P / (N/B)) perturbation). The
+                # embedded path masks ghosts exactly (StagedBatch.wgt);
+                # weighting the exact loop is an open ROADMAP item.
+                xb = np.concatenate([xb, np.asarray(xb)[idx]], axis=0)
             x = self._put_rows(np.asarray(xb, np.float32))
             diag = shard_map(
                 lambda xl: spec.diag(xl), mesh=self.mesh,
                 in_specs=P(self.row_axes, None), out_specs=P(self.row_axes),
                 check_vma=False)(x)
             n_l = self._landmark_count(x.shape[0])
-            key, k_lm, k_pp = jax.random.split(jax.random.fold_in(key, i), 3)
+            # pure per-batch schedule — batch i's draws depend only on
+            # (cfg.seed, i), so a checkpoint-resumed fit replays the same
+            # landmarks as the uninterrupted run (same fix as
+            # core/minibatch.fit and the embedded path).
+            k_lm, k_pp = jax.random.split(jax.random.fold_in(key, i))
             l_idx = choose_landmarks(k_lm, x.shape[0], n_l)
             landmarks = jnp.take(x, l_idx, axis=0)   # [L, d] replicated
 

@@ -1,19 +1,33 @@
 """Elastic execution of the clustering outer loop.
 
 The mini-batch boundary is the natural failure/rescale domain: the global
-state is O(C*d) and mesh-independent, and the memory plan (Eq.19) is a pure
-function of (N, C, P, R) — so on any mesh change we re-plan B and resume from
-the last committed checkpoint, losing at most one mini-batch of work.
+state is O(C*d) (exact) or O(C*m) (embedded) and mesh-independent, and the
+memory plan (Eq.19) is a pure function of (N, C, P, R) — so on any mesh
+change we re-plan B and resume from the last committed checkpoint, losing
+at most one mini-batch of work.
+
+Works on a live stream: ``run`` accepts any batch iterable or a
+``repro.data.BatchSource``; on resume the committed prefix is skipped
+host-side (never staged), and the source is closed on every exit path so
+the prefetch producer thread survives neither a failure nor a re-mesh.
+
+Embedded methods (``cfg.method != "exact"``) checkpoint the sampled feature
+map next to the ``EmbedState`` — the map is part of the model, and a
+restart (possibly on a different mesh) must embed with bit-identical
+parameters or the resumed stream diverges.
 """
 from __future__ import annotations
 
-from typing import Callable, Iterable, Optional
+from typing import Iterable, Optional
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.approx.embed_kmeans import EmbedState
 from repro.core.minibatch import FitResult, GlobalState, MiniBatchConfig
+from repro.data.loader import BatchSource, closing_source
+from repro.distributed.embed import DistributedEmbedKMeans
 from repro.distributed.outer import DistributedMiniBatchKMeans
 
 from .checkpoint import CheckpointManager
@@ -21,47 +35,93 @@ from .checkpoint import CheckpointManager
 
 class ElasticClusteringRunner:
     def __init__(self, cfg: MiniBatchConfig, ckpt: CheckpointManager, *,
-                 mode: str = "materialize"):
+                 mode: str = "materialize", prefetch: int = 0):
         self.cfg = cfg
         self.ckpt = ckpt
         self.mode = mode
+        self.prefetch = prefetch
 
-    def _restore(self) -> Optional[GlobalState]:
+    # -- checkpoint structure ------------------------------------------------
+
+    def _fmap_like(self, extra: dict):
+        """Structural twin of the checkpointed feature map: same pytree
+        treedef (aux data incl. m comes from cfg + the manifest extra), leaf
+        values irrelevant — ``CheckpointManager.restore`` only keeps the
+        structure and reloads every leaf from disk."""
+        from repro import approx
+        m, d = int(extra["m"]), int(extra["d"])
+        sample = np.zeros((max(m, 2), d), np.float32)
+        return approx.make_feature_map(
+            self.cfg.method, jax.random.PRNGKey(0), sample, m,
+            self.cfg.kernel, orthogonal=self.cfg.rff_orthogonal)
+
+    def _restore(self):
+        """-> (state | None, fmap | None) from the latest committed step."""
         step = self.ckpt.latest_step()
         if step is None:
-            return None
-        like = GlobalState(
-            medoids=np.zeros((1,)), medoid_diag=np.zeros((1,)),
-            cardinalities=np.zeros((1,)), batches_done=np.zeros((), np.int32))
-        # shapes come from the manifest; ``like`` only fixes the structure.
-        return GlobalState(*self.ckpt.restore(step, like))
+            return None, None
+        if self.cfg.method == "exact":
+            like = GlobalState(
+                medoids=np.zeros((1,)), medoid_diag=np.zeros((1,)),
+                cardinalities=np.zeros((1,)),
+                batches_done=np.zeros((), np.int32))
+            # shapes come from the manifest; ``like`` only fixes structure.
+            return GlobalState(*self.ckpt.restore(step, like)), None
+        like = {
+            "state": EmbedState(
+                centroids=np.zeros((1,)), cardinalities=np.zeros((1,)),
+                batches_done=np.zeros((), np.int32)),
+            "fmap": self._fmap_like(self.ckpt.extra(step)),
+        }
+        got = self.ckpt.restore(step, like)
+        return EmbedState(*got["state"]), got["fmap"]
 
-    def run(self, mesh: Mesh, batches: Iterable[np.ndarray], *,
+    # -- driver --------------------------------------------------------------
+
+    def run(self, mesh: Mesh, batches: Iterable, *,
             fail_after: Optional[int] = None) -> FitResult:
         """Run (or resume) on ``mesh``. ``fail_after=k`` injects a simulated
         failure after k mini-batches (tests / chaos drills)."""
-        state = self._restore()
+        state, fmap = self._restore()
         start = int(state.batches_done) if state is not None else 0
+        cfg = self.cfg
 
-        def cb(s: GlobalState, i: int):
-            self.ckpt.save(i, s, extra={"n_batches": self.cfg.n_batches,
-                                        "s": self.cfg.s})
+        if cfg.method == "exact":
+            runner = DistributedMiniBatchKMeans(mesh, cfg, mode=self.mode)
 
-        runner = DistributedMiniBatchKMeans(mesh, self.cfg, mode=self.mode)
-        it = iter(batches)
-        # skip already-committed batches on resume
-        for _ in range(start):
-            next(it)
+            def cb(s, i: int):
+                self.ckpt.save(i, s, extra={"n_batches": cfg.n_batches,
+                                            "s": cfg.s})
+        else:
+            runner = DistributedEmbedKMeans(mesh, cfg, fmap=fmap)
 
-        if fail_after is not None:
-            consumed = []
-            for i, b in enumerate(it):
-                consumed.append(b)
-                if i + 1 >= fail_after:
-                    break
-            result = runner.fit(consumed, state=state, checkpoint_cb=cb)
-            raise SimulatedFailure(result)
-        return runner.fit(it, state=state, checkpoint_cb=cb)
+            def cb(s, i: int):
+                fm = runner.fmap
+                self.ckpt.save(i, {"state": s, "fmap": fm},
+                               extra={"n_batches": cfg.n_batches,
+                                      "s": cfg.s, "method": cfg.method,
+                                      "m": fm.dim, "d": fm.in_dim})
+
+        if isinstance(batches, BatchSource):
+            src = batches
+        else:
+            # prefetch staging: mesh-aware for the embedded runner (H2D
+            # lands pre-sharded); host-identity for the exact runner, whose
+            # fit stages its own rows — the loader default would bounce
+            # every batch through the default device and back.
+            stage = runner.stage if cfg.method != "exact" else (lambda b: b)
+            src = BatchSource(batches, prefetch=self.prefetch, stage=stage)
+        src.skip(start)     # committed prefix: dropped host-side, not staged
+        with closing_source(src):
+            if fail_after is not None:
+                consumed = []
+                for i, b in enumerate(src):
+                    consumed.append(b)
+                    if i + 1 >= fail_after:
+                        break
+                result = runner.fit(consumed, state=state, checkpoint_cb=cb)
+                raise SimulatedFailure(result)
+            return runner.fit(src, state=state, checkpoint_cb=cb)
 
 
 class SimulatedFailure(RuntimeError):

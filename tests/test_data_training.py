@@ -99,6 +99,174 @@ def test_prefetch_loader_propagates_errors():
         list(loader)
 
 
+def test_stream_blocks_ragged_chunk_sizes():
+    """Offset-carrying re-chunker must be exact over adversarially ragged
+    chunks (regression for the buffer-reconcat rewrite): sizes straddle the
+    batch boundary every way — sub-batch, exact, multi-batch, empty."""
+    rng = np.random.default_rng(3)
+    sizes = [1, 7, 0, 2, 23, 5, 0, 1, 1, 12, 4]
+    chunks = [rng.normal(size=(s, 3)).astype(np.float32) for s in sizes]
+    flat = np.concatenate(chunks, axis=0)                 # 56 rows
+    for bs in (1, 4, 5, 56, 100):
+        out = list(stream_blocks(iter(chunks), bs))
+        lens = [len(b) for b in out]
+        n = len(flat)
+        assert lens == [bs] * (n // bs) + ([n % bs] if n % bs else [])
+        np.testing.assert_array_equal(np.concatenate(out, axis=0), flat)
+
+
+def test_stream_blocks_copies_out_of_reused_buffers():
+    """Regression: a reader that reuses one read buffer must not have
+    queued batches corrupted — chunks are owned on arrival, including when
+    a batch spans several pulls (the buffered reference would otherwise see
+    the NEXT read's bytes)."""
+    buf = np.empty((4, 2), np.float32)
+
+    def reader(n_chunks):
+        for i in range(n_chunks):
+            buf[:] = float(i + 1)
+            yield buf
+
+    out = list(stream_blocks(reader(3), 4))    # one batch per chunk
+    for i, b in enumerate(out):
+        assert not np.shares_memory(b, buf)
+        np.testing.assert_array_equal(b, np.full((4, 2), i + 1, np.float32))
+
+    out = list(stream_blocks(reader(4), 8))    # each batch spans two pulls
+    want = np.repeat(np.arange(1.0, 5.0), 4).astype(np.float32)
+    np.testing.assert_array_equal(np.concatenate(out)[:, 0], want)
+
+
+def test_stream_blocks_csr_and_mixed_chunks():
+    """CSR chunk streams stay CSR; a batch touched by both kinds is
+    promoted to CSR (sparse data is never densified)."""
+    from repro.data.sparse import csr_from_dense, is_sparse, slice_rows, to_dense
+
+    rng = np.random.default_rng(4)
+    x = (rng.random((20, 6)) * (rng.random((20, 6)) < 0.4)).astype(np.float32)
+    b = csr_from_dense(x)
+
+    csr_chunks = [slice_rows(b, i, j) for i, j in [(0, 3), (3, 11), (11, 20)]]
+    out = list(stream_blocks(iter(csr_chunks), 7))
+    assert all(is_sparse(c) for c in out)
+    np.testing.assert_array_equal(
+        np.concatenate([to_dense(c) for c in out]), x)
+
+    mixed = [slice_rows(b, 0, 3), x[3:11], slice_rows(b, 11, 20)]
+    out = list(stream_blocks(iter(mixed), 7))
+    assert all(is_sparse(c) for c in out)      # promotion, not densification
+    np.testing.assert_array_equal(
+        np.concatenate([to_dense(c) for c in out]), x)
+
+
+def test_prefetch_loader_close_releases_producer():
+    """Regression: a consumer that breaks out early (elastic re-mesh,
+    error) must be able to release the producer thread — it used to block
+    forever on the full queue."""
+    def endless():
+        i = 0
+        while True:
+            yield np.full((2, 2), i, np.float32)
+            i += 1
+
+    loader = PrefetchLoader(endless(), depth=2)
+    it = iter(loader)
+    next(it)                          # consume one batch, then abandon
+    assert loader._thread.is_alive()  # producer parked on the full queue
+    loader.close()
+    assert not loader._thread.is_alive()
+    loader.close()                    # idempotent
+
+
+def test_prefetch_loader_iteration_after_close_terminates():
+    """Regression: next() on an iterator whose loader was closed must end
+    the iteration once the queue drains, not block forever on get()."""
+    def endless():
+        while True:
+            yield np.zeros((1, 1), np.float32)
+
+    loader = PrefetchLoader(endless(), depth=2)
+    it = iter(loader)
+    next(it)
+    loader.close()
+    rest = list(it)                  # leftover staged items, then clean end
+    assert len(rest) <= 2
+
+
+def test_prefetch_loader_context_manager():
+    def endless():
+        while True:
+            yield np.zeros((1, 1), np.float32)
+
+    with PrefetchLoader(endless(), depth=1) as loader:
+        next(iter(loader))
+    assert not loader._thread.is_alive()
+
+
+def test_prefetch_loader_coerces_array_likes():
+    """Historical contract: list batches and off-dtype arrays come out as
+    single float32 device arrays, not pytrees of scalars."""
+    out = list(PrefetchLoader([[[1.0, 2.0], [3.0, 4.0]],
+                               np.ones((2, 2), np.float64)], depth=2))
+    for b in out:
+        assert isinstance(b, jax.Array)
+        assert b.shape == (2, 2) and b.dtype == jnp.float32
+
+
+def test_prefetch_loader_stages_pytree_batches():
+    """CSR batches flow through the loader as pytrees: leaves device_put,
+    values bit-preserved."""
+    from repro.data.sparse import CSRBatch, csr_from_dense, to_dense
+
+    rng = np.random.default_rng(5)
+    x = (rng.random((9, 5)) * (rng.random((9, 5)) < 0.5)).astype(np.float32)
+    out = list(PrefetchLoader([csr_from_dense(x), x], depth=2))
+    assert isinstance(out[0], CSRBatch)
+    assert isinstance(out[0].data, jax.Array)
+    np.testing.assert_array_equal(to_dense(out[0]), x)
+    np.testing.assert_array_equal(np.asarray(out[1]), x)
+
+
+def test_batch_source_skip_and_lifecycle():
+    """BatchSource: from_dataset splits, skip() drops host-side (resume),
+    from_stream re-chunks, close() releases the prefetch producer."""
+    from repro.data.loader import BatchSource
+
+    x = np.arange(40, dtype=np.float32).reshape(20, 2)
+    parts = [len(b) for b in BatchSource.from_dataset(x, 4, "block")]
+    assert parts == [5, 5, 5, 5]
+
+    src = BatchSource.from_dataset(x, 4, "block").skip(2)
+    got = np.concatenate(list(src))
+    np.testing.assert_array_equal(got, x[10:])
+
+    chunks = [x[:3], x[3:16], x[16:]]
+    with BatchSource.from_stream(chunks, 6, prefetch=2) as src:
+        first = next(iter(src))
+        assert len(first) == 6
+    assert src._loader is None or not src._loader._thread.is_alive()
+
+
+def test_batch_source_reiteration_closes_previous_producer():
+    """Regression: abandoning one iteration and starting another must not
+    orphan the first producer thread (close() only knew the latest)."""
+    from repro.data.loader import BatchSource
+
+    def endless():
+        while True:
+            yield np.zeros((2, 2), np.float32)
+
+    src = BatchSource(endless(), prefetch=2)
+    next(iter(src))
+    first_loader = src._loader
+    assert first_loader._thread.is_alive()
+    next(iter(src))                 # second iteration spawns a new producer
+    assert not first_loader._thread.is_alive()   # previous one released
+    second_loader = src._loader
+    src.close()
+    assert not second_loader._thread.is_alive()
+
+
 # ---------------------------------------------------------------------------
 # optimizer / schedule / grad accumulation
 # ---------------------------------------------------------------------------

@@ -167,3 +167,242 @@ def test_collective_structure_matches_paper():
     assert res["ar"] >= 1, "missing the paper's all-reduce(g)"
     # kernel matrix never crosses the network (paper's key property):
     assert res["total"] < 0.05 * res["k_bytes"]
+
+
+@pytest.mark.slow
+def test_distributed_csr_fit_equals_dense_oracle():
+    """Sharded-CSR ingestion correctness (interpret-mode, 8 host devices):
+    the distributed fit on prefetch-staged CSR shards must label exactly
+    like the single-host fit on the densified oracle — the pipeline
+    (shard_csr surgery, slack capacity, masked padding, per-device O(nnz)
+    sketch, psum merge) adds nothing."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.core.minibatch import fit
+        from repro.data import split_batches, split_csr, to_dense
+        from repro.data.synthetic import make_rcv1_sparse
+        from repro.distributed.embed import DistributedEmbedKMeans
+
+        xs, y = make_rcv1_sparse(2048, vocab=4096, n_classes=8, seed=0)
+        cfg = MiniBatchConfig(n_clusters=8, n_batches=4,
+                              kernel=KernelSpec("linear"), seed=0,
+                              method="sketch", embed_dim=128)
+        dense = to_dense(xs)
+        res_host = fit(split_batches(dense, 4, strategy="stride"), cfg)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        km = DistributedEmbedKMeans(mesh, cfg)
+        with km.source(split_csr(xs, 4, strategy="stride"), depth=2) as src:
+            res_dist = km.fit(src)
+
+        lab_d = np.asarray(res_dist.predict(xs))
+        lab_h = np.asarray(res_host.predict(dense))
+        cerr = float(np.abs(np.asarray(res_dist.state.centroids)
+                            - np.asarray(res_host.state.centroids)).max())
+        print(json.dumps({
+            "same": bool((lab_d == lab_h).all()), "cerr": cerr,
+            "total": float(np.asarray(res_dist.state.cardinalities).sum()),
+            "n": len(xs)}))
+    """)
+    assert res["same"], "distributed CSR labels diverged from dense oracle"
+    assert res["cerr"] < 1e-5
+    assert res["total"] == res["n"]     # masked padding never hits counts
+
+
+@pytest.mark.slow
+def test_staging_tail_batch_smaller_than_mesh():
+    """Regression: a stream's last batch can be SMALLER than the mesh row
+    count — staging used to index past the batch (CSR) or ship a short
+    array into the row sharding (dense). Modulo-replicated ghost rows must
+    keep the fit running with exact masked cardinalities; and a pre-staged
+    first batch must give a data-dependent map (Nystrom) the same sample as
+    the inline path — identical centroids either way."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.data.sparse import csr_from_dense
+        from repro.distributed.embed import DistributedEmbedKMeans
+
+        rng = np.random.default_rng(0)
+        n = 2048 + 3                              # 3-row tail on 8 devices
+        x = rng.normal(size=(n, 64)).astype(np.float32)
+        x *= (rng.random((n, 64)) < 0.2)
+        mesh = jax.make_mesh((8,), ("data",))
+
+        cfg = MiniBatchConfig(n_clusters=4, n_batches=2,
+                              kernel=KernelSpec("linear"), seed=0,
+                              method="sketch", embed_dim=64)
+        batches = [csr_from_dense(x[:2048]), csr_from_dense(x[2048:])]
+        km = DistributedEmbedKMeans(mesh, cfg)
+        with km.source(batches, depth=2) as src:
+            res_csr = km.fit(src)
+        dense_total = float(np.asarray(
+            DistributedEmbedKMeans(mesh, cfg).fit([x[:2048], x[2048:]])
+            .state.cardinalities).sum())
+
+        # nystrom: staged-first-batch sampling == inline sampling (pad > 0)
+        cfg_ny = MiniBatchConfig(n_clusters=3, n_batches=1,
+                                 kernel=KernelSpec("rbf", gamma=0.5),
+                                 seed=1, method="nystrom", embed_dim=12)
+        xb = rng.normal(size=(1021, 16)).astype(np.float32)   # pad = 3
+        inline = DistributedEmbedKMeans(mesh, cfg_ny).fit([xb])
+        km2 = DistributedEmbedKMeans(mesh, cfg_ny)
+        with km2.source([xb], depth=1) as src:
+            staged = km2.fit(src)
+        ny_same = bool((np.asarray(inline.state.centroids)
+                        == np.asarray(staged.state.centroids)).all())
+
+        # non-divisible FIRST batch: k-means++ must seed over the unpadded
+        # rows, or ghost rows shift every D^2 draw and the distributed fit
+        # silently diverges from the single-host oracle.
+        from repro.core.minibatch import fit
+        from repro.data.sparse import split_csr, to_dense
+        first_nd = [csr_from_dense(x[:1027]), csr_from_dense(x[1027:2048])]
+        km_nd = DistributedEmbedKMeans(mesh, cfg)
+        res_nd = km_nd.fit(first_nd)
+        host_nd = fit([x[:1027], x[1027:2048]], cfg)
+        seed_same = bool((np.asarray(res_nd.predict(csr_from_dense(x[:2048])))
+                          == np.asarray(host_nd.predict(x[:2048]))).all())
+
+        # exact path on a stream with the same 3-row tail (elastic
+        # advertises live streams for every method): modulo padding must
+        # keep the row sharding divisible.
+        cfg_ex = MiniBatchConfig(n_clusters=4, n_batches=2, s=1.0,
+                                 kernel=KernelSpec("rbf", gamma=0.5), seed=0)
+        from repro.distributed.outer import DistributedMiniBatchKMeans
+        res_ex = DistributedMiniBatchKMeans(mesh, cfg_ex).fit(
+            [x[:2048], x[2048:]])
+        exact_batches = int(res_ex.state.batches_done)
+
+        print(json.dumps({
+            "csr_total": float(np.asarray(res_csr.state.cardinalities).sum()),
+            "dense_total": dense_total, "n": n, "ny_same": ny_same,
+            "seed_same": seed_same, "exact_batches": exact_batches}))
+    """)
+    assert res["csr_total"] == res["n"]      # ghost rows masked out
+    assert res["dense_total"] == res["n"]
+    assert res["ny_same"], "staged Nystrom sampling diverged from inline"
+    assert res["seed_same"], "non-divisible first batch: seeding diverged"
+    assert res["exact_batches"] == 2         # tail batch staged, not crashed
+
+
+@pytest.mark.slow
+def test_distributed_exact_resume_bit_identical():
+    """Regression (same class as PR 2's minibatch fix): the distributed
+    exact path must draw per-batch keys purely from (seed, i), so a
+    checkpoint-resumed fit is bit-identical to the uninterrupted run —
+    non-separable data, s < 1, truncated inner loop, so any key divergence
+    shows in the medoids."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.data.sampling import split_batches
+        from repro.distributed.outer import DistributedMiniBatchKMeans
+
+        rng = np.random.default_rng(11)
+        x = rng.normal(size=(1024, 8)).astype(np.float32)
+        cfg = MiniBatchConfig(n_clusters=6, n_batches=4, s=0.4,
+                              kernel=KernelSpec("rbf", gamma=0.5),
+                              max_inner_iters=3, seed=5,
+                              landmark_multiple_of=8)
+        batches = split_batches(x, 4, strategy="stride")
+        mesh = jax.make_mesh((8,), ("data",))
+
+        km = DistributedMiniBatchKMeans(mesh, cfg)
+        straight = km.fit(batches)
+        half = DistributedMiniBatchKMeans(mesh, cfg).fit(batches[:2])
+        resumed = DistributedMiniBatchKMeans(mesh, cfg).fit(
+            batches[2:], state=half.state)
+        same = bool((np.asarray(straight.state.medoids)
+                     == np.asarray(resumed.state.medoids)).all())
+        print(json.dumps({"same": same}))
+    """)
+    assert res["same"], "exact distributed resume diverged (key schedule)"
+
+
+@pytest.mark.slow
+def test_streaming_sharded_csr_end_to_end():
+    """Acceptance: RCV1-scale synthetic stream (d >= 40k) through the full
+    pipeline — ragged CSR chunks -> stream_blocks -> prefetch staging ->
+    per-device O(nnz) sketch -> psum Lloyd — with the dense paths BOOBY-
+    TRAPPED so any [n, d] densification anywhere in the pipeline fails the
+    test. Labels must equal the single-host dense oracle bit-for-bit, and a
+    mid-stream checkpoint resume (elastic: smaller mesh) must reproduce the
+    straight run exactly."""
+    res = _run_subprocess("""
+        import tempfile
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.core.minibatch import fit
+        from repro.data import BatchSource, split_batches
+        from repro.data.sparse import is_sparse, slice_rows, to_dense
+        from repro.data.synthetic import make_rcv1_sparse
+        from repro.distributed.embed import DistributedEmbedKMeans
+        from repro.ft.checkpoint import CheckpointManager
+        from repro.ft.elastic import ElasticClusteringRunner, SimulatedFailure
+        import repro.approx.sketch as sketch_mod
+        import repro.data.sparse as sparse_mod
+
+        n, vocab, c, b = 2048, 40960, 10, 4
+        xs, y = make_rcv1_sparse(n, vocab=vocab, n_classes=c, seed=0)
+        dense = to_dense(xs)                       # oracle, built up front
+        cfg = MiniBatchConfig(n_clusters=c, n_batches=b, sampling="block",
+                              kernel=KernelSpec("linear"), seed=0,
+                              method="sketch", embed_dim=128)
+
+        rng = np.random.default_rng(1)
+        def stream():
+            bounds = np.unique(np.concatenate(
+                [[0], rng.integers(1, n, size=17), [n]]))
+            for a, z in zip(bounds[:-1], bounds[1:]):
+                chunk = slice_rows(xs, int(a), int(z))
+                assert is_sparse(chunk)
+                yield chunk
+
+        # booby-trap every densification route while the pipeline runs
+        def boom(*a, **k):
+            raise AssertionError("dense [n, d] path hit in CSR pipeline")
+        saved = (sparse_mod.to_dense, sketch_mod.count_sketch_features,
+                 sketch_mod.tensor_sketch_features)
+        sparse_mod.to_dense = boom
+        sketch_mod.count_sketch_features = boom
+        sketch_mod.tensor_sketch_features = boom
+
+        mesh = jax.make_mesh((8,), ("data",))
+        km = DistributedEmbedKMeans(mesh, cfg)
+        src = BatchSource.from_stream(stream(), n // b, stage=km.stage,
+                                      prefetch=2)
+        with src:
+            straight = km.fit(src)
+
+        # mid-stream failure after 2 committed batches, elastic resume on a
+        # SMALLER mesh from the checkpoint (fmap restored from disk).
+        with tempfile.TemporaryDirectory() as ckdir:
+            runner = ElasticClusteringRunner(cfg, CheckpointManager(ckdir))
+            try:
+                runner.run(mesh, BatchSource.from_stream(stream(), n // b),
+                           fail_after=2)
+                raise SystemExit("expected SimulatedFailure")
+            except SimulatedFailure:
+                pass
+            resumed = runner.run(
+                jax.make_mesh((4,), ("data",)),
+                BatchSource.from_stream(stream(), n // b))
+
+        (sparse_mod.to_dense, sketch_mod.count_sketch_features,
+         sketch_mod.tensor_sketch_features) = saved
+
+        # oracle: single-host fit on the dense matrix, same block batches
+        oracle = fit(split_batches(dense, b, strategy="block"), cfg)
+        lab_s = np.asarray(straight.predict(xs))
+        lab_o = np.asarray(oracle.predict(dense))
+        lab_r = np.asarray(resumed.predict(xs))
+        print(json.dumps({
+            "d": vocab,
+            "oracle_same": bool((lab_s == lab_o).all()),
+            "resume_same": bool((lab_r == lab_s).all()),
+            "batches": int(resumed.state.batches_done),
+            "cards": float(np.asarray(straight.state.cardinalities).sum())}))
+    """)
+    assert res["d"] >= 40000
+    assert res["oracle_same"], "streaming labels != single-host dense oracle"
+    assert res["resume_same"], "mid-stream resume diverged from straight run"
+    assert res["batches"] == 4
+    assert res["cards"] == 2048.0

@@ -1,0 +1,139 @@
+"""Streaming sharded ingestion: CSR shard/concat/slice primitives against
+the dense oracle, the sketch-on-shard invariant, and the planner's host
+staging footprint."""
+import jax
+import numpy as np
+import pytest
+
+from repro.approx import make_count_sketch
+from repro.core import KernelSpec, MachineSpec, host_staging_bytes, plan
+from repro.data.sparse import (concat_csr, csr_from_dense, shard_csr,
+                               shard_row_mask, slice_rows, split_csr,
+                               to_dense)
+
+# ---------------------------------------------------------------------------
+# shard_csr — property-style oracle checks
+# ---------------------------------------------------------------------------
+
+
+def _random_sparse(n, d, density, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32)
+            * (rng.random((n, d)) < density))
+
+
+@pytest.mark.parametrize("n,d,density,p", [
+    (23, 17, 0.3, 1), (23, 17, 0.3, 3), (23, 17, 0.3, 4),
+    (24, 8, 0.5, 4),                    # divides exactly: no row padding
+    (5, 8, 0.0, 2),                     # all-zero matrix: zero nnz capacity
+    (7, 8, 0.4, 7), (7, 8, 0.4, 10),    # one row per shard / p > n
+    (64, 33, 0.05, 8),
+])
+def test_shard_csr_matches_dense_row_split(n, d, density, p):
+    """to_dense(shard_csr(b, p)[k]) == the dense row block, zero-padded to
+    equal rows; all shards share one leaf geometry; the mask flags exactly
+    the padded tail."""
+    x = _random_sparse(n, d, density, seed=n + p)
+    shards = shard_csr(csr_from_dense(x), p)
+    mask = shard_row_mask(n, p)
+    rows = -(-n // p)
+    assert len(shards) == p
+    assert {(s.shape, s.nnz, len(np.asarray(s.indptr))) for s in shards} \
+        == {((rows, d), shards[0].nnz, rows + 1)}
+    for k, s in enumerate(shards):
+        want = np.zeros((rows, d), np.float32)
+        blk = x[min(k * rows, n):min((k + 1) * rows, n)]
+        want[:len(blk)] = blk
+        np.testing.assert_array_equal(to_dense(s), want)
+        assert int(mask[k].sum()) == len(blk)
+        # padded rows are empty, not replicated — the mask plus empty rows
+        # is what keeps them out of the centroid means.
+        assert (to_dense(s)[~mask[k]] == 0.0).all()
+
+
+def test_shard_csr_nnz_multiple_alignment():
+    b = csr_from_dense(_random_sparse(10, 16, 0.5, 0))
+    for s in shard_csr(b, 3, nnz_multiple=8):
+        assert s.nnz % 8 == 0
+        assert s.nnz >= int(np.asarray(s.indptr)[-1])
+
+
+def test_sketch_on_slack_shard_equals_sketch_on_oracle():
+    """The O(nnz) count-sketch must ignore slack capacity and padded rows —
+    z(shard) == z(to_dense(shard)) bit-for-bit is the invariant the
+    per-device distributed embed relies on."""
+    x = _random_sparse(19, 32, 0.3, 1)
+    fmap = make_count_sketch(jax.random.PRNGKey(0), 32, 16,
+                             KernelSpec("linear"))
+    for s in shard_csr(csr_from_dense(x), 4):
+        np.testing.assert_array_equal(np.asarray(fmap(s)),
+                                      np.asarray(fmap(to_dense(s))))
+
+
+def test_concat_slice_roundtrip_and_indptr_surgery():
+    x = _random_sparse(31, 9, 0.4, 2)
+    b = csr_from_dense(x)
+    parts = [slice_rows(b, i, j) for i, j in [(0, 4), (4, 4), (4, 20), (20, 31)]]
+    assert parts[1].shape == (0, 9)                      # empty slice ok
+    back = concat_csr(parts)
+    np.testing.assert_array_equal(to_dense(back), x)
+    # concat of slack-capacity shards drops the slack
+    np.testing.assert_array_equal(to_dense(concat_csr(shard_csr(b, 4))),
+                                  np.concatenate([x, np.zeros((1, 9))]))
+
+
+def test_concat_csr_rejects_mismatched_columns():
+    a = csr_from_dense(_random_sparse(3, 4, 0.5, 3))
+    c = csr_from_dense(_random_sparse(3, 5, 0.5, 3))
+    with pytest.raises(ValueError, match="column counts"):
+        concat_csr([a, c])
+
+
+def test_split_csr_unchanged_by_capacity_contract():
+    """split_csr (stride) still matches the dense index-set oracle after the
+    slack-capacity changes."""
+    x = _random_sparse(22, 11, 0.35, 4)
+    b = csr_from_dense(x)
+    for sp, dn in zip(split_csr(b, 3, strategy="stride"),
+                      [x[i::3] for i in range(3)]):
+        np.testing.assert_array_equal(to_dense(sp), dn)
+
+
+def test_exact_method_rejects_csr_batches_clearly():
+    """method='exact' cannot consume CSR — must fail with a named error at
+    the fit boundary, not an obscure TypeError deep in the kernel path."""
+    from repro.core import MiniBatchConfig
+    from repro.core.minibatch import fit_dataset
+
+    b = csr_from_dense(_random_sparse(30, 8, 0.5, 6))
+    cfg = MiniBatchConfig(n_clusters=3, n_batches=2)
+    with pytest.raises(ValueError, match="exact.*CSRBatch"):
+        fit_dataset(b, cfg)
+
+
+# ---------------------------------------------------------------------------
+# planner: host-side staging footprint
+# ---------------------------------------------------------------------------
+
+
+def test_plan_host_footprint_counts_prefetch_depth():
+    mach = MachineSpec(memory_bytes=16e9, n_processors=64)
+    p0 = plan(1_000_000, 50, mach, d=256, prefetch_depth=0)
+    p3 = plan(1_000_000, 50, mach, d=256, prefetch_depth=3)
+    assert p3.host_footprint == pytest.approx(4.0 * p0.host_footprint)
+    # a staged dense batch is Q * N/B * d bytes
+    assert p0.host_footprint == pytest.approx(4.0 * (1_000_000 / p0.b) * 256)
+
+
+def test_plan_host_footprint_prices_sparse_when_sketch_wins():
+    mach = MachineSpec(memory_bytes=16e9, n_processors=64)
+    sk = plan(1_000_000, 50, mach, d=47236, sketchable=True, density=2e-3,
+              prefetch_depth=2)
+    dn = plan(1_000_000, 50, mach, d=47236, prefetch_depth=2)
+    assert sk.method == "sketch"
+    assert sk.host_footprint < 0.05 * dn.host_footprint   # nnz-priced
+    nb = 1_000_000 / sk.b
+    assert sk.host_footprint == pytest.approx(
+        3.0 * (2 * 4 * 2e-3 * nb * 47236 + 4 * (nb + 1)))
+    assert host_staging_bytes(1000, 10, d=64, prefetch_depth=2) == \
+        pytest.approx(3 * 4 * 100 * 64)
