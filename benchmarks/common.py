@@ -26,6 +26,37 @@ def nearest_centroid(x: np.ndarray, centers: np.ndarray) -> np.ndarray:
     return d.argmin(1)
 
 
+def git_commit() -> str:
+    """Short commit hash of the repo the benchmarks run from ("unknown"
+    outside a git checkout) — stamped into every BENCH record so perf
+    trajectories can be pinned to code states."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def record_bench(name: str, seconds: float, *, mode: str,
+                 params: dict | None = None) -> str:
+    """Append-point of the perf trajectory: one ``results/BENCH_<name>.json``
+    per benchmark run — wall time, the workload knobs the benchmark reports
+    (n/B/s/m/method, via its payload's ``bench`` dict), mode and commit —
+    so future revisions have a baseline to diff against."""
+    bench_dir = os.environ.get("REPRO_BENCH", "results")
+    os.makedirs(bench_dir, exist_ok=True)
+    path = os.path.join(bench_dir, f"BENCH_{name}.json")
+    rec = {"benchmark": name, "seconds": seconds, "mode": mode,
+           "commit": git_commit(), "params": params or {}}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return path
+
+
 def save(name: str, payload: dict):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

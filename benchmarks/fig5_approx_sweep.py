@@ -11,18 +11,44 @@ embedding dimension m at fixed B — accuracy rises with m (approaching the
 exact kernel fit) while cost scales with n*m instead of s*(N/B)^2. Emitted
 under the same JSON schema (one record per grid point with accuracy and
 seconds) as the (B, s) grid.
+
+Selector sweep (repro.approx.selectors): on an rbf + imbalanced-blobs
+workload, sweep the *landmark-selection strategy* (uniform / kpp / rls) at
+each m. The claim under test is the planner's accuracy-per-byte frontier:
+ridge-leverage-score selection matches or beats uniform NMI at every m
+(small clusters carry high leverage; uniform sampling starves them), and
+``plan(...).frontier()`` must rank the strategies consistently with the
+measured sweep.
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
-                        gamma_from_dmax)
+from repro.core import (KernelSpec, MachineSpec, MiniBatchConfig,
+                        clustering_accuracy, gamma_from_dmax, nmi, plan)
 from repro.core.minibatch import fit_dataset, predict
 from repro.data.synthetic import make_mnist_like
 
 from .common import Timer, save, table
+
+
+def _imbalanced_blobs(n: int, d: int, c: int, *, seed: int,
+                      power: float = 1.8):
+    """Gaussian blobs with power-law cluster sizes: the workload where
+    landmark selection matters — a uniform m-sample rarely covers the
+    small clusters, while their rows carry high ridge leverage. The
+    selection effect lives at m ~ C (borderline rank); past ~2C any
+    landmark set spans these blobs and the strategies tie."""
+    rng = np.random.default_rng(seed)
+    sizes = (1.0 / np.arange(1, c + 1)) ** power
+    sizes = np.maximum((sizes / sizes.sum() * n).astype(np.int64), 8)
+    sizes[0] += n - sizes.sum()
+    y = np.repeat(np.arange(c), sizes).astype(np.int32)
+    centers = rng.normal(0.0, 6.0 / np.sqrt(d), size=(c, d))
+    x = centers[y] + rng.normal(0.0, 1.0 / np.sqrt(d), size=(len(y), d))
+    perm = rng.permutation(len(y))
+    return x[perm].astype(np.float32), y[perm]
 
 
 def run(fast: bool = True):
@@ -92,14 +118,81 @@ def run(fast: bool = True):
         print(f"[fig5] {method}: acc over m={ms}: "
               f"{[f'{a:.3f}' for a in accs]} (rise toward exact expected)")
 
+    # -- selector sweep: uniform vs kpp vs rls Nystrom (rbf, blobs) --------
+    n_sel = 3000 if fast else 20000
+    n_sel_te = 800 if fast else 4000
+    c_sel, d_sel = 12, 16
+    ms_sel = [12, 24, 48] if fast else [12, 24, 48, 96]
+    seeds = range(6)     # Lloyd-seeding noise >> selector effect per seed
+    xs_all, ys_all = _imbalanced_blobs(n_sel + n_sel_te, d_sel, c_sel, seed=7)
+    xb_tr, yb_tr = xs_all[:n_sel], ys_all[:n_sel]
+    xb_te, yb_te = xs_all[n_sel:], ys_all[n_sel:]
+    # 4x the heuristic gamma: a more local kernel raises the Gram matrix's
+    # effective rank, which is where landmark coverage differentiates.
+    gamma_sel = 4.0 * gamma_from_dmax(jnp.asarray(xb_tr[:4096]))
+    spec_sel = KernelSpec("rbf", gamma=gamma_sel)
+
+    selector_grid = {}
+    sel_rows = []
+    for sel in ("uniform", "kpp", "rls"):
+        for m in ms_sel:
+            nmis, secs = [], []
+            for seed in seeds:
+                cfg = MiniBatchConfig(n_clusters=c_sel, n_batches=2,
+                                      kernel=spec_sel, seed=seed,
+                                      method="nystrom", embed_dim=m,
+                                      selector=sel)
+                with Timer() as t:
+                    res = fit_dataset(xb_tr, cfg)
+                labels = np.asarray(res.predict(jnp.asarray(xb_te)))
+                nmis.append(nmi(yb_te, labels))
+                secs.append(t.seconds)
+            selector_grid[f"{sel}_m{m}"] = {
+                "selector": sel, "m": m, "nmi": float(np.mean(nmis)),
+                "nmi_per_seed": nmis, "seconds": float(np.mean(secs))}
+            sel_rows.append([sel, m, f"{np.mean(nmis):.3f}",
+                             f"{np.mean(secs):.2f}s"])
+
+    table("Fig.5++ — landmark-selector sweep (nystrom, imbalanced blobs, "
+          "test NMI)", ["selector", "m", "NMI", "time"], sel_rows)
+
+    rls_vs_unif = [(m, selector_grid[f"rls_m{m}"]["nmi"],
+                    selector_grid[f"uniform_m{m}"]["nmi"]) for m in ms_sel]
+    print("[fig5] rls vs uniform NMI per m: "
+          + "  ".join(f"m={m}: {r:.3f}/{u:.3f}" for m, r, u in rls_vs_unif))
+
+    # planner frontier must rank the strategies the way the sweep measured
+    machine = MachineSpec(memory_bytes=16e9, n_processors=8)
+    frontier = plan(n_sel, c_sel, machine, d=d_sel,
+                    selector="rls").frontier()
+    rank = {f"{r['method']}:{r['selector']}": i
+            for i, r in enumerate(frontier)}
+    mean_nmi = {s: float(np.mean([selector_grid[f"{s}_m{m}"]["nmi"]
+                                  for m in ms_sel]))
+                for s in ("uniform", "kpp", "rls")}
+    frontier_says_rls = rank["nystrom:rls"] < rank["nystrom:uniform"]
+    sweep_says_rls = mean_nmi["rls"] >= mean_nmi["uniform"] - 0.01
+    print(f"[fig5] frontier rank: {sorted(rank, key=rank.get)}; "
+          f"mean NMI {mean_nmi}")
+
     payload = {"grid": grid,
                "embed_grid": embed_grid,
+               "selector_grid": selector_grid,
+               "frontier": frontier,
                "claim_acc_drops_with_B": bool(accs_at_s1[-1]
                                               <= accs_at_s1[0] + 0.02),
                "claim_small_s_cheaper": bool(t_smin < t_s1),
                "claim_acc_rises_with_m": bool(
                    embed_grid[f"nystrom_m{ms[-1]}"]["acc"]
-                   >= embed_grid[f"nystrom_m{ms[0]}"]["acc"] - 0.02)}
+                   >= embed_grid[f"nystrom_m{ms[0]}"]["acc"] - 0.02),
+               "claim_rls_ge_uniform_nmi": bool(all(
+                   r >= u - 0.02 for _, r, u in rls_vs_unif)),
+               "claim_frontier_consistent": bool(frontier_says_rls
+                                                 and sweep_says_rls),
+               "bench": {"n": n, "B": bs, "s": ss, "m": ms,
+                         "m_selector": ms_sel, "n_selector": n_sel,
+                         "method": "exact+rff+nystrom",
+                         "selectors": ["uniform", "kpp", "rls"]}}
     save("fig5_approx_sweep", payload)
     return payload
 

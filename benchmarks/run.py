@@ -10,8 +10,8 @@ import argparse
 import time
 import traceback
 
-from . import (fig4_toy, fig5_approx_sweep, fig6_scaling, fig8_sculley,
-               roofline, tab1_mnist, tab2_rcv1, tab3_noisy)
+from . import (common, fig4_toy, fig5_approx_sweep, fig6_scaling,
+               fig8_sculley, roofline, tab1_mnist, tab2_rcv1, tab3_noisy)
 
 ALL = {
     "fig4_toy": fig4_toy.run,
@@ -44,15 +44,23 @@ def main(argv=None):
               f"##########")
         t0 = time.time()
         try:
-            fn(fast=not args.full)
-            print(f"[{name}] finished in {time.time()-t0:.1f}s")
+            payload = fn(fast=not args.full)
+            seconds = time.time() - t0
+            print(f"[{name}] finished in {seconds:.1f}s")
+            # perf trajectory: one BENCH_<name>.json per benchmark (wall
+            # time, workload knobs from the payload's "bench" dict, commit)
+            # so the next revision has a baseline to compare against.
+            common.record_bench(
+                name, seconds, mode="full" if args.full else "fast",
+                params=(payload or {}).get("bench", {}))
         except Exception as e:
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
-    print("\nall benchmarks green; results under results/benchmarks/")
+    print("\nall benchmarks green; results under results/benchmarks/ "
+          "(+ BENCH_*.json perf records under results/)")
 
 
 if __name__ == "__main__":

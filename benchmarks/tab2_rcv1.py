@@ -26,6 +26,11 @@ re-chunking makes the stream bit-reproducible against the offline block
 split, recorded as ``claim_streaming_matches_offline`` (a live stream
 cannot fold a remainder into the previous batch — it does not know the
 corpus ended — so for B∤N it yields one extra tail batch instead).
+
+The ``selector`` column compares, at one embedding width m, uniform- vs
+ridge-leverage-selected Nystrom (dense 256-d view) and the count-sketch —
+the measured counterpart of ``core.memory.plan(...).frontier()``; RLS vs
+uniform is recorded as ``claim_rls_ge_uniform_nmi``.
 """
 from __future__ import annotations
 
@@ -133,6 +138,37 @@ def run(fast: bool = True):
             payload["claim_streaming_matches_offline"] = bool(
                 (np.asarray(off.predict(xs_te)) == labels).all())
 
+    # -- landmark-selection column: uniform vs RLS Nystrom (dense 256-d
+    #    view, rbf) vs the count-sketch at the same embedding width — the
+    #    accuracy-per-byte comparison core.memory.plan(...).frontier()
+    #    models. Text classes are heavy-tailed, exactly the regime where
+    #    uniform landmark sampling starves the tail categories.
+    m_sel = 64 if fast else 128
+    payload["selector"] = {"m": m_sel}
+    for sel in ("uniform", "rls"):
+        cfg = MiniBatchConfig(n_clusters=c, n_batches=bs[0], kernel=spec,
+                              seed=0, method="nystrom", embed_dim=m_sel,
+                              selector=sel)
+        with Timer() as t:
+            res = fit_dataset(x_tr, cfg)
+        labels = np.asarray(res.predict(jnp.asarray(x_te)))
+        acc, nm = clustering_accuracy(y_te, labels), nmi(y_te, labels)
+        rows.append([f"nystrom {sel} m={m_sel}", f"{acc*100:.2f}",
+                     f"{nm:.3f}", f"{t.seconds:.1f}s"])
+        payload["selector"][sel] = {"acc": acc, "nmi": nm,
+                                    "seconds": t.seconds}
+    cfg = MiniBatchConfig(n_clusters=c, n_batches=bs[0],
+                          kernel=KernelSpec("linear"), seed=0,
+                          method="sketch", embed_dim=m_sel)
+    with Timer() as t:
+        res = fit(split_csr(xs_tr, bs[0], strategy="stride"), cfg)
+    labels = np.asarray(res.predict(xs_te))
+    acc, nm = clustering_accuracy(ys_te, labels), nmi(ys_te, labels)
+    rows.append([f"sketch m={m_sel}", f"{acc*100:.2f}", f"{nm:.3f}",
+                 f"{t.seconds:.1f}s"])
+    payload["selector"]["sketch"] = {"acc": acc, "nmi": nm,
+                                     "seconds": t.seconds}
+
     table(f"Tab.2 — RCV1-like ({n} docs, {c} classes), B sweep",
           ["run", "accuracy %", "NMI", "time"], rows)
     times = [payload["B"][b]["seconds"] for b in bs]
@@ -142,10 +178,20 @@ def run(fast: bool = True):
     payload["claim_sparse_beats_baseline_nmi"] = bool(
         max(payload["sparse"]["B"][b]["nmi"] for b in bs)
         >= payload["baseline"]["nmi"] - 0.01)
+    payload["claim_rls_ge_uniform_nmi"] = bool(
+        payload["selector"]["rls"]["nmi"]
+        >= payload["selector"]["uniform"]["nmi"] - 0.01)
     nmi_b = ["%.3f" % payload["B"][b]["nmi"] for b in bs]
     nmi_sp = ["%.3f" % payload["sparse"]["B"][b]["nmi"] for b in bs]
     print("[tab2] NMI(B): %s vs linear %.3f; sparse sketch NMI(B): %s"
           % (nmi_b, payload["baseline"]["nmi"], nmi_sp))
+    print("[tab2] selector column (m=%d): uniform %.3f, rls %.3f, "
+          "sketch %.3f" % (m_sel, payload["selector"]["uniform"]["nmi"],
+                           payload["selector"]["rls"]["nmi"],
+                           payload["selector"]["sketch"]["nmi"]))
+    payload["bench"] = {"n": n, "B": bs, "s": 1.0, "m": 256,
+                        "m_selector": m_sel, "vocab": vocab,
+                        "method": "exact+sketch+nystrom"}
     save("tab2_rcv1", payload)
     return payload
 

@@ -18,7 +18,10 @@ Choosing a method
   landmark subspace, error tracks the kernel's spectral decay; costs an
   [m, m] eigendecomposition up front plus O(n m) kernel evaluations per
   batch. Best accuracy-per-m on smooth kernels; the only embedded choice
-  for non-rbf, non-polynomial kernels.
+  for non-rbf, non-polynomial kernels. Landmark choice is a strategy
+  (``repro.approx.selectors``): ``selector="rls"`` ridge-leverage-score
+  sampling buys more accuracy for the same m bytes than the default
+  uniform sample.
 * ``sketch`` — count-sketch / feature hashing, **linear kernel**; applying
   it touches only nonzero coordinates, so on CSR batches
   (``repro.data.sparse``) the embedding is O(nnz) — independent of d. The
@@ -42,8 +45,12 @@ from repro.core.kernels import KernelSpec
 
 from .embed_kmeans import (EmbedInnerResult, EmbedState, assign_embedded,
                            fit_embedded, lloyd_fit, predict_embedded)
-from .nystrom import NystromMap, make_nystrom, nystrom_features
+from .nystrom import (NystromMap, make_nystrom, nystrom_features,
+                      nystrom_from_landmarks, whiten_gram)
 from .rff import RFFMap, make_rff, rff_features
+from .selectors import (KPPSelector, LandmarkSelector, RLSSelector,
+                        SelectorState, UniformSelector, select_streaming)
+from . import selectors
 from .sketch import (CountSketchMap, TensorSketchMap, count_sketch_features,
                      count_sketch_features_csr, make_count_sketch,
                      make_tensor_sketch, tensor_sketch_features,
@@ -59,16 +66,28 @@ def default_embed_dim(n_clusters: int) -> int:
 
 
 def make_feature_map(method: str, key: jax.Array, x_sample, m: int,
-                     spec: KernelSpec, *, orthogonal: bool = False):
+                     spec: KernelSpec, *, orthogonal: bool = False,
+                     selector=None):
     """Build a feature map from a data sample (first mini-batch).
 
     ``x_sample`` may be dense [n, d] or a ``repro.data.sparse.CSRBatch``;
     the data-oblivious sketch maps only read its column count, while
     RFF/Nystrom need dense rows (Nystrom gathers landmark rows, RFF the
     feature dim) — a sparse sample is rejected for those.
+
+    ``selector`` (a ``repro.approx.selectors`` name or instance) picks the
+    landmark rows for ``nystrom``; the other maps have no landmarks, so a
+    non-uniform selector with them is rejected rather than ignored.
     """
     from repro.data.sparse import is_sparse
 
+    from .selectors import name_of
+
+    if method != "nystrom" and name_of(selector) != "uniform":
+        raise ValueError(
+            f"selector {name_of(selector)!r} only applies to landmark-based "
+            f"maps (method 'nystrom', or the exact path); method {method!r} "
+            "is data-oblivious")
     d = x_sample.shape[1]
     if method == "sketch":
         return make_count_sketch(key, d, m, spec)
@@ -81,7 +100,7 @@ def make_feature_map(method: str, key: jax.Array, x_sample, m: int,
     if method == "rff":
         return make_rff(key, d, m, spec, orthogonal=orthogonal)
     if method == "nystrom":
-        return make_nystrom(key, x_sample, m, spec)
+        return make_nystrom(key, x_sample, m, spec, selector=selector)
     raise ValueError(f"unknown feature-map method {method!r}; have {METHODS}")
 
 
@@ -89,6 +108,9 @@ __all__ = [
     "METHODS", "default_embed_dim", "make_feature_map",
     "RFFMap", "make_rff", "rff_features",
     "NystromMap", "make_nystrom", "nystrom_features",
+    "nystrom_from_landmarks", "whiten_gram",
+    "selectors", "LandmarkSelector", "SelectorState", "UniformSelector",
+    "RLSSelector", "KPPSelector", "select_streaming",
     "CountSketchMap", "make_count_sketch", "count_sketch_features",
     "count_sketch_features_csr",
     "TensorSketchMap", "make_tensor_sketch", "tensor_sketch_features",

@@ -1,7 +1,6 @@
 """Nystrom landmark embedding (Williams & Seeger; Chitta et al. for k-means).
 
-Pick m landmarks L from a data sample (reusing the paper's uniform landmark
-selection, ``core/landmarks.py``), then whiten the landmark Gram matrix
+Pick m landmarks L from a data sample, then whiten the landmark Gram matrix
 
     K_LL = U diag(lam) U^T        (eigendecomposition, clamped at eps)
     z(x) = K(x, L) U diag(lam)^{-1/2}          z: R^d -> R^m
@@ -10,6 +9,14 @@ so that ``z(x) . z(y) = K(x, L) K_LL^+ K(L, y)`` — the rank-m Nystrom
 approximation of the full Gram matrix. Unlike RFF this works for *any*
 Mercer kernel and is exact on the landmark subspace, so the error decays
 with the kernel's spectrum rather than 1/sqrt(m).
+
+How the m landmarks are picked is a pluggable strategy
+(``repro.approx.selectors``): the paper's uniform sample is now just one of
+three — ``selector="rls"`` ridge-leverage-score sampling covers the
+kernel's spectrum measurably better at the same m (better accuracy for the
+same O(m) memory; see ``core.memory.plan(...).frontier()``), and
+``selector="kpp"`` D^2-spreads the landmarks. ``make_nystrom`` defaults to
+uniform, bit-compatible with the historical behavior.
 
 Gram blocks (K_LL here, K_xL per application) go through the same dispatch
 as the rest of the system: the Pallas tiled Gram kernel on TPU, the jnp
@@ -23,7 +30,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kernels import KernelSpec
-from repro.core.landmarks import choose_landmarks
 
 Array = jax.Array
 
@@ -58,27 +64,52 @@ def _gram(x: Array, y: Array, spec: KernelSpec) -> Array:
     return spec(x, y).astype(jnp.float32)
 
 
+def whiten_gram(k: Array, *, eps: float = 1e-6) -> Array:
+    """K^{-1/2} of a PSD Gram block via clamped eigh.
+
+    Eigenvalues below ``eps * lam_max`` are zeroed (their directions carry
+    no reliable kernel mass — inverting them amplifies noise). The ONE
+    whitening used everywhere a landmark Gram is inverted — the NystromMap
+    projection AND the RLS pilot (``selectors.pilot_whitening``) — so the
+    two can never numerically drift apart (the mesh==single-host landmark
+    bit-identity depends on them agreeing).
+    """
+    k = 0.5 * (k + k.T)                                          # exact symmetry
+    lam, u = jnp.linalg.eigh(k)
+    good = lam > eps * jnp.maximum(jnp.max(lam), eps)
+    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, eps)), 0.0)
+    return u * inv_sqrt[None, :]
+
+
+def nystrom_from_landmarks(landmarks: Array, spec: KernelSpec, *,
+                           eps: float = 1e-6) -> NystromMap:
+    """Whiten an already-selected landmark set into a ``NystromMap``.
+
+    The effective rank may be < m on near-degenerate samples (see
+    ``whiten_gram``); the embedding dim stays m for shape stability.
+    """
+    k_ll = _gram(landmarks, landmarks, spec)                     # [m, m]
+    return NystromMap(landmarks=landmarks, proj=whiten_gram(k_ll, eps=eps),
+                      spec=spec)
+
+
 def make_nystrom(key: Array, x: Array, m: int, spec: KernelSpec, *,
-                 eps: float = 1e-6) -> NystromMap:
+                 eps: float = 1e-6, selector=None) -> NystromMap:
     """Build an m-landmark Nystrom map from a data sample ``x`` [n, d].
 
-    Eigenvalues below ``eps * lam_max`` are zeroed in the whitening (their
-    directions carry no reliable kernel mass — inverting them amplifies
-    noise), so the effective rank may be < m on near-degenerate samples;
-    the embedding dim stays m for shape stability.
+    ``selector`` picks the landmark rows — a name or
+    ``repro.approx.selectors.LandmarkSelector``; ``None``/``"uniform"`` is
+    the historical uniform sample (bit-identical draws), ``"rls"``/
+    ``"kpp"`` the leverage-aware strategies.
     """
     n = x.shape[0]
     if not (1 <= m <= n):
         raise ValueError(f"need 1 <= m <= n={n} landmarks, got m={m}")
-    l_idx = choose_landmarks(key, n, m)
-    landmarks = jnp.take(x, l_idx, axis=0)
-    k_ll = _gram(landmarks, landmarks, spec)                     # [m, m]
-    k_ll = 0.5 * (k_ll + k_ll.T)                                 # exact symmetry
-    lam, u = jnp.linalg.eigh(k_ll)
-    good = lam > eps * jnp.maximum(jnp.max(lam), eps)
-    inv_sqrt = jnp.where(good, 1.0 / jnp.sqrt(jnp.maximum(lam, eps)), 0.0)
-    return NystromMap(landmarks=landmarks, proj=u * inv_sqrt[None, :],
-                      spec=spec)
+    from .selectors import resolve
+    # selector=None resolves to uniform, whose draw IS choose_landmarks —
+    # the historical make_nystrom sample, bit-for-bit.
+    l_idx = resolve(selector).select_indices(key, x, m, spec)
+    return nystrom_from_landmarks(jnp.take(x, l_idx, axis=0), spec, eps=eps)
 
 
 def nystrom_features(x: Array, fmap: NystromMap) -> Array:

@@ -1,0 +1,363 @@
+"""Landmark selection as a first-class strategy subsystem.
+
+Every rank-m approximation in this repo — the exact path's Eq.14 landmark
+restriction, the Nystrom feature map, the planner's accuracy-per-byte
+frontier — starts from the same question: *which* m rows represent the
+kernel best? The paper (and this repo until now) answered "uniform", but
+the approximation error of rank-m kernel methods is governed by how well
+the landmarks cover the kernel's *spectrum*, and ridge-leverage-score (RLS)
+sampling provably covers it better at the same m (El Alaoui & Mahoney;
+Musco & Musco, *Recursive Sampling for the Nystrom Method*;
+Pourkamali-Anaraki & Becker).
+
+The ``LandmarkSelector`` contract
+---------------------------------
+A selector is a frozen (hashable, jit-static) dataclass with two faces:
+
+* **offline** — ``select_indices(key, x, m, spec) -> [m] sorted int32``
+  picks m landmark rows from a resident sample ``x`` [n, d]. Pure and
+  jit-traceable with static shapes: the exact mini-batch steps call it
+  inside their jitted bodies.
+* **streaming** — ``init(key, d)`` / ``fold(state, xb)`` /
+  ``finalize(state, m, spec)`` folds mini-batches of a ``BatchSource``
+  into a bounded ``SelectorState`` (a checkpointable pytree) and selects
+  from the folded pool, so selection works without materializing the
+  dataset.
+
+Determinism is the load-bearing property: every random draw is keyed by
+``fold_in(key, tag)`` and — per row — ``fold_in(., global_row_id)``, never
+by how many batches a process has already folded. Consequences:
+
+* the same key always selects the same landmarks (restart determinism);
+* the streaming fold is *batch-boundary invariant*: re-chunking the stream
+  does not change the selection;
+* a ``SelectorState`` checkpointed mid-stream (``repro.ft.checkpoint``)
+  and restored resumes to bit-identical landmarks;
+* whenever the stream fits the candidate pool (``pool`` rows, default
+  8192), ``finalize`` is bit-identical to ``select_indices`` on the
+  materialized concatenation. Beyond the pool cap the fold keeps a
+  uniform-priority coreset — still deterministic and boundary-invariant,
+  just no longer equal to the uncapped offline selection.
+
+Strategies
+----------
+* ``uniform`` — the paper's §3.2 behavior, extracted verbatim from
+  ``core.landmarks.choose_landmarks``; zero selection cost.
+* ``rls`` — approximate ridge leverage scores: a uniform *pilot* of m rows
+  whitens the sample into pilot coordinates ``C = K(X, S) K_SS^{-1/2}``;
+  the m x m sketch ``G = C^T C`` (one ``psum`` of per-device partials on a
+  mesh — see ``distributed.embed``) yields the leverage estimate
+
+      score_i = c_i (G + lam I)^{-1} c_i^T + (k_ii - ||c_i||^2)_+ / lam
+
+  (projection leverage of the Nystrom approximation plus the Musco-style
+  residual term that catches rows the pilot does not cover, so small/far
+  clusters cannot be starved). m landmarks are then drawn ~ score without
+  replacement via per-row Gumbel top-m. O(n m^2) on an n-row sample.
+* ``kpp`` — kernel k-means++ seeding with m seeds, reusing the greedy
+  candidate machinery of ``core.init.kmeans_pp_indices``: D^2-spread
+  landmarks, a deterministic middle ground between uniform and RLS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels import KernelSpec
+
+Array = jax.Array
+
+NAMES = ("uniform", "rls", "kpp")
+
+# fold_in tags: one stream of per-row randomness per concern, so the pool
+# priorities, the RLS pilot and the final draw never share bits.
+_TAG_POOL, _TAG_PILOT, _TAG_SELECT = 0, 1, 2
+
+
+class SelectorState(NamedTuple):
+    """Streaming fold state — a checkpointable pytree (``repro.ft``).
+
+    The pool holds up to ``selector.pool`` candidate rows sorted by global
+    row id, each with its fold_in-keyed uniform priority; eviction keeps
+    the running top-``pool`` priorities, which makes the fold associative
+    and therefore batch-boundary invariant.
+    """
+    key: Array        # the selection PRNG key (all draws fold_in from it)
+    rows: Array       # [r, d] candidate pool rows
+    gids: Array       # [r]    int32 global row ids (ascending)
+    pri: Array        # [r]    f32 per-gid uniform priorities
+    rows_seen: Array  # []     int32: next global row id
+    folds: Array      # []     int32: batches folded (resume bookkeeping)
+
+
+def _per_gid_uniform(key: Array, gids: Array) -> Array:
+    """One U(0,1) draw per global row id, keyed fold_in(key, gid) — the
+    same id gets the same draw no matter which batch it arrives in."""
+    keys = jax.vmap(lambda g: jax.random.fold_in(key, g))(gids)
+    return jax.vmap(lambda k: jax.random.uniform(k, dtype=jnp.float32))(keys)
+
+
+def _per_gid_gumbel(key: Array, gids: Array) -> Array:
+    u = jnp.clip(_per_gid_uniform(key, gids), 1e-12, 1.0 - 1e-7)
+    return -jnp.log(-jnp.log(u))
+
+
+def rls_scores(c: Array, diag_k: Array, g: Array, *, delta: float) -> Array:
+    """Approximate ridge leverage scores from pilot coordinates.
+
+    ``c`` [n, m] are rows in whitened pilot coordinates (``K(X, S)`` times
+    the K_SS whitening), ``g = c^T c`` the [m, m] sketch (on a mesh: the
+    psum of per-device partials), ``diag_k`` [n] the kernel diagonal. The
+    ridge ``lam = delta * tr(g) / m`` is data-adaptive and scale-free.
+    """
+    m = g.shape[0]
+    lam = delta * jnp.trace(g) / m + 1e-12
+    b = g + lam * jnp.eye(m, dtype=jnp.float32)
+    sol = jnp.linalg.solve(b, c.T)                             # [m, n]
+    proj = jnp.sum(c * sol.T, axis=1)                          # [n]
+    resid = jnp.maximum(diag_k.astype(jnp.float32)
+                        - jnp.sum(c * c, axis=1), 0.0)
+    return proj + resid / lam
+
+
+def pilot_whitening(pilot: Array, spec: KernelSpec, *,
+                    eps: float = 1e-6) -> Array:
+    """K_SS^{-1/2} — the NystromMap's own clamped-eigh whitening
+    (``nystrom.whiten_gram``), shared so the two can't drift apart."""
+    from .nystrom import whiten_gram
+    return whiten_gram(spec(pilot, pilot).astype(jnp.float32), eps=eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkSelector:
+    """Shared contract + streaming pool machinery (see module docstring)."""
+
+    pool: int = 8192   # candidate-pool cap for the streaming fold
+
+    name = "base"
+
+    # -- per-strategy core: indices into ``x`` given per-row global ids ----
+
+    def _indices(self, key: Array, x: Array, gids: Array, m: int,
+                 spec: KernelSpec) -> Array:
+        raise NotImplementedError
+
+    # -- offline ----------------------------------------------------------
+
+    def select_indices(self, key: Array, x, m: int,
+                       spec: KernelSpec) -> Array:
+        """[m] sorted int32 indices into the resident sample ``x``."""
+        n = x.shape[0]
+        if m > n:
+            raise ValueError(f"|L|={m} > sample rows {n}")
+        if m == n:
+            return jnp.arange(n, dtype=jnp.int32)
+        gids = jnp.arange(n, dtype=jnp.int32)
+        return self._indices(key, jnp.asarray(x), gids, m, spec)
+
+    def select(self, key: Array, x, m: int, spec: KernelSpec) -> Array:
+        """[m, d] landmark rows from a resident sample."""
+        x = jnp.asarray(x)
+        return jnp.take(x, self.select_indices(key, x, m, spec), axis=0)
+
+    # -- streaming --------------------------------------------------------
+
+    def init(self, key: Array, d: int) -> SelectorState:
+        z = jnp.zeros((0,), jnp.float32)
+        return SelectorState(
+            key=key,
+            rows=jnp.zeros((0, d), jnp.float32),
+            gids=jnp.zeros((0,), jnp.int32),
+            pri=z,
+            rows_seen=jnp.array(0, jnp.int32),
+            folds=jnp.array(0, jnp.int32),
+        )
+
+    def fold(self, state: SelectorState, xb) -> SelectorState:
+        """Fold one dense mini-batch into the candidate pool."""
+        from repro.data.sparse import is_sparse
+        if is_sparse(xb):
+            raise ValueError(
+                "landmark selection needs dense rows (Nystrom gathers "
+                "landmark coordinates); densify the selection sample or "
+                "use a sketch method")
+        xb = jnp.asarray(xb, jnp.float32)
+        n = xb.shape[0]
+        gids_new = state.rows_seen + jnp.arange(n, dtype=jnp.int32)
+        pri_new = _per_gid_uniform(
+            jax.random.fold_in(state.key, _TAG_POOL), gids_new)
+        rows = jnp.concatenate([state.rows, xb], axis=0)
+        gids = jnp.concatenate([state.gids, gids_new])
+        pri = jnp.concatenate([state.pri, pri_new])
+        if rows.shape[0] > self.pool:
+            # keep the running top-`pool` priorities; top-k of a union is
+            # the fold of per-batch top-k's, so the pool is independent of
+            # how the stream was chunked.
+            _, keep = jax.lax.top_k(pri, self.pool)
+            keep = jnp.sort(keep)          # pool stays in global-id order
+            rows = jnp.take(rows, keep, axis=0)
+            gids = jnp.take(gids, keep)
+            pri = jnp.take(pri, keep)
+        return SelectorState(key=state.key, rows=rows, gids=gids, pri=pri,
+                             rows_seen=state.rows_seen + n,
+                             folds=state.folds + 1)
+
+    def finalize(self, state: SelectorState, m: int,
+                 spec: KernelSpec) -> Array:
+        """[m, d] landmark rows from the folded pool. Bit-identical to
+        ``select`` on the materialized stream whenever it fit the pool."""
+        n = int(state.rows.shape[0])
+        if n < 1:
+            raise ValueError("empty selector state: fold at least one batch")
+        if m > n:
+            raise ValueError(f"|L|={m} > pooled candidate rows {n}")
+        if m == n:
+            return state.rows
+        idx = self._indices(state.key, state.rows, state.gids, m, spec)
+        return jnp.take(state.rows, idx, axis=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformSelector(LandmarkSelector):
+    """The paper's §3.2 uniform landmark sample (sorted, no replacement)."""
+
+    name = "uniform"
+
+    def _indices(self, key, x, gids, m, spec):
+        from repro.core.landmarks import choose_landmarks
+        return choose_landmarks(key, x.shape[0], m)
+
+
+@dataclasses.dataclass(frozen=True)
+class RLSSelector(LandmarkSelector):
+    """Approximate ridge-leverage-score sampling (module docstring)."""
+
+    delta: float = 1e-2   # ridge: lam = delta * tr(G) / m
+    eps: float = 1e-6     # pilot whitening clamp
+
+    name = "rls"
+
+    # The pieces below are also the building blocks of the mesh-native
+    # selection in ``distributed.embed`` (same keys, same math; only the
+    # [m, m] sketch G arrives via a psum of per-device partials there).
+
+    def pilot_indices(self, key, gids, m: int) -> Array:
+        """[m] sorted indices of the uniform pilot (gid-keyed draw)."""
+        pri = _per_gid_uniform(jax.random.fold_in(key, _TAG_PILOT), gids)
+        _, pidx = jax.lax.top_k(pri, m)
+        return jnp.sort(pidx).astype(jnp.int32)
+
+    def gumbel_top_m(self, key, scores, gids, m: int) -> Array:
+        """Sample m indices ~ scores without replacement (Gumbel top-m),
+        keyed per global row id so the draw survives re-chunking."""
+        noise = _per_gid_gumbel(jax.random.fold_in(key, _TAG_SELECT), gids)
+        logits = jnp.log(jnp.maximum(scores, 1e-30)) + noise
+        _, idx = jax.lax.top_k(logits, m)
+        return jnp.sort(idx).astype(jnp.int32)
+
+    def scores(self, key, x, gids, m, spec):
+        """[n] leverage estimates (the Gumbel draw is not applied)."""
+        pilot = jnp.take(x, self.pilot_indices(key, gids, m), axis=0)
+        c = jnp.dot(spec(x, pilot).astype(jnp.float32),
+                    pilot_whitening(pilot, spec, eps=self.eps),
+                    preferred_element_type=jnp.float32)  # [n, m]
+        g = jnp.dot(c.T, c, preferred_element_type=jnp.float32)
+        return rls_scores(c, spec.diag(x), g, delta=self.delta)
+
+    def _indices(self, key, x, gids, m, spec):
+        return self.gumbel_top_m(key, self.scores(key, x, gids, m, spec),
+                                 gids, m)
+
+
+@dataclasses.dataclass(frozen=True)
+class KPPSelector(LandmarkSelector):
+    """Kernel k-means++ landmark seeding (greedy candidate variant)."""
+
+    name = "kpp"
+
+    def _indices(self, key, x, gids, m, spec):
+        from repro.core.init import kmeans_pp_indices
+        idx = kmeans_pp_indices(x, spec.diag(x),
+                                jax.random.fold_in(key, _TAG_SELECT),
+                                n_clusters=m, spec=spec)
+        return jnp.sort(idx).astype(jnp.int32)
+
+
+_REGISTRY = {
+    "uniform": UniformSelector(),
+    "rls": RLSSelector(),
+    "kpp": KPPSelector(),
+}
+
+SelectorLike = Union[str, LandmarkSelector, None]
+
+
+def resolve(selector: SelectorLike) -> LandmarkSelector:
+    """Name or instance -> selector instance (None -> uniform)."""
+    if selector is None:
+        return _REGISTRY["uniform"]
+    if isinstance(selector, LandmarkSelector):
+        return selector
+    try:
+        return _REGISTRY[selector]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown landmark selector {selector!r}; have {NAMES}") from None
+
+
+def name_of(selector: SelectorLike) -> str:
+    return resolve(selector).name
+
+
+def select_streaming(selector: SelectorLike, key: Array, batches, m: int,
+                     spec: KernelSpec, *, state: SelectorState = None,
+                     checkpoint_cb=None):
+    """Fold a batch iterable / ``BatchSource`` and select m landmarks.
+
+    Bounded memory (``selector.pool`` rows), one pass, no materialized
+    dataset. ``state`` resumes a previous fold (skip the committed prefix
+    with ``source.skip(int(state.folds))`` first); ``checkpoint_cb(state,
+    i)`` is invoked after every folded batch — checkpoint the
+    ``SelectorState`` pytree next to the feature map (``repro.ft``) and a
+    mid-stream restart re-selects identically.
+
+    Returns ``(landmarks [m, d], final_state)``.
+    """
+    from repro.data.loader import closing_source
+    sel = resolve(selector)
+    with closing_source(batches):
+        it = iter(batches)
+        start = int(state.folds) if state is not None else 0
+        for i, xb in enumerate(it, start=start):
+            if state is None:
+                # .shape covers ndarray AND CSRBatch, so a sparse first
+                # batch reaches fold()'s clear needs-dense-rows error
+                # instead of dying inside an asarray coercion.
+                d = (xb.shape[1] if hasattr(xb, "shape")
+                     else np.asarray(xb).shape[1])
+                state = sel.init(key, d)
+            state = sel.fold(state, xb)
+            if checkpoint_cb is not None:
+                checkpoint_cb(state, i)
+    if state is None:
+        raise ValueError("empty batch iterable")
+    return sel.finalize(state, m, spec), state
+
+
+def state_like(d: int) -> SelectorState:
+    """Structural twin for ``CheckpointManager.restore`` (shapes come from
+    the manifest; only the pytree structure matters)."""
+    sel = UniformSelector()
+    return sel.init(jax.random.PRNGKey(0), d)
+
+
+__all__ = [
+    "NAMES", "LandmarkSelector", "SelectorState",
+    "UniformSelector", "RLSSelector", "KPPSelector",
+    "resolve", "name_of", "select_streaming", "state_like",
+    "rls_scores", "pilot_whitening",
+]

@@ -4,10 +4,12 @@ from .kernels import KernelSpec, gamma_from_dmax, get_kernel, sq_distances
 from .kkmeans import (InnerResult, kkmeans_fit, kkmeans_fit_full,
                       medoid_indices)
 from .init import assign_to_medoids, kmeans_pp_indices
-from .landmarks import choose_landmarks, num_landmarks
+from .landmarks import (choose_landmarks, num_landmarks,
+                        select_landmark_indices)
 from .memory import (MachineSpec, Plan, b_min, b_min_paper,
                      embed_footprint_bytes, footprint_bytes,
-                     host_staging_bytes, plan, sketch_footprint_bytes)
+                     host_staging_bytes, plan, predicted_accuracy,
+                     selector_footprint_bytes, sketch_footprint_bytes)
 from .metrics import clustering_accuracy, elbow, mean_displacement, nmi
 from .minibatch import (FitResult, GlobalState, MiniBatchConfig, fit,
                         fit_dataset, predict)
@@ -16,10 +18,10 @@ __all__ = [
     "KernelSpec", "gamma_from_dmax", "get_kernel", "sq_distances",
     "InnerResult", "kkmeans_fit", "kkmeans_fit_full", "medoid_indices",
     "assign_to_medoids", "kmeans_pp_indices",
-    "choose_landmarks", "num_landmarks",
+    "choose_landmarks", "num_landmarks", "select_landmark_indices",
     "MachineSpec", "Plan", "b_min", "b_min_paper", "embed_footprint_bytes",
-    "footprint_bytes", "host_staging_bytes", "plan",
-    "sketch_footprint_bytes",
+    "footprint_bytes", "host_staging_bytes", "plan", "predicted_accuracy",
+    "selector_footprint_bytes", "sketch_footprint_bytes",
     "clustering_accuracy", "elbow", "mean_displacement", "nmi",
     "FitResult", "GlobalState", "MiniBatchConfig", "fit", "fit_dataset",
     "predict",

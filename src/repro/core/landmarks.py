@@ -1,12 +1,18 @@
 """A-priori sparse centroid representation — landmark selection (paper §3.2).
 
-The centroid expansion (Eq.14) is restricted to |L| landmarks uniformly
-sampled from each mini-batch; the sparsity knob is
+The centroid expansion (Eq.14) is restricted to |L| landmarks sampled from
+each mini-batch; the sparsity knob is
 
     s = (|L| / N) * B          (Eq.18)   <=>   |L| = s * (N / B)
 
 so ``s = 1`` recovers the exact mini-batch algorithm and the number of kernel
 evaluations per batch drops from (N/B)^2 to s * (N/B)^2.
+
+*Which* |L| rows get picked is a strategy, not a constant: the paper samples
+uniformly (``choose_landmarks``), but the Eq.14 expansion can instead be
+restricted to high-ridge-leverage rows — ``repro.approx.selectors`` owns the
+strategy contract (uniform / rls / kpp) and ``select_landmark_indices`` is
+the dispatch the mini-batch steps call.
 """
 from __future__ import annotations
 
@@ -21,9 +27,17 @@ def num_landmarks(batch_size: int, s: float, *, n_clusters: int, multiple_of: in
 
     ``multiple_of`` lets the distributed runtime round |L| up to a multiple of
     the landmark-sharding axis size so every device gets an equal slice.
+    All clamping happens here, in one place: an infeasible combination —
+    fewer batch rows than clusters, or no multiple of ``multiple_of`` in
+    [C, batch_size] — raises instead of silently shrinking |L| below C.
     """
     if not (0.0 < s <= 1.0):
         raise ValueError(f"s must be in (0, 1], got {s}")
+    if batch_size < n_clusters:
+        raise ValueError(
+            f"infeasible landmark count: the centroid expansion needs at "
+            f"least C={n_clusters} landmarks but the mini-batch has only "
+            f"{batch_size} rows — grow the batch (lower B) or lower C")
     l = max(int(-(-s * batch_size // 1)), n_clusters)  # ceil, >= C
     if multiple_of > 1:
         l = -(-l // multiple_of) * multiple_of         # round up to multiple
@@ -31,15 +45,18 @@ def num_landmarks(batch_size: int, s: float, *, n_clusters: int, multiple_of: in
             l = (batch_size // multiple_of) * multiple_of
         if l < n_clusters:
             raise ValueError(
-                f"batch={batch_size} too small for C={n_clusters} landmarks "
-                f"in multiples of {multiple_of}")
-    return min(l, batch_size)
+                f"infeasible landmark count: no multiple of {multiple_of} in "
+                f"[C={n_clusters}, batch={batch_size}] — shrink the mesh's "
+                f"landmark axis, grow the batch (lower B), or lower C")
+    return l
 
 
 def choose_landmarks(key: Array, batch_size: int, n_landmarks: int) -> Array:
     """Uniform sample WITHOUT replacement of landmark indices (sorted).
 
     Sorted order keeps the row-gather ``k_xl[l_idx]`` cache/DMA friendly.
+    This is the ``selector="uniform"`` strategy; see
+    ``repro.approx.selectors`` for the leverage-aware alternatives.
     """
     if n_landmarks > batch_size:
         raise ValueError(f"|L|={n_landmarks} > batch={batch_size}")
@@ -47,3 +64,15 @@ def choose_landmarks(key: Array, batch_size: int, n_landmarks: int) -> Array:
         return jnp.arange(batch_size, dtype=jnp.int32)
     idx = jax.random.choice(key, batch_size, (n_landmarks,), replace=False)
     return jnp.sort(idx).astype(jnp.int32)
+
+
+def select_landmark_indices(key: Array, x: Array, n_landmarks: int, spec,
+                            selector="uniform") -> Array:
+    """Strategy-dispatched landmark indices for one mini-batch.
+
+    ``selector`` is a name or ``repro.approx.selectors.LandmarkSelector``;
+    ``spec`` is the ``KernelSpec`` leverage-aware strategies score with
+    (ignored by ``uniform``). Jit-traceable with static shapes.
+    """
+    from repro.approx.selectors import resolve
+    return resolve(selector).select_indices(key, x, n_landmarks, spec)

@@ -41,6 +41,32 @@ stays CSR.
 ``plan(prefetch_depth=)`` reports it as ``Plan.host_footprint``; it is what
 bounds ``depth`` on a RAM-tight ingest node, exactly the §3.3
 producer/consumer trade the paper makes on the CPU side.
+
+Landmark selection is itself a costed strategy (``repro.approx.selectors``).
+``plan(selector=)`` adds the selection footprint to the embedded-method
+competition:
+
+    M_sel(uniform) = 4m                                   [index vector]
+    M_sel(rls)     = Q * (3 m^2 + 2 N/(B*P))
+    M_sel(kpp)     = Q * (N/(B*P) * (2 + ln m) + 2 N/(B*P))
+
+(rls: three m x m blocks — K_SS, its whitening, the psum'd sketch G —
+plus per-row score/priority vectors; the whitened pilot panel C [rows, m]
+reuses the Z allocation the embedded fit needs every batch anyway, and
+the input rows are already priced by the embed term. kpp: the greedy
+candidate kernel columns plus the running D^2 vector.)
+
+What those selection bytes BUY is the point: ``Plan.frontier()`` ranks the
+strategies by *predicted accuracy per byte at a fixed budget*. The
+accuracy model is deliberately coarse — Nystrom error tracks the kernel's
+spectral tail, and RLS-sampled landmarks cover that tail like ~1.6x as
+many uniform ones (kpp ~1.25x; constants from the RLS literature's
+k-log-k vs k/eps sampling bounds, validated qualitatively by the
+``fig5_approx_sweep`` selector grid), while a count-sketch behaves like a
+JL projection with error ~ sqrt(C/m). At a fixed byte budget each
+candidate gets its maximal feasible m, the model predicts its accuracy,
+and the report is sorted by accuracy-per-byte — uniform sampling pays the
+same bytes per landmark but buys measurably less accuracy with them.
 """
 from __future__ import annotations
 
@@ -111,6 +137,40 @@ def sketch_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     return q * (rows * m + c * m + rows) + tables + sparse_rows
 
 
+_SELECTOR_EFF = {"uniform": 1.0, "kpp": 1.25, "rls": 1.6}
+
+
+def selector_footprint_bytes(n: int, b: int, p: int, q: int = 4, *,
+                             m: int, selector: str = "uniform") -> float:
+    """Per-node bytes the landmark-selection strategy needs on top of the
+    embedded footprint (module docstring, selection paragraph)."""
+    rows = n / b / p
+    if selector == "uniform":
+        return 4.0 * m
+    if selector == "rls":
+        return q * (3.0 * m * m + 2.0 * rows)
+    if selector == "kpp":
+        return q * (rows * (2.0 + math.log(max(m, 2))) + 2.0 * rows)
+    raise ValueError(f"unknown selector {selector!r}; "
+                     f"have {tuple(_SELECTOR_EFF)}")
+
+
+def predicted_accuracy(method: str, selector: str | None, m: int,
+                       c: int) -> float:
+    """Coarse accuracy model behind ``Plan.frontier()`` (module docstring):
+    Nystrom ~ 1 - (1 + m_eff/C)^-1 with the selector's effective-landmark
+    multiplier; sketch ~ 1 - sqrt(C/m). Only the *ordering* is trusted."""
+    if m < 1:
+        return 0.0
+    if method == "sketch":
+        return 1.0 - min(1.0, math.sqrt(c / m))
+    eff = _SELECTOR_EFF.get(selector or "uniform")
+    if eff is None:
+        raise ValueError(f"unknown selector {selector!r}; "
+                         f"have {tuple(_SELECTOR_EFF)}")
+    return 1.0 - 1.0 / (1.0 + m * eff / max(c, 1))
+
+
 def b_min(n: int, c: int, machine: MachineSpec, *, s: float = 1.0) -> int:
     """Smallest B such that footprint fits in machine.memory_bytes (exact).
 
@@ -165,11 +225,86 @@ class Plan:
     method: str = "exact"        # "exact" | "embed" | "sketch" (cheapest)
     sketch_footprint: float = float("inf")
     host_footprint: float = 0.0  # ingest node: (1 + prefetch_depth) batches
+    selector: str = "uniform"    # landmark-selection strategy priced in
+    selector_footprint: float = 0.0
+    # -- the workload this plan was made for (frontier() re-prices with it)
+    n: int = 0
+    c: int = 0
+    d: int = 0
+    p: int = 1
+    q: int = 4
+    density: float = 1.0
+    sketchable: bool = False
+
+    def frontier(self, budget_bytes: float | None = None) -> list[dict]:
+        """Rank landmark/sketch strategies by predicted accuracy-per-byte
+        at a fixed per-node byte budget.
+
+        Every candidate — Nystrom with each selector, plus the count-sketch
+        when the workload was declared ``sketchable`` — gets the largest
+        embedding dim m its footprint affords within ``budget_bytes``
+        (default: what this plan already spends on the embedded method);
+        the coarse accuracy model (``predicted_accuracy``) then prices what
+        those bytes buy. Returns records sorted best-first:
+        ``{"method", "selector", "m", "bytes", "predicted_accuracy",
+        "accuracy_per_byte"}``. Only the ordering is meaningful — the
+        ``fig5_approx_sweep`` selector grid is the measured counterpart.
+        """
+        if self.n <= 0:
+            raise ValueError("frontier() needs a plan built by plan() — "
+                             "workload context (n, c, ...) is missing")
+        budget = budget_bytes if budget_bytes is not None else (
+            self.embed_footprint + self.selector_footprint)
+
+        def nystrom_bytes(m: int, sel: str) -> float:
+            return (embed_footprint_bytes(self.n, self.b, self.c, self.p,
+                                          self.q, m=m, d=self.d)
+                    + selector_footprint_bytes(self.n, self.b, self.p,
+                                               self.q, m=m, selector=sel))
+
+        def sketch_bytes(m: int, sel) -> float:
+            return sketch_footprint_bytes(self.n, self.b, self.c, self.p,
+                                          self.q, m=m, d=self.d,
+                                          density=self.density)
+
+        cands = [("nystrom", s, nystrom_bytes)
+                 for s in ("rls", "kpp", "uniform")]
+        if self.sketchable:
+            cands.append(("sketch", None, sketch_bytes))
+        out = []
+        for method, sel, bytes_fn in cands:
+            m = _max_m_within(lambda mm: bytes_fn(mm, sel), budget)
+            if m < 1:
+                continue
+            cost = bytes_fn(m, sel)
+            acc = predicted_accuracy(method, sel, m, self.c)
+            out.append({"method": method, "selector": sel or "-", "m": m,
+                        "bytes": cost, "predicted_accuracy": acc,
+                        "accuracy_per_byte": acc / max(cost, 1.0)})
+        out.sort(key=lambda r: r["accuracy_per_byte"], reverse=True)
+        return out
+
+
+def _max_m_within(bytes_fn, budget: float, *, m_cap: int = 1 << 20) -> int:
+    """Largest m with bytes_fn(m) <= budget (bytes_fn monotone in m)."""
+    if bytes_fn(1) > budget:
+        return 0
+    lo, hi = 1, 2
+    while hi < m_cap and bytes_fn(hi) <= budget:
+        lo, hi = hi, hi * 2
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if bytes_fn(mid) <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
 
 def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
          embed_dim: int | None = None,
          sketchable: bool = False, density: float = 1.0,
+         selector: str = "uniform",
          prefetch_depth: int = 2,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
@@ -198,6 +333,12 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     (``Plan.host_footprint``): the resident batch plus that many staged
     batches in the prefetch queue, CSR-priced when the sketch method wins
     (the stream then never densifies) and dense-priced otherwise.
+
+    ``selector`` names the landmark-selection strategy
+    (``repro.approx.selectors``); its footprint
+    (``selector_footprint_bytes``) joins the embedded method in the
+    auto-pick, and ``Plan.frontier()`` ranks all strategies by what their
+    bytes buy at a fixed budget.
     """
     b = b_min(n, c, machine)
     s = 1.0
@@ -218,15 +359,21 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     p, q = machine.n_processors, machine.bytes_per_scalar
     fp = footprint_bytes(n, b, c, p, q, s=s, d=d)
     fp_embed = embed_footprint_bytes(n, b, c, p, q, m=m, d=d)
+    fp_sel = selector_footprint_bytes(n, b, p, q, m=m, selector=selector)
+    # the exact path selects |L| = s*N/B landmarks per batch with the SAME
+    # strategy (MiniBatchConfig.selector drives Eq.14 too), so it pays its
+    # own — typically larger — selection bill in the comparison.
+    fp_sel_exact = selector_footprint_bytes(
+        n, b, p, q, m=max(c, int(s * n / b)), selector=selector)
     fp_sketch = (sketch_footprint_bytes(n, b, c, p, q, m=m, d=d,
                                         density=density)
                  if sketchable else float("inf"))
     method = "exact"
-    if fp_sketch < min(fp, fp_embed):
+    if fp_sketch < min(fp + fp_sel_exact, fp_embed + fp_sel):
         method = "sketch"
         note += (f"; O(nnz) sketch (m={m}, density={density:g}) is cheapest "
                  "— consider method='sketch'/'tensorsketch' on CSR batches")
-    elif fp_embed < fp:
+    elif fp_embed + fp_sel < fp + fp_sel_exact:
         method = "embed"
         note += f"; embedded space (m={m}) is cheaper — consider method='rff'/'nystrom'"
     return Plan(
@@ -241,4 +388,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
         host_footprint=host_staging_bytes(
             n, b, q, d=d, density=density, sparse=(method == "sketch"),
             prefetch_depth=prefetch_depth),
+        selector=selector,
+        selector_footprint=fp_sel,
+        n=n, c=c, d=d, p=p, q=q, density=density, sketchable=sketchable,
     )

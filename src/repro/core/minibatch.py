@@ -35,7 +35,7 @@ import numpy as np
 from .init import assign_to_medoids, kmeans_pp_indices
 from .kernels import KernelSpec
 from .kkmeans import kkmeans_fit, medoid_indices
-from .landmarks import choose_landmarks, num_landmarks
+from .landmarks import num_landmarks, select_landmark_indices
 
 Array = jax.Array
 
@@ -55,6 +55,11 @@ class MiniBatchConfig:
     method: str = "exact"  # "exact" | "rff" | "nystrom" | "sketch" | "tensorsketch"
     embed_dim: int = 0                   # m; 0 -> approx.default_embed_dim(C)
     rff_orthogonal: bool = False         # ORF variant (lower variance)
+    # landmark-selection strategy (repro.approx.selectors): "uniform" |
+    # "rls" | "kpp" or a LandmarkSelector instance. Applies to the paths
+    # that pick landmark rows — method="exact" (the Eq.14 expansion) and
+    # method="nystrom" (the embedding's landmark set).
+    selector: object = "uniform"
 
     _METHODS = ("exact", "rff", "nystrom", "sketch", "tensorsketch")
 
@@ -63,6 +68,13 @@ class MiniBatchConfig:
             raise ValueError(
                 f"method must be one of {self._METHODS}, "
                 f"got {self.method!r}")
+        from repro.approx.selectors import name_of
+        if (name_of(self.selector) != "uniform"
+                and self.method not in ("exact", "nystrom")):
+            raise ValueError(
+                f"selector {name_of(self.selector)!r} only applies to "
+                f"landmark-based methods ('exact', 'nystrom'); "
+                f"method {self.method!r} has no landmarks")
 
 
 class GlobalState(NamedTuple):
@@ -119,7 +131,8 @@ def _first_batch_step(x: Array, key: Array, *, cfg: MiniBatchConfig,
     spec = cfg.kernel
     diag_k = spec.diag(x)
     k_lm, k_pp = jax.random.split(key)
-    l_idx = choose_landmarks(k_lm, x.shape[0], n_landmarks)
+    l_idx = select_landmark_indices(k_lm, x, n_landmarks, spec,
+                                    selector=cfg.selector)
     k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
 
     seeds = kmeans_pp_indices(x, diag_k, k_pp, n_clusters=cfg.n_clusters,
@@ -149,7 +162,12 @@ def _next_batch_step(x: Array, key: Array, state: GlobalState, *,
     """Batch i > 0: Eq.8 init, inner loop, Eq.7 medoids, Eq.12 merge."""
     spec = cfg.kernel
     diag_k = spec.diag(x)
-    l_idx = choose_landmarks(key, x.shape[0], n_landmarks)
+    # Same (k_lm, .) split as the first batch and the distributed outer
+    # loop: one key schedule across paths means a distributed fit resumed
+    # from this state draws the same landmarks as the single-host run.
+    k_lm, _ = jax.random.split(key)
+    l_idx = select_landmark_indices(k_lm, x, n_landmarks, spec,
+                                    selector=cfg.selector)
     k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
 
     # -- init from the previous global medoids (Eq.8); K~^i is [n, C].
@@ -313,7 +331,7 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
         m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
         fmap = approx.make_feature_map(
             cfg.method, jax.random.PRNGKey(cfg.seed), first, m, cfg.kernel,
-            orthogonal=cfg.rff_orthogonal)
+            orthogonal=cfg.rff_orthogonal, selector=cfg.selector)
         it = itertools.chain([first], it)
     est, history = approx.fit_embedded(
         it, fmap, n_clusters=cfg.n_clusters, max_iters=cfg.max_inner_iters,

@@ -173,10 +173,23 @@ class DistributedEmbedKMeans:
         """Sample the feature map from a batch (dense rows or CSRBatch); a
         pre-staged first batch passes a structural sample instead — enough
         for the data-oblivious maps (sketch/tensorsketch read only d; a
-        dense StagedBatch hands its mesh-resident rows to RFF/Nystrom)."""
+        dense StagedBatch hands its mesh-resident rows to RFF/Nystrom).
+
+        Nystrom + ``selector="rls"`` on a staged dense batch takes the
+        mesh-native route (``_make_nystrom_rls``): leverage scores from
+        per-device partial sketches, one psum, the staged batch reused —
+        no second pass over the stream and no host-side gather of rows.
+        """
         if self.fmap is None:
             from repro import approx
+            from repro.approx.selectors import name_of
             cfg = self.cfg
+            if (cfg.method == "nystrom" and name_of(cfg.selector) == "rls"
+                    and isinstance(sample, StagedBatch)
+                    and not sample.sparse):
+                m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
+                self.fmap = self._make_nystrom_rls(sample, m)
+                return self.fmap
             if isinstance(sample, StagedBatch):
                 # dense: the UNPADDED rows, so a data-dependent map
                 # (Nystrom landmarks) sees exactly what the inline path's
@@ -189,8 +202,51 @@ class DistributedEmbedKMeans:
             m = cfg.embed_dim or approx.default_embed_dim(cfg.n_clusters)
             self.fmap = approx.make_feature_map(
                 cfg.method, jax.random.PRNGKey(cfg.seed), sample, m,
-                cfg.kernel, orthogonal=cfg.rff_orthogonal)
+                cfg.kernel, orthogonal=cfg.rff_orthogonal,
+                selector=cfg.selector)
         return self.fmap
+
+    def _make_nystrom_rls(self, st: "StagedBatch", m: int):
+        """Mesh-native ridge-leverage-score Nystrom from a staged batch.
+
+        Same draws and estimator as the single-host ``RLSSelector`` (pilot
+        and Gumbel keys are fold_in-keyed per global row id), but the
+        [m, m] leverage sketch G = C^T diag(wgt) C is assembled from
+        per-device partials with ONE psum and the scores are computed
+        shard-locally — no device ever sees another shard's rows, and the
+        already-staged batch is reused for the embedding right after.
+        """
+        from repro.approx import nystrom_from_landmarks, selectors
+
+        cfg = self.cfg
+        spec = cfg.kernel
+        sel = selectors.resolve(cfg.selector)
+        key = jax.random.PRNGKey(cfg.seed)
+        gids = jnp.arange(st.n, dtype=jnp.int32)
+        pilot = jnp.take(st.x, sel.pilot_indices(key, gids, m), axis=0)
+        whiten = selectors.pilot_whitening(pilot, spec, eps=sel.eps)
+
+        def shard_fn(x_local, wgt_local, pilot, whiten):
+            c = jnp.dot(spec(x_local, pilot).astype(jnp.float32), whiten,
+                        preferred_element_type=jnp.float32)   # [rows, m]
+            # per-device partial leverage sketch, combined with one psum
+            g = jax.lax.psum(
+                jax.lax.dot_general(c, c * wgt_local[:, None],
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32),
+                self.row_axes)                                # [m, m]
+            scores = selectors.rls_scores(c, spec.diag(x_local), g,
+                                          delta=sel.delta)
+            return jnp.where(wgt_local > 0, scores, 0.0)      # mask ghosts
+
+        scores = jax.jit(shard_map(
+            shard_fn, mesh=self.mesh,
+            in_specs=(P(self.row_axes, None), P(self.row_axes),
+                      P(None, None), P(None, None)),
+            out_specs=P(self.row_axes), check_vma=False))(
+                st.x, st.wgt, pilot, whiten)
+        idx = sel.gumbel_top_m(key, scores[:st.n], gids, m)
+        return nystrom_from_landmarks(jnp.take(st.x, idx, axis=0), spec)
 
     # -- staging: host batch -> mesh-resident, pre-sharded -----------------
 

@@ -90,7 +90,8 @@ def _one_hot_stats(k_rows_cols, k_ll_rows_cols, labels_l_cols, labels_l_rows,
 
 
 def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
-                  diag_local, l_idx_cols, l_idx_rows, n_local_rows: int):
+                  diag_local, l_idx_cols, l_idx_rows, wgt_local,
+                  n_local_rows: int):
     """Builds the while_loop body for one device's shard."""
     spec = cfg.kernel
     row_axes, col_axis = cfg.row_axes, cfg.col_axis
@@ -119,8 +120,11 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
         dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)
         u_new = jnp.argmin(dist, axis=1).astype(jnp.int32)
         mind = jnp.min(dist, axis=1)
-        cost = jax.lax.psum(jnp.sum(diag_local.astype(jnp.float32) + mind),
-                            row_axes)
+        # ghost rows (wgt 0) replicate real rows to divide the mesh; they
+        # follow their source row's label but must not inflate the cost.
+        cost = jax.lax.psum(
+            jnp.sum(wgt_local * (diag_local.astype(jnp.float32) + mind)),
+            row_axes)
         return u_new, f, g, counts, cost
 
     def body(state):
@@ -138,10 +142,11 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
 
 
 def _inner_shard_fn(x_local, lm_cols, lm_rows, diag_local, l_idx_cols,
-                    l_idx_rows, u0_local, *, cfg: DistributedInnerConfig):
+                    l_idx_rows, u0_local, wgt_local, *,
+                    cfg: DistributedInnerConfig):
     body, cond, iterate = _body_factory(
         cfg, x_local, lm_cols, lm_rows, diag_local, l_idx_cols, l_idx_rows,
-        x_local.shape[0])
+        wgt_local, x_local.shape[0])
     init = (u0_local.astype(jnp.int32), jnp.array(True),
             jnp.array(0, jnp.int32), jnp.array(jnp.inf, jnp.float32))
     u, _, t, cost = jax.lax.while_loop(cond, body, init)
@@ -152,7 +157,8 @@ def _inner_shard_fn(x_local, lm_cols, lm_rows, diag_local, l_idx_cols,
 
 def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
                             l_idx: Array, diag_k: Array, u0: Array, *,
-                            cfg: DistributedInnerConfig) -> DistInnerResult:
+                            cfg: DistributedInnerConfig,
+                            wgt: Array | None = None) -> DistInnerResult:
     """Run the distributed inner loop on ``mesh``.
 
     x:        [n, d]  mini-batch rows (sharded over row axes or replicated —
@@ -162,6 +168,9 @@ def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
     l_idx:    [L]     landmark indices into the mini-batch (replicated).
     diag_k:   [n]     K(x_i, x_i).
     u0:       [n]     initial labels.
+    wgt:      [n]     optional row weights — 0 on the modulo-replicated
+                      ghost rows that pad a non-divisible batch, so they
+                      never count in the cost (default: all ones).
     """
     row_axes, col_axis = cfg.row_axes, cfg.col_axis
     d_size = 1
@@ -178,6 +187,8 @@ def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
 
     rowspec = P(row_axes)
     colspec = P(col_axis) if col_axis is not None else P()
+    if wgt is None:
+        wgt = jnp.ones((x.shape[0],), jnp.float32)
 
     fn = partial(_inner_shard_fn, cfg=cfg)
     shard_fn = shard_map(
@@ -190,10 +201,11 @@ def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
             colspec,              # l_idx cols
             rowspec,              # l_idx rows
             rowspec,              # u0
+            rowspec,              # wgt
         ),
         out_specs=(rowspec, P(row_axes, None), P(), P(), P(), P()),
         check_vma=False,
     )
     u, f, g, counts, t, cost = shard_fn(x, landmarks, landmarks, diag_k,
-                                        l_idx, l_idx, u0)
+                                        l_idx, l_idx, u0, wgt)
     return DistInnerResult(u, f, g, counts, t, cost)

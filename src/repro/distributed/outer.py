@@ -13,6 +13,14 @@ O(N/B) step runs sharded:
 Only O(C*d) state (medoid coordinates, diag, cardinalities) crosses batches,
 so checkpoint/restart and elastic re-meshing are trivial: the state is mesh-
 independent (repro.ft).
+
+Non-divisible batches are padded with modulo-replicated ghost rows, exactly
+like the embedded path — and, like there, the ghosts are weight-masked:
+they are never landmark candidates (selection runs over the unpadded rows,
+strategy-dispatched via ``cfg.selector`` — uniform / rls / kpp,
+``repro.approx.selectors``), never win a medoid/merge argmin, and never
+count in the cost, so a P∤(N/B) distributed fit reproduces the single-host
+cardinalities and Eq.12 alphas exactly.
 """
 from __future__ import annotations
 
@@ -26,7 +34,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.init import kmeans_pp_indices
 from repro.core.kkmeans import BIG
-from repro.core.landmarks import choose_landmarks, num_landmarks
+from repro.core.landmarks import (choose_landmarks, num_landmarks,
+                                  select_landmark_indices)
 from repro.core.minibatch import BatchStats, FitResult, GlobalState, MiniBatchConfig
 
 from .compat import shard_map
@@ -86,6 +95,31 @@ class DistributedMiniBatchKMeans:
             n, self.cfg.s, n_clusters=self.cfg.n_clusters,
             multiple_of=int(np.lcm(self.d_size, self.m_size)))
 
+    def _choose_landmarks(self, key, xb: np.ndarray, n_pad: int):
+        """(l_idx, |L|) for one batch of ``n = len(xb)`` real rows padded
+        by ``n_pad`` ghost rows.
+
+        Landmarks are selected over the UNPADDED rows (strategy-dispatched:
+        ``cfg.selector``): a ghost row is a modulo-replicated real row, and
+        letting it into the landmark set double-counts its point in the
+        Eq.14 expansion, the cardinalities and the Eq.12 alpha — the old
+        O(P/(N/B)) ghost-row bias. Only when the batch is smaller than the
+        landmark alignment itself (a tail batch under the mesh size) do we
+        fall back to the padded row space, where the <= P-1 duplicated
+        landmarks are unavoidable (documented residual bias).
+        """
+        n = len(xb)
+        mult = int(np.lcm(self.d_size, self.m_size))
+        if n >= mult:
+            n_l = self._landmark_count(n)
+            l_idx = select_landmark_indices(
+                key, jnp.asarray(xb, jnp.float32), n_l, self.cfg.kernel,
+                selector=self.cfg.selector)
+        else:
+            n_l = self._landmark_count(n + n_pad)
+            l_idx = choose_landmarks(key, n + n_pad, n_l)
+        return l_idx, n_l
+
     def _init_labels(self, x: Array, diag: Array, medoids: Array,
                      mdiag: Array):
         """Eq.8 on the mesh; also returns row-sharded K~^i for the merge."""
@@ -104,11 +138,18 @@ class DistributedMiniBatchKMeans:
             check_vma=False)(x, diag)
 
     def _medoid_merge(self, x: Array, diag: Array, res, k_tilde, state,
-                      first: bool):
-        """Eq.7 batch medoids + Eq.12 merge, both via distributed argmin."""
+                      first: bool, wgt: Array):
+        """Eq.7 batch medoids + Eq.12 merge, both via distributed argmin.
+
+        ``wgt`` is 0 on ghost rows: masking them out of both argmins keeps
+        the selected row *indices* identical to the single-host run (a
+        ghost duplicate would otherwise be able to win a tie at a higher
+        index).
+        """
         spec, C = self.cfg.kernel, self.cfg.n_clusters
+        ghost = (1.0 - wgt)[:, None] * BIG                        # sharded
         # Eq.7: batch medoid scores.
-        score7 = diag.astype(jnp.float32)[:, None] - 2.0 * res.f  # sharded
+        score7 = diag.astype(jnp.float32)[:, None] - 2.0 * res.f + ghost
         m_idx = _dist_argmin_rows(self.mesh, self.row_axes, score7,
                                   x.shape[0] // self.d_size)
         batch_medoids = jnp.take(x, m_idx, axis=0)                # replicated
@@ -132,7 +173,7 @@ class DistributedMiniBatchKMeans:
                 in_specs=(P(self.row_axes, None), P(self.row_axes),
                           P(self.row_axes, None)),
                 out_specs=P(self.row_axes, None), check_vma=False)(
-                    x, diag, k_tilde)
+                    x, diag, k_tilde) + ghost
             merge_idx = _dist_argmin_rows(self.mesh, self.row_axes, score12,
                                           x.shape[0] // self.d_size)
             merged = jnp.take(x, merge_idx, axis=0)
@@ -161,28 +202,32 @@ class DistributedMiniBatchKMeans:
         start = int(state.batches_done) if state is not None else 0
 
         for i, xb in enumerate(batches, start=start):
+            xb = np.asarray(xb, np.float32)
             n = len(xb)
             idx = ghost_row_ids(n, self.d_size)
-            if len(idx):
-                # Replicate rows so shapes divide the mesh. KNOWN BIAS: the
-                # exact inner loop has no row weights, so the <= P-1 ghost
-                # rows of a non-divisible batch are counted in cardinalities
-                # and the Eq.12 alpha (an O(P / (N/B)) perturbation). The
-                # embedded path masks ghosts exactly (StagedBatch.wgt);
-                # weighting the exact loop is an open ROADMAP item.
-                xb = np.concatenate([xb, np.asarray(xb)[idx]], axis=0)
-            x = self._put_rows(np.asarray(xb, np.float32))
-            diag = shard_map(
-                lambda xl: spec.diag(xl), mesh=self.mesh,
-                in_specs=P(self.row_axes, None), out_specs=P(self.row_axes),
-                check_vma=False)(x)
-            n_l = self._landmark_count(x.shape[0])
             # pure per-batch schedule — batch i's draws depend only on
             # (cfg.seed, i), so a checkpoint-resumed fit replays the same
             # landmarks as the uninterrupted run (same fix as
             # core/minibatch.fit and the embedded path).
             k_lm, k_pp = jax.random.split(jax.random.fold_in(key, i))
-            l_idx = choose_landmarks(k_lm, x.shape[0], n_l)
+            # landmark selection over the UNPADDED rows (ghost-bias fix;
+            # see _choose_landmarks) BEFORE the batch is padded.
+            l_idx, n_l = self._choose_landmarks(k_lm, xb, len(idx))
+            if len(idx):
+                # Replicate head rows so shapes divide the mesh; ``wgt``
+                # masks them out of the cost and both medoid argmins, and
+                # they can no longer be landmarks, so cardinalities and
+                # the Eq.12 alpha match the single-host run exactly.
+                xb = np.concatenate([xb, xb[idx]], axis=0)
+            wgt_host = np.ones((len(xb),), np.float32)
+            wgt_host[n:] = 0.0
+            x = self._put_rows(xb)
+            wgt = jax.device_put(wgt_host,
+                                 NamedSharding(self.mesh, P(self.row_axes)))
+            diag = shard_map(
+                lambda xl: spec.diag(xl), mesh=self.mesh,
+                in_specs=P(self.row_axes, None), out_specs=P(self.row_axes),
+                check_vma=False)(x)
             landmarks = jnp.take(x, l_idx, axis=0)   # [L, d] replicated
 
             first = state is None
@@ -205,9 +250,10 @@ class DistributedMiniBatchKMeans:
                 state_in = state
 
             res = distributed_kkmeans_fit(
-                self.mesh, x, landmarks, l_idx, diag, u0, cfg=self.inner_cfg)
+                self.mesh, x, landmarks, l_idx, diag, u0, cfg=self.inner_cfg,
+                wgt=wgt)
             state, disp = self._medoid_merge(x, diag, res, k_tilde, state_in,
-                                             first)
+                                             first, wgt)
             history.append(BatchStats(
                 inner_iters=int(res.n_iter), cost=float(res.cost),
                 displacement=np.asarray(disp), counts=np.asarray(res.counts)))

@@ -14,7 +14,13 @@ the prefetch producer thread survives neither a failure nor a re-mesh.
 Embedded methods (``cfg.method != "exact"``) checkpoint the sampled feature
 map next to the ``EmbedState`` — the map is part of the model, and a
 restart (possibly on a different mesh) must embed with bit-identical
-parameters or the resumed stream diverges.
+parameters or the resumed stream diverges. The landmark-selection strategy
+(``cfg.selector``) is recorded in the manifest; a streaming selection
+pre-pass (``repro.approx.selectors.select_streaming``) checkpoints its
+``SelectorState`` pytree through the same ``CheckpointManager``, so a
+restart mid-selection folds the remaining batches and re-selects
+bit-identically (selector draws are fold_in-keyed per global row, never
+per process).
 """
 from __future__ import annotations
 
@@ -47,7 +53,10 @@ class ElasticClusteringRunner:
         """Structural twin of the checkpointed feature map: same pytree
         treedef (aux data incl. m comes from cfg + the manifest extra), leaf
         values irrelevant — ``CheckpointManager.restore`` only keeps the
-        structure and reloads every leaf from disk."""
+        structure and reloads every leaf from disk. (The landmark selector
+        does not change the NystromMap structure, so the twin is built with
+        the default uniform selection; the checkpointed leaves carry the
+        actually-selected landmarks.)"""
         from repro import approx
         m, d = int(extra["m"]), int(extra["d"])
         sample = np.zeros((max(m, 2), d), np.float32)
@@ -96,11 +105,13 @@ class ElasticClusteringRunner:
             runner = DistributedEmbedKMeans(mesh, cfg, fmap=fmap)
 
             def cb(s, i: int):
+                from repro.approx.selectors import name_of
                 fm = runner.fmap
                 self.ckpt.save(i, {"state": s, "fmap": fm},
                                extra={"n_batches": cfg.n_batches,
                                       "s": cfg.s, "method": cfg.method,
-                                      "m": fm.dim, "d": fm.in_dim})
+                                      "m": fm.dim, "d": fm.in_dim,
+                                      "selector": name_of(cfg.selector)})
 
         if isinstance(batches, BatchSource):
             src = batches

@@ -98,6 +98,54 @@ def test_nystrom_exact_on_landmarks():
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("selector", ["uniform", "rls", "kpp"])
+def test_nystrom_feature_map_contract_over_selectors(selector):
+    """The FeatureMap contract must hold for every landmark-selection
+    strategy: dim/in_dim, [n, m] f32 output, pytree round-trip, jit with
+    the map as a traced argument, and selection determinism."""
+    n, d, m = 80, 10, 24
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.4)
+    fmap = make_feature_map("nystrom", jax.random.PRNGKey(1), x, m, spec,
+                            selector=selector)
+    assert fmap.dim == m and fmap.in_dim == d
+    z = fmap(x)
+    assert z.shape == (n, m) and z.dtype == jnp.float32
+
+    leaves, treedef = jax.tree_util.tree_flatten(fmap)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(rebuilt) is type(fmap)
+    np.testing.assert_allclose(np.asarray(rebuilt(x)), np.asarray(z),
+                               rtol=1e-6, atol=1e-6)
+    z_jit = jax.jit(lambda f, xs: f(xs))(fmap, x)
+    np.testing.assert_allclose(np.asarray(z_jit), np.asarray(z),
+                               rtol=1e-5, atol=1e-5)
+
+    again = make_feature_map("nystrom", jax.random.PRNGKey(1), x, m, spec,
+                             selector=selector)
+    np.testing.assert_array_equal(np.asarray(again.landmarks),
+                                  np.asarray(fmap.landmarks))
+    # the map reproduces K exactly on its own landmark set (rank-m
+    # property, selector-independent)
+    zl = fmap(fmap.landmarks)
+    np.testing.assert_allclose(np.asarray(zl @ zl.T),
+                               np.asarray(spec(fmap.landmarks,
+                                               fmap.landmarks)),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("selector", ["rls", "kpp"])
+def test_embedded_nystrom_fit_with_selector(selector, blobs):
+    x, y = blobs
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=4,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0,
+                          method="nystrom", embed_dim=24, selector=selector)
+    res = fit_dataset(x, cfg)
+    assert nmi(y, np.asarray(res.predict(x))) >= 0.9
+    assert int(np.asarray(res.state.cardinalities).sum()) == len(x)
+
+
 def test_rff_rejects_non_shift_invariant_kernels():
     with pytest.raises(ValueError, match="shift-invariant"):
         make_rff(jax.random.PRNGKey(0), 4, 16, KernelSpec("polynomial"))

@@ -286,6 +286,52 @@ def test_staging_tail_batch_smaller_than_mesh():
 
 
 @pytest.mark.slow
+def test_exact_ghost_rows_unbiased_when_p_does_not_divide_batch():
+    """Regression for the exact-path ghost-row bias (old ROADMAP item):
+    with P∤(N/B), the modulo-replicated padding rows used to be landmark
+    candidates and to score in the medoid/merge argmins, perturbing
+    cardinalities and the Eq.12 alpha by O(P/(N/B)). Selection now runs
+    over the unpadded rows and the argmins/cost are weight-masked, so —
+    starting both paths from the same state — the distributed fit must
+    reproduce the single-host cardinalities exactly and the medoids
+    bit-for-bit."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.core.minibatch import fit as host_fit
+        from repro.distributed.outer import DistributedMiniBatchKMeans
+
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(2048 + 1027, 8)).astype(np.float32)
+        mesh = jax.make_mesh((8,), ("data",))
+        # landmark_multiple_of matches the mesh so |L| agrees across paths
+        cfg = MiniBatchConfig(n_clusters=5, n_batches=2, s=0.5,
+                              kernel=KernelSpec("rbf", gamma=0.5),
+                              max_inner_iters=4, seed=3,
+                              landmark_multiple_of=8)
+        batches = [x[:2048], x[2048:]]          # second batch: 1027 % 8 != 0
+        st0 = host_fit([batches[0]], cfg).state  # shared starting state
+
+        dist = DistributedMiniBatchKMeans(mesh, cfg).fit([batches[1]],
+                                                         state=st0)
+        host = host_fit([batches[1]], cfg, state=st0)
+        cards_equal = bool((np.asarray(dist.state.cardinalities)
+                            == np.asarray(host.state.cardinalities)).all())
+        medoid_diff = float(np.abs(np.asarray(dist.state.medoids)
+                                   - np.asarray(host.state.medoids)).max())
+        # with s=0.5 cardinalities count LANDMARK rows (Eq.14 expansion):
+        # 1024 for the first batch + 520 for the 1027-row tail batch —
+        # any ghost landmark would show up as excess mass here.
+        total = float(np.asarray(dist.state.cardinalities).sum())
+        print(json.dumps({"cards_equal": cards_equal,
+                          "medoid_diff": medoid_diff,
+                          "total": total}))
+    """)
+    assert res["cards_equal"], "ghost rows still biased the cardinalities"
+    assert res["medoid_diff"] == 0.0
+    assert res["total"] == 1024 + 520
+
+
+@pytest.mark.slow
 def test_distributed_exact_resume_bit_identical():
     """Regression (same class as PR 2's minibatch fix): the distributed
     exact path must draw per-batch keys purely from (seed, i), so a

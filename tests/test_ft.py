@@ -164,6 +164,74 @@ def test_elastic_reshard_across_meshes():
     assert res["err"] < 1e-5, "elastic resume diverged from straight run"
 
 
+def test_elastic_resume_rls_nystrom_bit_identical():
+    """Embedded Nystrom fit with RLS-selected landmarks: fail after 2
+    mini-batches, resume on a smaller mesh. The feature map (with its
+    leverage-selected landmarks) is checkpointed next to the EmbedState and
+    the selector name in the manifest, so the resumed stream must use
+    bit-identical landmarks and land on bit-identical centroids."""
+    script = textwrap.dedent("""\
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, tempfile
+        import numpy as np
+        import jax
+        from repro.core import KernelSpec, MiniBatchConfig
+        from repro.data.sampling import split_batches
+        from repro.ft.checkpoint import CheckpointManager
+        from repro.ft.elastic import ElasticClusteringRunner, SimulatedFailure
+        from repro.distributed.compat import make_mesh
+
+        rng = np.random.default_rng(0)
+        centers = np.array([[0.25,0.25],[0.75,0.75],[0.25,0.75],[0.75,0.25]])
+        X = np.concatenate([rng.normal(c, 0.05, size=(515,2))
+                            for c in centers]).astype(np.float32)
+        perm = rng.permutation(len(X)); X = X[perm]
+        batches = split_batches(X, 4, strategy="stride")
+        cfg = MiniBatchConfig(n_clusters=4, n_batches=4, seed=0,
+                              kernel=KernelSpec("rbf", gamma=8.0),
+                              method="nystrom", embed_dim=16,
+                              selector="rls")
+
+        with tempfile.TemporaryDirectory() as d:
+            ckpt = CheckpointManager(d)
+            runner = ElasticClusteringRunner(cfg, ckpt)
+            mesh_big = make_mesh((8,), ("data",))
+            try:
+                runner.run(mesh_big, batches, fail_after=2)
+                raise SystemExit("expected SimulatedFailure")
+            except SimulatedFailure:
+                pass
+            extra = ckpt.extra(ckpt.latest_step())
+            mesh_small = make_mesh((4,), ("data",))
+            resumed = runner.run(mesh_small, batches)
+
+        with tempfile.TemporaryDirectory() as d:
+            straight = ElasticClusteringRunner(cfg, CheckpointManager(d)).run(
+                make_mesh((8,), ("data",)), batches)
+
+        cent_err = float(np.abs(np.asarray(resumed.state.centroids)
+                                - np.asarray(straight.state.centroids)).max())
+        lm_same = bool((np.asarray(resumed.fmap.landmarks)
+                        == np.asarray(straight.fmap.landmarks)).all())
+        print(json.dumps({"cent_err": cent_err, "lm_same": lm_same,
+                          "selector": extra.get("selector"),
+                          "batches": int(resumed.state.batches_done)}))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(_ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-4000:]
+    import json
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["batches"] == 4
+    assert res["selector"] == "rls"         # manifest records the strategy
+    assert res["lm_same"], "resumed fit re-selected different landmarks"
+    # psum partials regroup on the smaller mesh: allclose, not bitwise
+    assert res["cent_err"] < 1e-5, "elastic rls resume diverged"
+
+
 def test_training_checkpoint_restore_exact(tmp_path):
     """Full train-state checkpoint: params + AdamW state roundtrip, then one
     more step gives identical metrics to an uninterrupted run."""
