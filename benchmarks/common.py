@@ -41,6 +41,19 @@ def git_commit() -> str:
         return "unknown"
 
 
+def load_bench(name: str) -> dict | None:
+    """Read the recorded ``results/BENCH_<name>.json`` baseline (the
+    previous revision's wall time + params), or None when this benchmark
+    has never been recorded."""
+    bench_dir = os.environ.get("REPRO_BENCH", "results")
+    path = os.path.join(bench_dir, f"BENCH_{name}.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
 def record_bench(name: str, seconds: float, *, mode: str,
                  params: dict | None = None) -> str:
     """Append-point of the perf trajectory: one ``results/BENCH_<name>.json``

@@ -1,4 +1,30 @@
-"""Roofline analysis over the dry-run artifacts (assignment deliverable g).
+"""Roofline analysis: GramEngine mode sweep + dry-run artifact terms.
+
+Part 1 — engine sweep (always runs): the exact inner loop under each
+GramEngine mode (materialize / fused / tiled, repro.core.engine) on one
+mini-batch, measuring wall time and reporting the modeled per-iteration
+HBM traffic per row each residency implies:
+
+    materialize:  Q * (|L| + C)    bytes/row  (read resident K + write f)
+    fused:        Q * (d + C)      bytes/row  (features in, f out; Gram
+                                               tiles never leave VMEM —
+                                               only when the Pallas path is
+                                               live; the jnp fallback is
+                                               recorded at panel traffic)
+    tiled:        Q * (|L| + C + d) bytes/row (panel streamed through HBM)
+
+Each BENCH record names the ``path`` that actually ran (pallas /
+jnp-fallback / resident / streamed-panels) so trajectory diffs never
+compare a VMEM model against a fallback measurement.
+
+The three modes must label identically (asserted); the sweep records a
+``bench`` dict (mode -> seconds / iters / bytes-per-row / rows-per-sec)
+that benchmarks/run.py persists as results/BENCH_roofline.json — the perf
+trajectory of the engine subsystem. In fast (CI) mode the fused engine
+runs the Pallas kernel in interpret mode, so the kernel path compile-checks
+on every push.
+
+Part 2 — dry-run terms (when results/dryrun/*.json artifacts exist):
 
 Per (arch x shape x mesh) cell, from results/dryrun/*.json:
 
@@ -65,13 +91,97 @@ def terms(cell: dict) -> dict:
     }
 
 
+def engine_sweep(fast: bool = True) -> dict:
+    """Measure the three GramEngine modes on one exact mini-batch."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import GramEngine, KernelSpec
+    from repro.core.kkmeans import kkmeans_fit
+
+    n, d, c = (512, 32, 8) if fast else (8192, 128, 32)
+    s = 0.25
+    lm = int(n * s)
+    tile_rows = 128
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=1.0 / d)
+    diag = spec.diag(x)
+    l_idx = jnp.asarray(np.sort(rng.choice(n, lm, replace=False)), jnp.int32)
+    u0 = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+
+    engines = {
+        "materialize": GramEngine("materialize"),
+        # fast/CI: interpret mode exercises the Pallas kernel body on CPU
+        # (the compile-check); full mode lets dispatch pick the backend.
+        "fused": GramEngine("fused", pallas="always" if fast else "auto",
+                            interpret=fast),
+        "tiled": GramEngine("tiled", tile_rows=tile_rows),
+    }
+    # the bytes model must describe the path that ACTUALLY runs: off-TPU
+    # without interpret mode, the fused engine's portable fallback
+    # transiently materializes the block — recording the VMEM-residency
+    # figure for it would poison the BENCH baseline.
+    fused_pallas = engines["fused"]._use_pallas(spec)
+    bytes_per_row = {
+        "materialize": 4.0 * (lm + c),
+        "fused": 4.0 * (d + c) if fused_pallas else 4.0 * (lm + c + d),
+        "tiled": 4.0 * (lm + c + d),
+    }
+    paths = {
+        "materialize": "resident",
+        "fused": "pallas" + ("-interpret" if fast else "")
+                 if fused_pallas else "jnp-fallback",
+        "tiled": "streamed-panels",
+    }
+    bench = {"n": n, "d": d, "C": c, "L": lm, "tile_rows": tile_rows,
+             "modes": {}}
+    rows, labels_by_mode = [], {}
+    for mode, eng in engines.items():
+        fit = lambda: kkmeans_fit(x, l_idx, diag, u0, spec=spec,  # noqa: E731
+                                  n_clusters=c, engine=eng)
+        res = fit()                          # compile + warm cache
+        jax.block_until_ready(res.labels)
+        t0 = time.time()
+        res = fit()
+        jax.block_until_ready(res.labels)
+        dt = time.time() - t0
+        iters = int(res.n_iter)
+        rows_per_s = n * max(iters, 1) / max(dt, 1e-9)
+        labels_by_mode[mode] = np.asarray(res.labels)
+        bench["modes"][mode] = {
+            "seconds": dt, "iters": iters,
+            "path": paths[mode],
+            "bytes_per_row_iter": bytes_per_row[mode],
+            "rows_per_sec": rows_per_s,
+            "achieved_bytes_per_sec": bytes_per_row[mode] * rows_per_s,
+        }
+        rows.append([mode, paths[mode], f"{dt*1e3:.1f}", iters,
+                     f"{bytes_per_row[mode]:.0f}",
+                     f"{rows_per_s/1e3:.1f}k"])
+    base = labels_by_mode["materialize"]
+    for mode, lab in labels_by_mode.items():
+        assert (lab == base).all(), \
+            f"engine mode {mode} diverged from materialize labels"
+    table(f"GramEngine mode sweep (n={n}, |L|={lm}, C={c}, d={d})",
+          ["mode", "path", "wall ms", "iters", "bytes/row/iter", "rows/s"],
+          rows)
+    return bench
+
+
 def run(fast: bool = True, dryrun_dir: str = "results/dryrun",
         mesh: str = "16x16"):
+    bench = engine_sweep(fast=fast)
     cells = [c for c in load_cells(dryrun_dir) if c["mesh"] == mesh]
     if not cells:
         print(f"[roofline] no dry-run artifacts in {dryrun_dir} — run "
-              f"`python -m repro.launch.dryrun --all` first")
-        return {}
+              f"`python -m repro.launch.dryrun --all` for the per-arch "
+              f"roofline terms (engine sweep above ran regardless)")
+        save("roofline", {"engine_sweep": bench})
+        return {"engine_sweep": bench, "bench": bench}
     rows, payload = [], {}
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
              "long_500k": 3}
@@ -90,7 +200,9 @@ def run(fast: bool = True, dryrun_dir: str = "results/dryrun",
            "roofline frac", "useful-FLOPs"], rows)
     # the three hillclimb picks (worst frac / most collective-bound /
     # most paper-representative) are documented in EXPERIMENTS.md §Perf.
+    payload["engine_sweep"] = bench
     save("roofline", payload)
+    payload["bench"] = bench
     return payload
 
 

@@ -39,24 +39,46 @@ def main(argv=None):
 
     todo = {args.only: ALL[args.only]} if args.only else ALL
     failures = []
+    deltas = []
+    run_mode = "full" if args.full else "fast"
     for name, fn in todo.items():
         print(f"\n########## {name} {'(full)' if args.full else '(fast)'} "
               f"##########")
+        baseline = common.load_bench(name)
         t0 = time.time()
         try:
             payload = fn(fast=not args.full)
             seconds = time.time() - t0
             print(f"[{name}] finished in {seconds:.1f}s")
-            # perf trajectory: one BENCH_<name>.json per benchmark (wall
-            # time, workload knobs from the payload's "bench" dict, commit)
-            # so the next revision has a baseline to compare against.
+            # perf trajectory: diff against the recorded baseline, then
+            # re-record one BENCH_<name>.json (wall time, workload knobs
+            # from the payload's "bench" dict, commit) so the NEXT revision
+            # has this run to compare against.
+            if baseline and baseline.get("seconds"):
+                if baseline.get("mode", run_mode) == run_mode:
+                    pct = 100.0 * (seconds - baseline["seconds"]) \
+                        / baseline["seconds"]
+                    print(f"[{name}] baseline {baseline['seconds']:.1f}s "
+                          f"@ {baseline.get('commit', '?')} -> "
+                          f"{seconds:.1f}s ({pct:+.1f}%)")
+                    deltas.append((name, baseline["seconds"], seconds, pct))
+                else:
+                    print(f"[{name}] baseline is mode="
+                          f"{baseline.get('mode')!r} — not comparable to "
+                          f"this {run_mode!r} run, skipping the delta")
             common.record_bench(
-                name, seconds, mode="full" if args.full else "fast",
+                name, seconds, mode=run_mode,
                 params=(payload or {}).get("bench", {}))
         except Exception as e:
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    if deltas:
+        common.table(
+            "Perf trajectory vs recorded baselines",
+            ["benchmark", "baseline s", "now s", "delta"],
+            [[n, f"{b:.1f}", f"{s:.1f}", f"{p:+.1f}%"]
+             for n, b, s, p in deltas])
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
     print("\nall benchmarks green; results under results/benchmarks/ "

@@ -1,0 +1,249 @@
+"""One Gram engine for the exact path — §3.2/§3.3 as an architecture.
+
+The inner-loop step (Eq.4-7 / Eq.14-17) is two contractions against the
+label one-hot H and an argmin:
+
+    f = K_xl @ H / counts          [n, C]   (Eq.6/17)
+    g = diag(H^T K_ll H) / counts^2   [C]   (Eq.5/16)
+    u = argmin_j (g_j - 2 f_ij)    [n]      (Eq.4/15)
+
+*Where the Gram blocks live* while those contractions run is the whole
+accuracy/velocity trade the paper says is "ruled by the available system
+memory" (§3.2-3.3) — and it is a strategy, not a constant. ``GramEngine``
+owns that choice behind one contract with three interchangeable modes:
+
+================  ======================  =========================
+mode              residency               per-iteration cost
+================  ======================  =========================
+``materialize``   K blocks in HBM,        1 matvec read of K;
+                  built once per batch    peak HBM O(rows*|L|)
+``fused``         K tiles in VMEM only    Gram rebuilt every
+                  (Pallas; jnp fallback   iteration (+rows*|L|*d
+                  recomputes per iter)    FLOPs); peak HBM O(rows*C)
+``tiled``         one [bm, |L|] panel     Gram rebuilt every
+                  at a time, streamed     iteration; peak HBM
+                  (portable jnp)          O(bm*|L| + rows*C)
+================  ======================  =========================
+
+``materialize`` is the paper's producer/consumer layout (§3.3, Fig.3);
+``fused`` is the beyond-paper VMEM-resident kernel (kernels/assign.py);
+``tiled`` is the middle ground that lets ``s = 1`` survive batches whose
+full [n, |L|] block cannot fit — the planner (``repro.core.memory.plan``)
+prices all three and names the cheapest feasible one.
+
+The single-host inner loop (core.kkmeans) and the mesh inner loop
+(distributed.inner, inside shard_map) run literally the same stats code
+(``engine_stats``): the mesh passes its psum collectives through the
+``reduce_*`` hooks, the single host passes nothing. The argmin authority is
+``assign_from_stats`` — jnp.argmin, FIRST (lowest) cluster index on ties —
+and the Pallas kernel implements the identical rule, so engine choice never
+changes labels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BIG = jnp.float32(1e30)  # "+inf" that survives argmin/min on bf16-ish inputs
+
+ENGINE_MODES = ("materialize", "fused", "tiled")
+
+# kernels the Pallas epilogue can evaluate in-tile (kernel_matrix._epilogue);
+# anything else (laplacian) silently takes the jnp recompute fallback.
+_PALLAS_KINDS = ("rbf", "linear", "polynomial", "cosine")
+
+
+class GramOp(NamedTuple):
+    """One side of the inner-loop contraction, prepared per mini-batch.
+
+    ``k`` is the resident Gram block (materialize mode / caller-precomputed);
+    ``x``/``y`` are the row/column features the other modes rebuild it from.
+    """
+    x: Optional[Array]     # [rows, d] or None when k is precomputed
+    y: Optional[Array]     # [cols, d] landmark features
+    k: Optional[Array]     # [rows, cols] fp32 resident block, or None
+
+
+@dataclasses.dataclass(frozen=True)
+class GramEngine:
+    """Hashable (jit-static) strategy handle for the exact inner loop.
+
+    mode:      Gram residency — "materialize" | "fused" | "tiled".
+    tile_rows: row-panel height of the tiled mode (bounds its peak HBM).
+    pallas:    fused-mode dispatch — "auto" (TPU only) | "always" | "never".
+    interpret: run the Pallas kernel in interpret mode (CPU tests).
+    """
+    mode: str = "materialize"
+    tile_rows: int = 256
+    pallas: str = "auto"
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.mode not in ENGINE_MODES:
+            raise ValueError(
+                f"unknown engine mode {self.mode!r}; have {ENGINE_MODES}")
+        if self.pallas not in ("auto", "always", "never"):
+            raise ValueError(
+                f"pallas must be 'auto'|'always'|'never', got {self.pallas!r}")
+        if self.tile_rows < 1:
+            raise ValueError(f"tile_rows must be >= 1, got {self.tile_rows}")
+
+    # -- per-batch setup -----------------------------------------------------
+
+    def prepare(self, spec, x: Array, y: Array) -> GramOp:
+        """Set up one contraction side: materialize evaluates (and keeps)
+        the block; fused/tiled only record the features."""
+        if self.mode == "materialize":
+            return GramOp(x=x, y=y, k=spec(x, y).astype(jnp.float32))
+        return GramOp(x=x, y=y, k=None)
+
+    @staticmethod
+    def from_matrix(k: Array) -> GramOp:
+        """Wrap a caller-precomputed Gram block (the a-posteriori entry:
+        kkmeans_fit_gram / the oracle tests / the dryrun cells). Always
+        resident; kept in the caller's dtype (a bf16 K block stays bf16 in
+        HBM — the contraction always accumulates fp32)."""
+        return GramOp(x=None, y=None, k=k)
+
+    # -- per-iteration contraction -------------------------------------------
+
+    def _use_pallas(self, spec) -> bool:
+        if spec is None or spec.name not in _PALLAS_KINDS:
+            return False
+        if self.pallas == "never":
+            return False
+        if self.pallas == "always" or self.interpret:
+            return True
+        return jax.default_backend() == "tpu"
+
+    def matvec(self, spec, op: GramOp, h: Array) -> Array:
+        """(K @ h) -> [rows, C] fp32 — the Eq.6/17 contraction under this
+        mode's residency. ``h`` is any [cols, C] panel (one-hot or
+        normalized one-hot of the landmark labels)."""
+        h = h.astype(jnp.float32)
+        if op.k is not None:           # resident block (materialize / gram)
+            return jax.lax.dot_general(op.k.astype(jnp.float32), h,
+                                       (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+        if self.mode == "fused" and self._use_pallas(spec):
+            from repro.kernels import ops as kops
+            return kops.gram_matvec(
+                op.x, op.y, h, kind=spec.name, gamma=spec.gamma,
+                coef0=spec.coef0, degree=spec.degree,
+                interpret=self.interpret)
+        if self.mode == "tiled":
+            return _tiled_matvec(spec, op.x, op.y, h, self.tile_rows)
+        # fused portable fallback: recompute the block, contract, drop it —
+        # same math and shapes as materialize, HBM residency only transient.
+        k = spec(op.x, op.y).astype(jnp.float32)
+        return jax.lax.dot_general(k, h, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    def wants_fused_assign(self, spec, op: GramOp) -> bool:
+        """True when the one-shot Pallas f+argmin pass applies (fused mode,
+        feature-backed op, Pallas-lowerable kernel)."""
+        return (self.mode == "fused" and op.k is None
+                and self._use_pallas(spec))
+
+
+def resolve_engine(engine) -> GramEngine:
+    """Accept a GramEngine or a mode name (the MiniBatchConfig /
+    DistributedInnerConfig currency) and return the engine."""
+    if isinstance(engine, GramEngine):
+        return engine
+    if isinstance(engine, str) and engine in ENGINE_MODES:
+        return GramEngine(mode=engine)
+    raise ValueError(
+        f"engine must be a GramEngine or one of {ENGINE_MODES}, "
+        f"got {engine!r}")
+
+
+def _tiled_matvec(spec, x: Array, y: Array, h: Array,
+                  tile_rows: int) -> Array:
+    """Stream [bm, |L|] Gram panels: each panel is built, contracted against
+    h and dropped before the next one exists, so peak memory is one panel
+    plus the [rows, C] accumulator — never the full block."""
+    n, d = x.shape
+    bm = min(tile_rows, n)
+    n_pad = -(-n // bm) * bm
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    panels = xp.reshape(n_pad // bm, bm, d)
+
+    def one(xt):
+        kt = spec(xt, y).astype(jnp.float32)
+        return jax.lax.dot_general(kt, h, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    f = jax.lax.map(one, panels).reshape(n_pad, h.shape[1])
+    return f[:n]
+
+
+def _apply(reduce_fn: Optional[Callable], v: Array) -> Array:
+    return v if reduce_fn is None else reduce_fn(v)
+
+
+def engine_stats(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
+                 labels_l_cols: Array, labels_l_rows: Array, n_clusters: int,
+                 *, reduce_counts=None, reduce_f=None, reduce_g=None):
+    """Eq.5-6/16-17 stats — THE shared code path of the single-host and mesh
+    inner loops.
+
+    op_xl: batch rows x landmark cols; op_ll: landmark rows x landmark cols.
+    labels_l_cols/rows: labels of the column/row landmark slices (identical
+    single-host). The ``reduce_*`` hooks are the mesh's psums (counts/f over
+    the landmark-column axis, g over rows+columns); None means single-host.
+    Returns (f [rows, C], g [C], counts [C]), all fp32.
+    """
+    h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
+    counts = _apply(reduce_counts, jnp.sum(h_cols, axis=0))
+    safe = jnp.maximum(counts, 1.0)
+    f = _apply(reduce_f, engine.matvec(spec, op_xl, h_cols)) / safe[None, :]
+    h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
+    t = engine.matvec(spec, op_ll, h_cols)                     # [Lrows, C]
+    g = _apply(reduce_g, jnp.sum(h_rows * t, axis=0)) / (safe * safe)
+    return f, g, counts
+
+
+def assign_from_stats(f: Array, g: Array,
+                      counts: Array) -> tuple[Array, Array]:
+    """Eq.4/15 argmin — the tie-break authority: jnp.argmin returns the
+    FIRST (lowest) cluster index among tied minima, and the Pallas fused
+    kernel implements the same rule, so every engine mode labels
+    identically. Empty clusters are unjoinable (+BIG)."""
+    dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)
+    labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    mind = jnp.min(dist, axis=1)
+    return labels, mind
+
+
+def engine_step(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
+                labels_l: Array, n_clusters: int):
+    """One full inner-loop sweep: stats + assignment.
+
+    Returns (f, g, counts, labels, mind) with f/g/counts consistent with the
+    INPUT labels (what the fixpoint pass needs) and labels/mind the Eq.4
+    update. The fused mode folds f + argmin into one Pallas pass (g must be
+    known first, so the landmark-rows contraction still runs separately);
+    every other mode contracts then calls the shared jnp argmin.
+    """
+    if engine.wants_fused_assign(spec, op_xl):
+        from repro.kernels import ops as kops
+        h = jax.nn.one_hot(labels_l, n_clusters, dtype=jnp.float32)
+        counts = jnp.sum(h, axis=0)
+        safe = jnp.maximum(counts, 1.0)
+        t = engine.matvec(spec, op_ll, h)
+        g = jnp.sum(h * t, axis=0) / (safe * safe)
+        labels, mind, f = kops.assign_fused(
+            op_xl.x, op_xl.y, labels_l, counts, g, n_clusters=n_clusters,
+            kind=spec.name, gamma=spec.gamma, coef0=spec.coef0,
+            degree=spec.degree, interpret=engine.interpret)
+        return f, g, counts, labels, mind
+    f, g, counts = engine_stats(engine, spec, op_xl, op_ll,
+                                labels_l, labels_l, n_clusters)
+    labels, mind = assign_from_stats(f, g, counts)
+    return f, g, counts, labels, mind

@@ -9,9 +9,16 @@ The self-consistent label update is
 where L is the landmark set (L = whole mini-batch when s = 1, in which case
 this is *exact* kernel k-means on the mini-batch).
 
-Everything below is shape-static and jit/`shard_map`-friendly:
-the landmark Gram block ``k_ll`` is the row-gather ``k_xl[l_idx]`` (landmarks
-are mini-batch samples), labels are int32, reductions accumulate in fp32.
+The Gram blocks behind f and g live wherever the ``GramEngine``
+(repro.core.engine) puts them: resident in HBM (``materialize``, the
+paper's layout), rebuilt in VMEM per iteration (``fused``, Pallas), or
+streamed as row panels (``tiled``, so ``s = 1`` survives batches whose
+full [n, |L|] block cannot fit). All three run the same stats code and the
+same argmin tie-break (lowest cluster index), so engine choice never
+changes labels — only the memory/FLOP bill.
+
+Everything below is shape-static and jit/`shard_map`-friendly: labels are
+int32, reductions accumulate in fp32.
 """
 from __future__ import annotations
 
@@ -21,9 +28,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-Array = jax.Array
+from .engine import BIG, GramEngine, engine_step, resolve_engine
 
-BIG = jnp.float32(1e30)  # "+inf" that survives argmin/min on bf16-ish inputs
+Array = jax.Array
 
 
 class InnerState(NamedTuple):
@@ -42,64 +49,20 @@ class InnerResult(NamedTuple):
     cost: Array        # [] f32  converged mini-batch cost
 
 
-def _stats(k_xl: Array, k_ll: Array, labels_l: Array, n_clusters: int):
-    """f, g, counts from the landmark Gram blocks and landmark labels.
-
-    k_xl: [n, L]   rows x landmarks
-    k_ll: [L, L]   landmarks x landmarks
-    labels_l: [L]  labels of the landmarks
-    """
-    h = jax.nn.one_hot(labels_l, n_clusters, dtype=jnp.float32)      # [L, C]
-    counts = jnp.sum(h, axis=0)                                      # [C]
-    safe = jnp.maximum(counts, 1.0)
-    # f_{i,j}: masked row-sum == one matmul on the MXU.
-    f = jnp.dot(k_xl.astype(jnp.float32), h) / safe[None, :]         # [n, C]
-    # g_j = (H^T K_ll H)_jj / counts_j^2, via S = K_ll @ H.
-    s = jnp.dot(k_ll.astype(jnp.float32), h)                         # [L, C]
-    g = jnp.sum(h * s, axis=0) / (safe * safe)                       # [C]
-    return f, g, counts
-
-
-def _assign(f: Array, g: Array, counts: Array) -> tuple[Array, Array]:
-    """argmin_j (g_j - 2 f_ij); empty clusters are unjoinable (+BIG)."""
-    dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)  # [n, C]
-    labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
-    mind = jnp.min(dist, axis=1)
-    return labels, mind
-
-
 def _cost(diag_k: Array, mind: Array) -> Array:
     """Omega = sum_i K_ii + min_j(g_j - 2 f_ij)   (||phi(x)-w||^2 expansion)."""
     return jnp.sum(diag_k.astype(jnp.float32) + mind)
 
 
-@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
-def kkmeans_fit(
-    k_xl: Array,
-    l_idx: Array,
-    diag_k: Array,
-    labels0: Array,
-    *,
-    n_clusters: int,
-    max_iters: int = 100,
-) -> InnerResult:
-    """Run the inner GD loop (Eq.4) to convergence on one mini-batch.
-
-    Args:
-      k_xl: [n, L] kernel block between every batch row and the landmarks.
-      l_idx: [L] int32 indices of the landmarks within the batch.
-      diag_k: [n] K(x_i, x_i).
-      labels0: [n] initial labels (from k-means++ or the previous batch's
-        global medoids, Eq.8).
-      n_clusters: C.
-      max_iters: hard iteration cap (the paper iterates to label fixpoint;
-        Bottou & Bengio guarantee a.s. convergence for the exact case).
-    """
-    k_ll = jnp.take(k_xl, l_idx, axis=0)  # [L, L]
+def _run_inner(engine: GramEngine, spec, op_xl, op_ll, l_idx: Array,
+               diag_k: Array, labels0: Array, *, n_clusters: int,
+               max_iters: int) -> InnerResult:
+    """Shared GD loop over a prepared pair of Gram operators."""
 
     def body(state: InnerState) -> InnerState:
-        f, g, counts = _stats(k_xl, k_ll, jnp.take(state.labels, l_idx), n_clusters)
-        labels, mind = _assign(f, g, counts)
+        labels_l = jnp.take(state.labels, l_idx)
+        _, _, _, labels, mind = engine_step(
+            engine, spec, op_xl, op_ll, labels_l, n_clusters)
         changed = jnp.any(labels != state.labels)
         return InnerState(labels, changed, state.t + 1, _cost(diag_k, mind))
 
@@ -116,8 +79,72 @@ def kkmeans_fit(
 
     # one more stats pass at the fixpoint (cheap relative to the loop) so the
     # caller gets f/g consistent with the final labels for Eq.7 medoids.
-    f, g, counts = _stats(k_xl, k_ll, jnp.take(final.labels, l_idx), n_clusters)
+    f, g, counts, _, _ = engine_step(
+        engine, spec, op_xl, op_ll, jnp.take(final.labels, l_idx), n_clusters)
     return InnerResult(final.labels, f, g, counts, final.t, final.cost)
+
+
+@partial(jax.jit, static_argnames=("spec", "n_clusters", "max_iters",
+                                   "engine"))
+def kkmeans_fit(
+    x: Array,
+    l_idx: Array,
+    diag_k: Array,
+    labels0: Array,
+    *,
+    spec,
+    n_clusters: int,
+    max_iters: int = 100,
+    engine: GramEngine = GramEngine(),
+) -> InnerResult:
+    """Run the inner GD loop (Eq.4) to convergence on one mini-batch.
+
+    Args:
+      x: [n, d] mini-batch rows (features — the engine decides whether and
+        where the Gram blocks they imply get materialized).
+      l_idx: [L] int32 indices of the landmarks within the batch.
+      diag_k: [n] K(x_i, x_i).
+      labels0: [n] initial labels (from k-means++ or the previous batch's
+        global medoids, Eq.8).
+      spec: KernelSpec evaluating the Gram blocks.
+      n_clusters: C.
+      max_iters: hard iteration cap (the paper iterates to label fixpoint;
+        Bottou & Bengio guarantee a.s. convergence for the exact case).
+      engine: GramEngine naming the Gram residency (materialize/fused/tiled).
+    """
+    engine = resolve_engine(engine)
+    landmarks = jnp.take(x, l_idx, axis=0)
+    op_xl = engine.prepare(spec, x, landmarks)
+    if op_xl.k is not None:
+        # materialize: the landmark block is a row-gather of the resident
+        # batch block (landmarks ARE batch rows) — today's exact math, no
+        # second kernel evaluation.
+        op_ll = GramEngine.from_matrix(jnp.take(op_xl.k, l_idx, axis=0))
+    else:
+        op_ll = engine.prepare(spec, landmarks, landmarks)
+    return _run_inner(engine, spec, op_xl, op_ll, l_idx, diag_k, labels0,
+                      n_clusters=n_clusters, max_iters=max_iters)
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "max_iters"))
+def kkmeans_fit_gram(
+    k_xl: Array,
+    l_idx: Array,
+    diag_k: Array,
+    labels0: Array,
+    *,
+    n_clusters: int,
+    max_iters: int = 100,
+) -> InnerResult:
+    """A-posteriori entry: run the inner loop on a caller-precomputed
+    [n, L] kernel block (k_ll is the row-gather ``k_xl[l_idx]``). This is
+    the materialize layout with the evaluation already paid — the oracle
+    the engine modes are tested against."""
+    engine = GramEngine("materialize")
+    op_xl = GramEngine.from_matrix(k_xl)
+    op_ll = GramEngine.from_matrix(jnp.take(k_xl, l_idx, axis=0))
+    return _run_inner(engine, None, op_xl, op_ll, l_idx, diag_k, labels0,
+                      n_clusters=n_clusters, max_iters=max_iters)
 
 
 def medoid_indices(diag_k: Array, f: Array, labels: Array, counts: Array,
@@ -146,9 +173,10 @@ def kkmeans_fit_full(
     n_clusters: int,
     max_iters: int = 100,
 ) -> InnerResult:
-    """Exact (s = 1) kernel k-means: landmarks == every sample."""
+    """Exact (s = 1) kernel k-means on a precomputed full Gram matrix:
+    landmarks == every sample."""
     n = k.shape[0]
-    return kkmeans_fit.__wrapped__(
+    return kkmeans_fit_gram.__wrapped__(
         k, jnp.arange(n, dtype=jnp.int32), diag_k, labels0,
         n_clusters=n_clusters, max_iters=max_iters,
     )

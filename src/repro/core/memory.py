@@ -12,6 +12,22 @@ C << R/Q). With landmarks the K-row term shrinks by s; with the fused
 assignment path (DESIGN.md §2) the K term disappears entirely and B_min is
 driven by feature storage — ``plan`` reports all three.
 
+The exact path's Gram residency is itself a priced strategy
+(``repro.core.engine``): ``engine_footprint_bytes`` gives the per-node
+bytes of one inner iteration under each GramEngine mode —
+
+    materialize:  rows*|L| (K resident)        + rows*C (f)
+    fused:        0        (K tiles in VMEM)   + rows*C
+    tiled:        bm*|L|   (one streamed panel)+ rows*C
+
+— and ``plan`` names the cheapest-FLOP mode that fits the budget as
+``Plan.engine`` (materialize reads K, the others rebuild it every
+iteration), with all three bills in ``Plan.engine_footprints``. This is the
+paper's §3.3 producer/consumer offload as a menu: when the caller pins B
+below B_min (``plan(b=...)``) the resident block stops fitting and the plan
+degrades to ``tiled`` (portable) instead of failing — ``s = 1`` survives
+any batch the panel fits.
+
 Explicit feature maps (repro.approx) change the footprint shape entirely:
 the embedded mini-batch is linear in the batch size,
 
@@ -57,7 +73,13 @@ the input rows are already priced by the embed term. kpp: the greedy
 candidate kernel columns plus the running D^2 vector.)
 
 What those selection bytes BUY is the point: ``Plan.frontier()`` ranks the
-strategies by *predicted accuracy per byte at a fixed budget*. The
+strategies by *predicted accuracy per byte at a fixed budget* — and the
+exact path competes on it: the ``exact-tiled`` candidate prices the Eq.14
+landmark expansion at |L| = m landmarks under the tiled engine (one
+streamed panel instead of a resident block), with the same
+landmark-quality accuracy model as Nystrom, so "keep the exact inner loop
+but stream its Gram block" is ranked against "switch representation"
+on the same accuracy-per-byte axis. The
 accuracy model is deliberately coarse — Nystrom error tracks the kernel's
 spectral tail, and RLS-sampled landmarks cover that tail like ~1.6x as
 many uniform ones (kpp ~1.25x; constants from the RLS literature's
@@ -99,6 +121,36 @@ def footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     k_term = 0.0 if fused else rows * (cols + c)   # K rows + f rows
     feat = d * (rows + cols) if d else 0.0         # X rows + landmark rows
     return q * (k_term + nb + 2 * c + feat)
+
+
+ENGINE_MODES = ("materialize", "fused", "tiled")
+
+
+def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
+                           s: float = 1.0, d: int = 0,
+                           mode: str = "materialize",
+                           tile_rows: int = 256) -> float:
+    """Per-node bytes of one exact inner-loop iteration under a GramEngine
+    mode (module docstring, engine paragraph).
+
+    materialize keeps the [rows, |L|] block resident; fused rebuilds it in
+    VMEM (nothing but the [rows, C] f panel in HBM); tiled streams
+    ``tile_rows``-high panels. All modes pay the f panel, the label/medoid
+    bookkeeping, and (d > 0) the feature rows the rebuild needs on-node.
+    """
+    nb = n / b
+    rows = nb / p
+    cols = s * nb
+    feat = d * (rows + cols) if d else 0.0
+    if mode == "materialize":
+        k_term = rows * cols
+    elif mode == "fused":
+        k_term = 0.0
+    elif mode == "tiled":
+        k_term = min(tile_rows, rows) * cols
+    else:
+        raise ValueError(f"unknown engine mode {mode!r}; have {ENGINE_MODES}")
+    return q * (k_term + rows * c + nb + 2 * c + feat)
 
 
 def embed_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
@@ -158,8 +210,10 @@ def selector_footprint_bytes(n: int, b: int, p: int, q: int = 4, *,
 def predicted_accuracy(method: str, selector: str | None, m: int,
                        c: int) -> float:
     """Coarse accuracy model behind ``Plan.frontier()`` (module docstring):
-    Nystrom ~ 1 - (1 + m_eff/C)^-1 with the selector's effective-landmark
-    multiplier; sketch ~ 1 - sqrt(C/m). Only the *ordering* is trusted."""
+    landmark methods (nystrom AND the exact-tiled Eq.14 expansion, which is
+    a landmark approximation of the same rank) ~ 1 - (1 + m_eff/C)^-1 with
+    the selector's effective-landmark multiplier; sketch ~ 1 - sqrt(C/m).
+    Only the *ordering* is trusted."""
     if m < 1:
         return 0.0
     if method == "sketch":
@@ -227,6 +281,20 @@ class Plan:
     host_footprint: float = 0.0  # ingest node: (1 + prefetch_depth) batches
     selector: str = "uniform"    # landmark-selection strategy priced in
     selector_footprint: float = 0.0
+    # -- exact-path Gram residency (repro.core.engine): the cheapest-FLOP
+    #    mode that fits the budget, plus the full per-mode bill.
+    engine: str = "materialize"
+    engine_footprints: dict = dataclasses.field(default_factory=dict)
+    tile_rows: int = 256
+
+    def gram_engine(self):
+        """The priced pick as a runnable ``GramEngine`` — mode AND the
+        ``tile_rows`` the tiled footprint was validated with (threading the
+        bare ``Plan.engine`` string would silently run default-height
+        panels the budget check never saw). Hand this to
+        ``MiniBatchConfig(engine=plan.gram_engine())``."""
+        from .engine import GramEngine
+        return GramEngine(self.engine, tile_rows=self.tile_rows)
     # -- the workload this plan was made for (frontier() re-prices with it)
     n: int = 0
     c: int = 0
@@ -240,8 +308,10 @@ class Plan:
         """Rank landmark/sketch strategies by predicted accuracy-per-byte
         at a fixed per-node byte budget.
 
-        Every candidate — Nystrom with each selector, plus the count-sketch
-        when the workload was declared ``sketchable`` — gets the largest
+        Every candidate — Nystrom with each selector, the exact path under
+        the tiled engine (|L| = m landmarks, streamed Gram panels), plus
+        the count-sketch when the workload was declared ``sketchable`` —
+        gets the largest
         embedding dim m its footprint affords within ``budget_bytes``
         (default: what this plan already spends on the embedded method);
         the coarse accuracy model (``predicted_accuracy``) then prices what
@@ -267,13 +337,32 @@ class Plan:
                                           self.q, m=m, d=self.d,
                                           density=self.density)
 
+        nb = self.n / self.b
+
+        def exact_tiled_bytes(m: int, sel: str) -> float:
+            # the Eq.14 expansion at |L| = m landmarks under the tiled
+            # engine: one streamed [tile_rows, m] panel instead of a
+            # resident [rows, m] block, plus the selection bill the exact
+            # path pays for its own landmarks.
+            return (engine_footprint_bytes(self.n, self.b, self.c, self.p,
+                                           self.q, s=m / nb, d=self.d,
+                                           mode="tiled",
+                                           tile_rows=self.tile_rows)
+                    + selector_footprint_bytes(self.n, self.b, self.p,
+                                               self.q, m=m, selector=sel))
+
         cands = [("nystrom", s, nystrom_bytes)
                  for s in ("rls", "kpp", "uniform")]
+        # the exact path competes at the SAME budget: landmarks cost panel
+        # bytes, not resident-block bytes, and buy nystrom-grade accuracy.
+        cands.append(("exact-tiled", self.selector, exact_tiled_bytes))
         if self.sketchable:
             cands.append(("sketch", None, sketch_bytes))
         out = []
         for method, sel, bytes_fn in cands:
             m = _max_m_within(lambda mm: bytes_fn(mm, sel), budget)
+            if method == "exact-tiled":
+                m = min(m, int(nb))     # |L| cannot exceed the mini-batch
             if m < 1:
                 continue
             cost = bytes_fn(m, sel)
@@ -302,17 +391,33 @@ def _max_m_within(bytes_fn, budget: float, *, m_cap: int = 1 << 20) -> int:
 
 
 def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
+         b: int | None = None,
          embed_dim: int | None = None,
          sketchable: bool = False, density: float = 1.0,
          selector: str = "uniform",
          prefetch_depth: int = 2,
+         tile_rows: int = 256,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
     """§4.2 model-selection rationale, automated.
 
     Start at (B_min, s=1). If a target per-batch time is given together with a
     measured single-batch time, first shrink s (down to 0.2 — the paper's
-    accuracy cliff), then increase B.
+    accuracy cliff), then increase B. Passing ``b`` pins the batch count
+    instead (a pipeline constraint the planner must live with) — B_min is
+    skipped and the GramEngine pick below absorbs the memory pressure.
+
+    The exact path's Gram residency is priced per mode
+    (``engine_footprint_bytes``, ``tile_rows`` sizing the tiled panels) and
+    ``Plan.engine`` names the cheapest-FLOP mode that fits: ``materialize``
+    when the resident block fits (it amortizes the kernel evaluations over
+    every inner iteration), else ``tiled`` (portable streamed panels —
+    rebuilds the Gram every iteration), else ``fused`` (VMEM-resident tiles
+    only; the TPU Pallas path — its portable jnp fallback transiently
+    materializes the block, so off-TPU the degrade order effectively stops
+    at tiled). All three bills are in ``Plan.engine_footprints``; thread
+    the pick as ``MiniBatchConfig(engine=plan.gram_engine())`` (mode plus
+    the validated ``tile_rows``).
 
     The embedded-space footprint (RFF/Nystrom at ``embed_dim``; default
     m = 4*C, the tested accuracy floor) is always reported alongside, and
@@ -340,9 +445,12 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     auto-pick, and ``Plan.frontier()`` ranks all strategies by what their
     bytes buy at a fixed budget.
     """
-    b = b_min(n, c, machine)
+    if b is None:
+        b = b_min(n, c, machine)
+        note = "B_min at s=1 (optimal for the available memory)"
+    else:
+        note = f"B={b} pinned by caller"
     s = 1.0
-    note = "B_min at s=1 (optimal for the available memory)"
     if target_batch_seconds and measured_batch_seconds:
         ratio = measured_batch_seconds / target_batch_seconds
         if ratio > 1.0:
@@ -358,6 +466,32 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     m = embed_dim if embed_dim is not None else 4 * c
     p, q = machine.n_processors, machine.bytes_per_scalar
     fp = footprint_bytes(n, b, c, p, q, s=s, d=d)
+    # -- Gram residency of the exact inner loop: cheapest-FLOP mode that
+    #    fits (materialize amortizes the kernel evaluations; tiled/fused
+    #    rebuild per iteration but cap the resident bytes).
+    eng_fp = {mode: engine_footprint_bytes(n, b, c, p, q, s=s, d=d,
+                                           mode=mode, tile_rows=tile_rows)
+              for mode in ENGINE_MODES}
+    if eng_fp["materialize"] <= machine.memory_bytes:
+        engine = "materialize"
+    elif eng_fp["tiled"] <= machine.memory_bytes:
+        engine = "tiled"
+        note += (f"; exact engine: tiled (resident Gram block "
+                 f"{eng_fp['materialize']/1e6:.0f} MB > budget — streaming "
+                 f"{tile_rows}-row panels)")
+    elif eng_fp["fused"] <= machine.memory_bytes:
+        engine = "fused"
+        note += ("; exact engine: fused (even one Gram panel is tight — "
+                 "needs the Pallas VMEM-tile path; the portable jnp "
+                 "fallback transiently materializes the block)")
+    else:
+        # nothing fits — report the smallest bill honestly instead of
+        # pretending a mode rescues this (B, s); the caller must grow B,
+        # shrink s, or switch representation (see Plan.method/frontier()).
+        engine = "fused"
+        note += (f"; exact path DOES NOT FIT: even the fused f panel is "
+                 f"{eng_fp['fused']/1e6:.1f} MB > budget — raise B, lower "
+                 f"s, or use an embedded method")
     fp_embed = embed_footprint_bytes(n, b, c, p, q, m=m, d=d)
     fp_sel = selector_footprint_bytes(n, b, p, q, m=m, selector=selector)
     # the exact path selects |L| = s*N/B landmarks per batch with the SAME
@@ -390,5 +524,8 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
             prefetch_depth=prefetch_depth),
         selector=selector,
         selector_footprint=fp_sel,
+        engine=engine,
+        engine_footprints=eng_fp,
+        tile_rows=tile_rows,
         n=n, c=c, d=d, p=p, q=q, density=density, sketchable=sketchable,
     )

@@ -2,7 +2,9 @@
 
 Per mini-batch i:
   1. fetch X^i (stride or block sampling — repro.data.sampling)
-  2. evaluate the landmark kernel block K^i = K(X^i, X^i[L])   [n, |L|]
+  2. hand the batch to the GramEngine (repro.core.engine): the landmark
+     kernel block K^i = K(X^i, X^i[L]) is materialized in HBM, rebuilt in
+     VMEM per iteration, or streamed in row panels, per ``cfg.engine``
   3. initialize labels: kernel k-means++ (i = 0) or nearest global medoid via
      the auxiliary matrix K~^i (Eq.8)
   4. inner GD loop to label fixpoint (repro.core.kkmeans)
@@ -32,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .engine import GramEngine, resolve_engine
 from .init import assign_to_medoids, kmeans_pp_indices
 from .kernels import KernelSpec
 from .kkmeans import kkmeans_fit, medoid_indices
@@ -60,6 +63,12 @@ class MiniBatchConfig:
     # that pick landmark rows — method="exact" (the Eq.14 expansion) and
     # method="nystrom" (the embedding's landmark set).
     selector: object = "uniform"
+    # Gram residency of the exact inner loop (repro.core.engine):
+    # "materialize" | "fused" | "tiled" or a GramEngine instance — the
+    # planner (core.memory.plan) names the cheapest feasible mode as
+    # ``Plan.engine``. Only meaningful for method="exact" (the embedded
+    # methods never evaluate Gram blocks).
+    engine: object = "materialize"
 
     _METHODS = ("exact", "rff", "nystrom", "sketch", "tensorsketch")
 
@@ -75,6 +84,12 @@ class MiniBatchConfig:
                 f"selector {name_of(self.selector)!r} only applies to "
                 f"landmark-based methods ('exact', 'nystrom'); "
                 f"method {self.method!r} has no landmarks")
+        eng = resolve_engine(self.engine)      # validates the mode name
+        if eng != GramEngine() and self.method != "exact":
+            raise ValueError(
+                f"engine {eng.mode!r} only applies to method='exact' (the "
+                f"embedded method {self.method!r} never evaluates Gram "
+                f"blocks — its fused kernel is kernels/embed_assign.py)")
 
 
 class GlobalState(NamedTuple):
@@ -133,7 +148,6 @@ def _first_batch_step(x: Array, key: Array, *, cfg: MiniBatchConfig,
     k_lm, k_pp = jax.random.split(key)
     l_idx = select_landmark_indices(k_lm, x, n_landmarks, spec,
                                     selector=cfg.selector)
-    k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
 
     seeds = kmeans_pp_indices(x, diag_k, k_pp, n_clusters=cfg.n_clusters,
                               spec=spec)
@@ -141,9 +155,10 @@ def _first_batch_step(x: Array, key: Array, *, cfg: MiniBatchConfig,
     labels0, _ = assign_to_medoids(x, diag_k, seed_x, spec.diag(seed_x),
                                    spec=spec)
 
-    res = kkmeans_fit(k_xl, l_idx, diag_k, labels0,
+    res = kkmeans_fit(x, l_idx, diag_k, labels0, spec=spec,
                       n_clusters=cfg.n_clusters,
-                      max_iters=cfg.max_inner_iters)
+                      max_iters=cfg.max_inner_iters,
+                      engine=resolve_engine(cfg.engine))
     m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,
                            restrict_to_members=cfg.restrict_medoids_to_members)
     medoids = jnp.take(x, m_idx, axis=0)                           # [C, d]
@@ -168,15 +183,15 @@ def _next_batch_step(x: Array, key: Array, state: GlobalState, *,
     k_lm, _ = jax.random.split(key)
     l_idx = select_landmark_indices(k_lm, x, n_landmarks, spec,
                                     selector=cfg.selector)
-    k_xl = spec(x, jnp.take(x, l_idx, axis=0))                     # [n, L]
 
     # -- init from the previous global medoids (Eq.8); K~^i is [n, C].
     labels0, k_tilde = assign_to_medoids(x, diag_k, state.medoids,
                                          state.medoid_diag, spec=spec)
 
-    res = kkmeans_fit(k_xl, l_idx, diag_k, labels0,
+    res = kkmeans_fit(x, l_idx, diag_k, labels0, spec=spec,
                       n_clusters=cfg.n_clusters,
-                      max_iters=cfg.max_inner_iters)
+                      max_iters=cfg.max_inner_iters,
+                      engine=resolve_engine(cfg.engine))
 
     # -- batch medoids (Eq.7/10).
     m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,

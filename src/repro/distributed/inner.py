@@ -14,17 +14,35 @@ Q*(N/(B*P) + 2C) bytes per iteration.
 Beyond-paper 2-D extension (DESIGN.md §2): the landmark (column) dimension is
 additionally sharded over the ``model`` axis; f and g gain one ``psum`` over
 ``model`` (C floats per row-block — still tiny) while per-device kernel-block
-memory drops from rows_p x |L| to rows_p x |L|/M, which is what lets ``s = 1``
-survive on big mini-batches. Setting mesh model axis = 1 recovers the faithful
-algorithm exactly.
+memory drops from rows_p x |L| to rows_p x |L|/M. Setting mesh model axis = 1
+recovers the faithful algorithm exactly.
 
-Two compute modes:
-  * ``materialize`` — the paper's layout: K^i(p) computed once per batch,
-    resident in device memory, consumed by every inner iteration.
-  * ``fused``       — the Pallas-fused path (repro.kernels.assign): the Gram
-    tile is rebuilt in VMEM per iteration and never hits HBM. More FLOPs,
-    ~|L|x less HBM traffic per iteration; the §Perf tables quantify when each
-    wins (few inner iterations -> fused, many -> materialize).
+WHERE the per-device Gram blocks live is the ``GramEngine`` contract
+(repro.core.engine) — the same engine, and literally the same stats code
+(``engine_stats``), as the single-host loop; this module only adds the psum
+hooks. Per device and per inner iteration (rows_p = N/(B*D), L_m = |L|/M):
+
+=============  =======================  ==================  ================
+engine mode    peak HBM                 Gram FLOPs          when it wins
+=============  =======================  ==================  ================
+materialize    rows_p*L_m + rows_p*C    0 (built once per   many inner
+               (K resident + f)         batch, amortized)   iterations
+fused          rows_p*C (f only; K      rows_p*L_m*d +      HBM-bound, few
+               tiles live in VMEM,      L_d*L_m*d rebuilt   iterations, TPU
+               Pallas; jnp fallback     every iteration     (Pallas path)
+               recomputes per iter)
+tiled          bm*L_m + rows_p*C        same rebuild as     full block
+               (one row panel at a      fused               exceeds HBM;
+               time, portable jnp)                          s = 1 survives
+=============  =======================  ==================  ================
+
+materialize reads the resident block once per iteration (O(L_m) bytes/row);
+fused raises arithmetic intensity to ~L_m FLOPs/byte by rebuilding the tile
+in VMEM (O(d + C) bytes/row); tiled pays fused's FLOP bill at HBM-panel
+granularity so it runs on any backend. The planner
+(``repro.core.memory.plan``) prices all three against the memory budget and
+names the pick as ``Plan.engine``; ``benchmarks/roofline.py`` measures the
+trade.
 """
 from __future__ import annotations
 
@@ -36,8 +54,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import (GramEngine, assign_from_stats, engine_stats,
+                               resolve_engine)
 from repro.core.kernels import KernelSpec
-from repro.core.kkmeans import BIG
 
 from .compat import shard_map
 
@@ -49,7 +68,8 @@ class DistributedInnerConfig:
     n_clusters: int
     kernel: KernelSpec = KernelSpec("rbf", gamma=1.0)
     max_iters: int = 100
-    mode: str = "materialize"        # "materialize" | "fused"
+    # Gram residency: "materialize" | "fused" | "tiled" or a GramEngine.
+    engine: object = "materialize"
     row_axes: tuple[str, ...] = ("data",)
     col_axis: str | None = "model"   # None -> faithful 1-D distribution
 
@@ -63,32 +83,6 @@ class DistInnerResult(NamedTuple):
     cost: Array
 
 
-def _one_hot_stats(k_rows_cols, k_ll_rows_cols, labels_l_cols, labels_l_rows,
-                   n_clusters: int, col_axis, row_axes):
-    """f, g, counts with rows sharded over row_axes, landmark cols over
-    col_axis (both possibly trivial). All reductions fp32."""
-    h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
-    counts = jnp.sum(h_cols, axis=0)
-    if col_axis is not None:
-        counts = jax.lax.psum(counts, col_axis)              # [C]
-    safe = jnp.maximum(counts, 1.0)
-
-    f = jnp.dot(k_rows_cols.astype(jnp.float32), h_cols)     # [rows_p, C]
-    if col_axis is not None:
-        f = jax.lax.psum(f, col_axis)
-    f = f / safe[None, :]
-
-    # g via the (L/D x L/M) block of K_ll: diag_j of h_rows^T K h_cols.
-    h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
-    t = jax.lax.dot_general(k_ll_rows_cols.astype(jnp.float32), h_cols,
-                            (((1,), (0,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # [Ld, C]
-    g = jnp.sum(h_rows * t, axis=0)
-    g = jax.lax.psum(g, row_axes if col_axis is None else (*row_axes, col_axis))
-    g = g / (safe * safe)
-    return f, g, counts
-
-
 def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
                   diag_local, l_idx_cols, l_idx_rows, wgt_local,
                   n_local_rows: int):
@@ -96,30 +90,30 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
     spec = cfg.kernel
     row_axes, col_axis = cfg.row_axes, cfg.col_axis
     C = cfg.n_clusters
+    engine = resolve_engine(cfg.engine)
 
-    # loop-invariant kernel blocks (paper lines 3 & 11-12 precompute).
-    if cfg.mode == "materialize":
-        k_block = spec(x_local, lm_cols)           # [rows_p, L/M] resident
-    k_ll_block = spec(lm_rows, lm_cols)            # [L/D, L/M]
+    # per-batch Gram operators (paper lines 3 & 11-12 precompute): the
+    # materialize engine evaluates and keeps the blocks here; fused/tiled
+    # only record the features and rebuild tiles/panels inside each
+    # iteration's matvec.
+    op_xl = engine.prepare(spec, x_local, lm_cols)        # rows_p x L/M
+    op_ll = engine.prepare(spec, lm_rows, lm_cols)        # L/D x L/M
 
-    def gram_block():
-        if cfg.mode == "materialize":
-            return k_block
-        # fused: recompute per iteration (VMEM-resident on TPU via Pallas;
-        # portable jnp path otherwise — same math, same shapes).
-        return spec(x_local, lm_cols)
+    # the mesh's collectives, handed to the SHARED stats code as hooks:
+    # counts/f reduce over the landmark-column axis, g over rows + columns.
+    red_cols = ((lambda v: jax.lax.psum(v, col_axis))
+                if col_axis is not None else None)
+    g_axes = row_axes if col_axis is None else (*row_axes, col_axis)
+    red_g = lambda v: jax.lax.psum(v, g_axes)             # noqa: E731
 
     def iterate(u_local):
         # paper line 10: allgather U (tiled -> [n]) over the row axes.
         u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
-        labels_l_cols = jnp.take(u_full, l_idx_cols)
-        labels_l_rows = jnp.take(u_full, l_idx_rows)
-        f, g, counts = _one_hot_stats(gram_block(), k_ll_block,
-                                      labels_l_cols, labels_l_rows,
-                                      C, col_axis, row_axes)
-        dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)
-        u_new = jnp.argmin(dist, axis=1).astype(jnp.int32)
-        mind = jnp.min(dist, axis=1)
+        f, g, counts = engine_stats(
+            engine, spec, op_xl, op_ll,
+            jnp.take(u_full, l_idx_cols), jnp.take(u_full, l_idx_rows),
+            C, reduce_counts=red_cols, reduce_f=red_cols, reduce_g=red_g)
+        u_new, mind = assign_from_stats(f, g, counts)
         # ghost rows (wgt 0) replicate real rows to divide the mesh; they
         # follow their source row's label but must not inflate the cost.
         cost = jax.lax.psum(

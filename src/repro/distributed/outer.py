@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.engine import resolve_engine
 from repro.core.init import kmeans_pp_indices
 from repro.core.kkmeans import BIG
 from repro.core.landmarks import (choose_landmarks, num_landmarks,
@@ -70,7 +71,11 @@ class DistributedMiniBatchKMeans:
     """Mesh-resident mini-batch kernel k-means (the production entry point)."""
 
     def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *,
-                 mode: str = "materialize"):
+                 mode: object = None):
+        """``mode`` names the GramEngine of the inner loop — "materialize" |
+        "fused" | "tiled" or a ``repro.core.engine.GramEngine`` instance;
+        default: whatever ``cfg.engine`` says (itself "materialize" unless
+        the planner picked otherwise)."""
         self.mesh = mesh
         self.cfg = cfg
         row_axes = tuple(n for n in mesh.axis_names if n != "model")
@@ -81,7 +86,8 @@ class DistributedMiniBatchKMeans:
         self.m_size = mesh.shape[col_axis] if col_axis else 1
         self.inner_cfg = DistributedInnerConfig(
             n_clusters=cfg.n_clusters, kernel=cfg.kernel,
-            max_iters=cfg.max_inner_iters, mode=mode,
+            max_iters=cfg.max_inner_iters,
+            engine=resolve_engine(cfg.engine if mode is None else mode),
             row_axes=row_axes, col_axis=col_axis)
         self._row_sharding = NamedSharding(mesh, P(row_axes, None))
 

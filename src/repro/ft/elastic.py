@@ -41,7 +41,11 @@ from .checkpoint import CheckpointManager
 
 class ElasticClusteringRunner:
     def __init__(self, cfg: MiniBatchConfig, ckpt: CheckpointManager, *,
-                 mode: str = "materialize", prefetch: int = 0):
+                 mode: object = None, prefetch: int = 0):
+        """``mode`` overrides the exact inner loop's GramEngine; default
+        None defers to ``cfg.engine`` (the planner-threaded pick) — an
+        elastic restart must not silently demote a tiled/fused plan back
+        to the resident-block layout."""
         self.cfg = cfg
         self.ckpt = ckpt
         self.mode = mode

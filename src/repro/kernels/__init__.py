@@ -3,9 +3,9 @@
 # fused assignment and the embedded-space fused embed+assign.
 # ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
 from .ops import (assign_fused, assign_fused_ref, embed_assign,
-                  embed_assign_ref, kernel_matrix, kernel_matrix_ref,
-                  sketch_assign, sketch_assign_ref)
+                  embed_assign_ref, gram_matvec, kernel_matrix,
+                  kernel_matrix_ref, sketch_assign, sketch_assign_ref)
 
 __all__ = ["assign_fused", "assign_fused_ref", "embed_assign",
-           "embed_assign_ref", "kernel_matrix", "kernel_matrix_ref",
-           "sketch_assign", "sketch_assign_ref"]
+           "embed_assign_ref", "gram_matvec", "kernel_matrix",
+           "kernel_matrix_ref", "sketch_assign", "sketch_assign_ref"]

@@ -8,11 +8,18 @@ reducing it against the label one-hot, a single kernel
   1. builds each (bm x bl) Gram tile in VMEM from feature tiles (MXU),
   2. immediately contracts it against the normalized one-hot H [bl x C]
      to accumulate f = K @ H (Eq.17),
-  3. on the last landmark tile computes argmin_j (g_j - 2 f_ij) (Eq.15).
+  3. on the last landmark tile emits f and computes
+     argmin_j (g_j - 2 f_ij) (Eq.15).
 
 K never touches HBM: per-row traffic drops from O(|L|) Gram elements to
 O(d + C), raising arithmetic intensity from ~1 FLOP/byte to ~|L| FLOPs/byte
 (see EXPERIMENTS.md §Perf for the measured roofline shift).
+
+The f panel [rows, Cp] IS written back (O(C) per row — negligible next to
+the O(|L|) Gram block it replaces): the outer loop needs the cluster-average
+similarities at the fixpoint for the Eq.7 medoid argmin, and the GramEngine
+``fused`` mode (repro.core.engine) uses the same kernel as a Gram-free
+matvec K @ H when only the stats — not the assignment — are wanted.
 
 Grid: (rows/bm, L/bl, D/bd); landmark and feature dims are reductions.
 Scratch: fp32 Gram-tile accumulator [bm, bl] + fp32 f accumulator [bm, Cp].
@@ -31,7 +38,7 @@ from .kernel_matrix import _epilogue
 
 
 def _kernel(x_ref, l_ref, xsq_ref, lsq_ref, h_ref, g_ref,
-            labels_ref, mind_ref, acc_k_ref, acc_f_ref, *,
+            labels_ref, mind_ref, f_ref, acc_k_ref, acc_f_ref, *,
             kind: str, gamma: float, coef0: float, degree: int,
             n_lm_steps: int, n_feat_steps: int):
     li = pl.program_id(1)
@@ -61,7 +68,11 @@ def _kernel(x_ref, l_ref, xsq_ref, lsq_ref, h_ref, g_ref,
 
         @pl.when(li == n_lm_steps - 1)
         def _argmin():
+            f_ref[...] = acc_f_ref[...]
             dist = g_ref[...].astype(jnp.float32) - 2.0 * acc_f_ref[...]
+            # tie-break contract: jnp.argmin returns the FIRST (lowest)
+            # index of the minimum — identical to the jnp oracle path, so
+            # engine choice never changes labels (repro.core.engine).
             labels_ref[...] = jnp.argmin(dist, axis=1, keepdims=True
                                          ).astype(jnp.int32)
             mind_ref[...] = jnp.min(dist, axis=1, keepdims=True)
@@ -77,7 +88,7 @@ def assign_fused_pallas(x, landmarks, xsq, lsq, h_norm, g, *,
     x: [n, D] rows, landmarks: [L, D], xsq/lsq: [n, 1]/[L, 1] squared norms,
     h_norm: [L, Cp] one-hot/counts (zero rows for padded landmarks),
     g: [1, Cp] compactness (+BIG on padded clusters).
-    Returns (labels [n, 1] int32, mind [n, 1] f32).
+    Returns (labels [n, 1] int32, mind [n, 1] f32, f [n, Cp] f32).
     """
     n, d = x.shape
     lm = landmarks.shape[0]
@@ -100,10 +111,12 @@ def assign_fused_pallas(x, landmarks, xsq, lsq, h_norm, g, *,
         out_specs=[
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, cp), lambda i, j, k: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, 1), jnp.int32),
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, cp), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bm, bl), jnp.float32),

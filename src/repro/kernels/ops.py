@@ -85,12 +85,14 @@ def kernel_matrix(x: Array, y: Array, *, kind: str = "rbf", gamma: float = 1.0,
 def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
                  g: Array, *, n_clusters: int, kind: str = "rbf",
                  gamma: float = 1.0, coef0: float = 1.0, degree: int = 3,
-                 interpret: bool = True) -> tuple[Array, Array]:
+                 interpret: bool = True) -> tuple[Array, Array, Array]:
     """Fused Eq.15/17: labels, mind = argmin/min_j (g_j - 2 (K @ H)_ij).
 
     Builds the normalized one-hot H from landmark labels + counts, pads the
     cluster dim to a 128 lane multiple with +BIG compactness so padded
-    clusters are never selected, then calls the fused kernel.
+    clusters are never selected, then calls the fused kernel. Also returns
+    the normalized f panel [n, C] (Eq.17) so the Eq.7 medoid argmin can run
+    off the fused path without ever materializing K.
     """
     m, d = x.shape
     lm = landmarks.shape[0]
@@ -104,12 +106,41 @@ def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
     gp = jnp.full((1, cp), 1e30, jnp.float32).at[0, :n_clusters].set(
         jnp.where(counts > 0, g, 1e30))
 
-    labels, mind = assign_fused_pallas(
+    labels, mind, f = assign_fused_pallas(
         _pad2(x, mp, dp), _pad2(landmarks, lp, dp),
         _sqnorms(x, mp), _sqnorms(landmarks, lp),
         h, gp, kind=kind, gamma=gamma, coef0=coef0, degree=degree,
         bm=bm, bl=bl, bd=bd, interpret=interpret)
-    return labels[:m, 0], mind[:m, 0]
+    return labels[:m, 0], mind[:m, 0], f[:m, :n_clusters]
+
+
+@partial(jax.jit, static_argnames=("kind", "gamma", "coef0", "degree",
+                                   "interpret"))
+def gram_matvec(x: Array, landmarks: Array, h: Array, *, kind: str = "rbf",
+                gamma: float = 1.0, coef0: float = 1.0, degree: int = 3,
+                interpret: bool = True) -> Array:
+    """K(x, landmarks) @ h -> [n, C] fp32 without materializing K in HBM.
+
+    The Gram-free contraction behind the GramEngine ``fused`` mode
+    (repro.core.engine): each Gram tile is rebuilt in VMEM and immediately
+    consumed against ``h`` (any [L, C] panel — typically a one-hot of the
+    landmark labels), so only the O(n*C) result ever touches HBM. Reuses the
+    fused assignment kernel with a dummy compactness row; the argmin outputs
+    are dead code the scheduler overlaps with the DMA of f.
+    """
+    m, d = x.shape
+    lm, c = landmarks.shape[0], h.shape[1]
+    cp = _round_up(max(c, 128), 128)
+    bm, bl, bd = _pick_blocks(m, lm, d, cp)
+    mp, lp, dp = _round_up(m, bm), _round_up(lm, bl), _round_up(d, bd)
+    _, _, f = assign_fused_pallas(
+        _pad2(x, mp, dp), _pad2(landmarks, lp, dp),
+        _sqnorms(x, mp), _sqnorms(landmarks, lp),
+        _pad2(h.astype(jnp.float32), lp, cp),
+        jnp.zeros((1, cp), jnp.float32),
+        kind=kind, gamma=gamma, coef0=coef0, degree=degree,
+        bm=bm, bl=bl, bd=bd, interpret=interpret)
+    return f[:m, :c]
 
 
 def embed_panels(fmap, centroids: Array, counts: Array | None = None):

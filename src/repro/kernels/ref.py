@@ -40,7 +40,7 @@ def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
 
     x: [n, d] rows; landmarks: [L, d]; h_norm: [L, C] one-hot(labels)/counts;
     g: [C] cluster compactness (+BIG on empty/padded clusters).
-    Returns (labels [n] int32, mind [n] f32) where
+    Returns (labels [n] int32, mind [n] f32, f [n, C] f32) where
       f = K(x, landmarks) @ h_norm         (Eq.17)
       labels = argmin_j g_j - 2 f_ij       (Eq.15)
     """
@@ -48,7 +48,8 @@ def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
                           coef0=coef0, degree=degree)
     f = k @ h_norm.astype(jnp.float32)
     dist = g[None, :].astype(jnp.float32) - 2.0 * f
-    return jnp.argmin(dist, axis=1).astype(jnp.int32), jnp.min(dist, axis=1)
+    return (jnp.argmin(dist, axis=1).astype(jnp.int32),
+            jnp.min(dist, axis=1), f)
 
 
 def embed_assign_ref(x: Array, w: Array, v: Array, csq: Array, *,

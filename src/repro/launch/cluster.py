@@ -45,8 +45,10 @@ def main(argv=None):
                     help="override the planned number of mini-batches")
     ap.add_argument("--sampling", default="stride",
                     choices=["stride", "block"])
-    ap.add_argument("--mode", default="materialize",
-                    choices=["materialize", "fused"])
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "materialize", "fused", "tiled"],
+                    help="Gram residency of the exact inner loop "
+                         "(repro.core.engine); auto = the planner's pick")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -67,14 +69,16 @@ def main(argv=None):
     gamma = gamma_from_dmax(jax.numpy.asarray(x[:4096]))
     print(f"[cluster] N={args.n} d={args.d} C={args.clusters} "
           f"mesh={dict(mesh.shape)}")
+    mode = p.engine if args.mode == "auto" else args.mode
     print(f"[cluster] plan: B={b} s={s:.2f} ({p.note}); "
           f"footprint/node {p.footprint/1e6:.1f} MB "
-          f"(fused {p.fused_footprint/1e6:.1f} MB); gamma={gamma:.2e}")
+          f"(fused {p.fused_footprint/1e6:.1f} MB); "
+          f"engine={mode}; gamma={gamma:.2e}")
 
     cfg = MiniBatchConfig(n_clusters=args.clusters, n_batches=b, s=s,
                           kernel=KernelSpec("rbf", gamma=gamma),
                           sampling=args.sampling, seed=args.seed)
-    km = DistributedMiniBatchKMeans(mesh, cfg, mode=args.mode)
+    km = DistributedMiniBatchKMeans(mesh, cfg, mode=mode)
 
     cb = None
     if args.ckpt_dir:

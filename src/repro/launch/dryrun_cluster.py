@@ -86,8 +86,8 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
     t0 = time.time()
 
     from jax.sharding import PartitionSpec as P
-    from repro.distributed.inner import _one_hot_stats
-    from repro.core.kkmeans import BIG
+    from repro.core.engine import (GramEngine, assign_from_stats,
+                                   engine_stats)
 
     d_size = math.prod(mesh.shape[a] for a in row_axes)
     m_size = mesh.shape[col_axis] if col_axis else 1
@@ -106,24 +106,37 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
     kspec = P(row_axes, col_axis)
     llspec = P(row_axes, col_axis)
 
+    # the mesh's psums, handed to the SHARED engine stats as reduce hooks
+    # (identical structure to distributed.inner._body_factory).
+    red_cols = ((lambda v: jax.lax.psum(v, col_axis))
+                if col_axis is not None else None)
+    g_axes = row_axes if col_axis is None else (*row_axes, col_axis)
+    red_g = lambda v: jax.lax.psum(v, g_axes)     # noqa: E731
+
+    def _sweep(op_xl, op_ll, lidx_cols, lidx_rows, u_full, eng):
+        f, g, counts = engine_stats(
+            eng, spec, op_xl, op_ll, jnp.take(u_full, lidx_cols),
+            jnp.take(u_full, lidx_rows), c,
+            reduce_counts=red_cols, reduce_f=red_cols, reduce_g=red_g)
+        labels, _ = assign_from_stats(f, g, counts)
+        return labels
+
     def sweep_mat(k_local, kll_local, lidx_cols, lidx_rows, u_local):
         u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
-        f, g, counts = _one_hot_stats(
-            k_local, kll_local, jnp.take(u_full, lidx_cols),
-            jnp.take(u_full, lidx_rows), c, col_axis, row_axes)
-        dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)
-        return jnp.argmin(dist, axis=1).astype(jnp.int32)
+        return _sweep(GramEngine.from_matrix(k_local),
+                      GramEngine.from_matrix(kll_local),
+                      lidx_cols, lidx_rows, u_full,
+                      GramEngine("materialize"))
 
     def sweep_fused(x_local, lm_cols, lm_rows, lidx_cols, lidx_rows,
                     u_local):
         u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
-        k_local = spec(x_local, lm_cols)          # recomputed, not stored
-        kll_local = spec(lm_rows, lm_cols)
-        f, g, counts = _one_hot_stats(
-            k_local, kll_local, jnp.take(u_full, lidx_cols),
-            jnp.take(u_full, lidx_rows), c, col_axis, row_axes)
-        dist = jnp.where(counts[None, :] > 0, g[None, :] - 2.0 * f, BIG)
-        return jnp.argmin(dist, axis=1).astype(jnp.int32)
+        # the portable recompute structure (Gram rebuilt inside the sweep,
+        # never stored) — the Pallas kernel replaces it on real TPUs.
+        eng = GramEngine("fused", pallas="never")
+        return _sweep(eng.prepare(spec, x_local, lm_cols),
+                      eng.prepare(spec, lm_rows, lm_cols),
+                      lidx_cols, lidx_rows, u_full, eng)
 
     def gram(x_local, lm_cols):
         return spec(x_local, lm_cols).astype(k_dtype)

@@ -6,7 +6,8 @@ import pytest
 
 from repro.core import (KernelSpec, MiniBatchConfig, clustering_accuracy,
                         fit_dataset, gamma_from_dmax, get_kernel,
-                        kkmeans_fit_full, medoid_indices, nmi)
+                        kkmeans_fit_full, kkmeans_fit_gram, medoid_indices,
+                        nmi)
 from repro.core.kkmeans import kkmeans_fit
 from repro.core.minibatch import predict
 
@@ -63,16 +64,20 @@ def test_inner_loop_cost_not_worse_than_init(blobs):
 
 
 def test_landmarks_s1_equals_full(blobs):
-    """s = 1 (landmarks == batch) must equal exact kernel k-means."""
+    """s = 1 (landmarks == batch) must equal exact kernel k-means — via the
+    precomputed-Gram entry AND the engine entry on raw features."""
     x, _ = blobs
     spec = KernelSpec("rbf", gamma=8.0)
     k, diag = _kernel_and_diag(x, spec)
     labels0 = jnp.zeros((len(x),), jnp.int32).at[: len(x) // 2].set(1)
     full = kkmeans_fit_full(k, diag, labels0, n_clusters=4)
     lidx = jnp.arange(len(x), dtype=jnp.int32)
-    lm = kkmeans_fit(k, lidx, diag, labels0, n_clusters=4)
+    lm = kkmeans_fit_gram(k, lidx, diag, labels0, n_clusters=4)
     assert bool(jnp.all(full.labels == lm.labels))
     np.testing.assert_allclose(float(full.cost), float(lm.cost), rtol=1e-6)
+    eng = kkmeans_fit(jnp.asarray(x), lidx, diag, labels0, spec=spec,
+                      n_clusters=4)
+    assert bool(jnp.all(full.labels == eng.labels))
 
 
 def test_medoid_is_brute_force_argmin(blobs):

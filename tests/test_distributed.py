@@ -32,10 +32,11 @@ def _run_subprocess(body: str) -> dict:
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("mode", ["materialize", "fused"])
+@pytest.mark.parametrize("mode", ["materialize", "fused", "tiled"])
 def test_distributed_matches_single_device(mode):
     """The 2-D sharded inner loop (rows x landmarks) must produce the same
-    labels and medoids as the single-device reference, both compute modes."""
+    labels and medoids as the single-device reference, all three GramEngine
+    modes."""
     res = _run_subprocess(f"""
         from repro.core import MiniBatchConfig, KernelSpec
         from repro.core.minibatch import fit_dataset, predict
@@ -69,7 +70,8 @@ def test_distributed_matches_single_device(mode):
 @pytest.mark.slow
 def test_distributed_inner_identical_to_host_inner():
     """Bitwise-level agreement (labels) between repro.core.kkmeans and the
-    shard_map inner loop from the SAME init on the SAME batch."""
+    shard_map inner loop from the SAME init on the SAME batch — the shared
+    GramEngine means this must hold under every engine mode."""
     res = _run_subprocess("""
         from repro.core import KernelSpec
         from repro.core.kkmeans import kkmeans_fit
@@ -84,23 +86,27 @@ def test_distributed_inner_identical_to_host_inner():
         l_idx = jnp.arange(256, dtype=jnp.int32)      # s = 1
         u0 = jnp.asarray(rng.integers(0, 5, 256), jnp.int32)
 
-        k_full = spec(x, x)
-        host = kkmeans_fit(k_full, l_idx, diag, u0, n_clusters=5)
+        host = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=5)
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        cfg = DistributedInnerConfig(n_clusters=5, kernel=spec,
-                                     row_axes=("data",), col_axis="model")
-        dist = distributed_kkmeans_fit(mesh, x, x, l_idx, diag, u0, cfg=cfg)
-
-        same = bool(jnp.all(host.labels == dist.labels))
-        g_err = float(jnp.max(jnp.abs(host.g - dist.g)))
-        cost_err = abs(float(host.cost) - float(dist.cost))
-        print(json.dumps({"same": same, "g_err": g_err,
-                          "cost_err": cost_err}))
+        out = {}
+        for mode in ("materialize", "fused", "tiled"):
+            cfg = DistributedInnerConfig(n_clusters=5, kernel=spec,
+                                         engine=mode,
+                                         row_axes=("data",),
+                                         col_axis="model")
+            dist = distributed_kkmeans_fit(mesh, x, x, l_idx, diag, u0,
+                                           cfg=cfg)
+            out[mode] = {
+                "same": bool(jnp.all(host.labels == dist.labels)),
+                "g_err": float(jnp.max(jnp.abs(host.g - dist.g))),
+                "cost_err": abs(float(host.cost) - float(dist.cost))}
+        print(json.dumps(out))
     """)
-    assert res["same"], "distributed labels diverged from host reference"
-    assert res["g_err"] < 1e-4
-    assert res["cost_err"] < 1e-2
+    for mode, r in res.items():
+        assert r["same"], f"{mode}: distributed labels diverged from host"
+        assert r["g_err"] < 1e-4, mode
+        assert r["cost_err"] < 1e-2, mode
 
 
 @pytest.mark.slow
@@ -119,7 +125,7 @@ def test_faithful_1d_distribution_mode():
         diag = spec.diag(x)
         l_idx = jnp.arange(128, dtype=jnp.int32)
         u0 = jnp.asarray(rng.integers(0, 3, 128), jnp.int32)
-        host = kkmeans_fit(spec(x, x), l_idx, diag, u0, n_clusters=3)
+        host = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=3)
 
         mesh = jax.make_mesh((8,), ("data",))
         cfg = DistributedInnerConfig(n_clusters=3, kernel=spec,

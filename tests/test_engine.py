@@ -1,0 +1,335 @@
+"""GramEngine (repro.core.engine): the three Gram-residency modes of the
+exact inner loop must be interchangeable — identical labels, matching
+stats, same tie-breaks — and the tiled mode must honor its residency
+contract (never materialize the full [n, L] block)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.kernels as kernels_mod
+from repro.core import (GramEngine, KernelSpec, MachineSpec,
+                        MiniBatchConfig, clustering_accuracy, fit_dataset,
+                        kkmeans_fit, kkmeans_fit_gram, plan, resolve_engine)
+from repro.core.engine import assign_from_stats
+from repro.core.minibatch import predict
+from repro.kernels import ops as kops
+
+from conftest import four_blobs
+
+
+def _problem(n=200, d=6, c=5, s=0.4, seed=0, gamma=0.3):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=gamma)
+    lm = int(n * s)
+    l_idx = jnp.asarray(np.sort(rng.choice(n, lm, replace=False)), jnp.int32)
+    u0 = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    return x, spec, spec.diag(x), l_idx, u0, c
+
+
+ENGINES = {
+    "materialize": GramEngine("materialize"),
+    "fused-jnp": GramEngine("fused", pallas="never"),
+    "fused-pallas": GramEngine("fused", pallas="always", interpret=True),
+    "tiled": GramEngine("tiled", tile_rows=64),
+}
+
+
+# ---------------------------------------------------------------------------
+# oracle suite: every mode == the precomputed-Gram oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+def test_engine_matches_gram_oracle(name):
+    """Labels identical to kkmeans_fit_gram on the precomputed block;
+    f/g/cost within fp tolerance."""
+    x, spec, diag, l_idx, u0, c = _problem()
+    k_xl = spec(x, jnp.take(x, l_idx, axis=0))
+    want = kkmeans_fit_gram(k_xl, l_idx, diag, u0, n_clusters=c)
+    got = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c,
+                      engine=ENGINES[name])
+    assert bool(jnp.all(got.labels == want.labels)), name
+    assert int(got.n_iter) == int(want.n_iter)
+    np.testing.assert_allclose(np.asarray(got.f), np.asarray(want.f),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.g), np.asarray(want.g),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(want.counts))
+    np.testing.assert_allclose(float(got.cost), float(want.cost), rtol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["linear", "polynomial"])
+def test_engine_modes_agree_on_non_rbf_kernels(kind):
+    x, _, _, l_idx, u0, c = _problem(n=160, d=5, s=0.5, seed=3)
+    spec = KernelSpec(kind, gamma=0.2, coef0=1.0, degree=2)
+    diag = spec.diag(x)
+    results = {n: kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c,
+                              engine=e) for n, e in ENGINES.items()}
+    base = results["materialize"]
+    for name, r in results.items():
+        assert bool(jnp.all(r.labels == base.labels)), name
+
+
+@pytest.mark.parametrize("name", sorted(ENGINES))
+def test_minibatch_fit_engine_parametrized(name):
+    """End-to-end fit_dataset under each engine: same predicted labels and
+    exactly-once cardinality accounting as the materialize baseline."""
+    x, y = four_blobs(n_per=150, seed=7)
+    base_cfg = MiniBatchConfig(n_clusters=4, n_batches=3, s=1.0,
+                               kernel=KernelSpec("rbf", gamma=8.0), seed=0)
+    res0 = fit_dataset(x, base_cfg)
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=3, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0,
+                          engine=ENGINES[name])
+    res = fit_dataset(x, cfg)
+    np.testing.assert_array_equal(np.asarray(res.state.medoids),
+                                  np.asarray(res0.state.medoids))
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.95
+    assert int(np.asarray(res.state.cardinalities).sum()) == len(x)
+
+
+# ---------------------------------------------------------------------------
+# residency contract: the tiled mode must never build the full block
+# ---------------------------------------------------------------------------
+
+
+def _arm_gram_trap(monkeypatch, max_elems: int):
+    """Booby-trap every rbf Gram evaluation: any block larger than
+    ``max_elems`` elements fails the test at trace time."""
+    orig = kernels_mod._REGISTRY["rbf"]
+
+    def guarded(x, y, *, gamma):
+        elems = x.shape[0] * y.shape[0]
+        assert elems <= max_elems, \
+            f"materialized a {x.shape[0]}x{y.shape[0]} Gram block " \
+            f"({elems} > {max_elems} elements)"
+        return orig(x, y, gamma=gamma)
+
+    monkeypatch.setitem(kernels_mod._REGISTRY, "rbf", guarded)
+
+
+def test_tiled_survives_block_exceeding_plan_budget(monkeypatch):
+    """Booby-trapped: a batch whose full [n, L] block exceeds a fake plan
+    budget must still fit under the planner-chosen tiled engine — and the
+    trap must actually fire if anything materializes the block."""
+    n, d, c, s = 384, 2, 4, 0.5
+    lm = int(n * s)                                   # 192
+    # fake machine: tiled fits, the resident block does not (b pinned at 1)
+    machine = MachineSpec(memory_bytes=150e3, n_processors=1)
+    p = plan(n, c, machine, d=d, b=1, tile_rows=64)
+    assert p.engine == "tiled"
+    assert p.engine_footprints["materialize"] > machine.memory_bytes
+    assert p.engine_footprints["tiled"] <= machine.memory_bytes
+
+    # the priced pick round-trips as a runnable engine (mode + the
+    # tile_rows the footprint was validated with)
+    eng = p.gram_engine()
+    assert eng == GramEngine("tiled", tile_rows=64)
+
+    # trap: one 64-row panel (64*192) passes, the full block (384*192) dies
+    _arm_gram_trap(monkeypatch, max_elems=20_000)
+    x, y = four_blobs(n_per=n // 4, seed=1)
+    cfg = MiniBatchConfig(n_clusters=c, n_batches=1, s=s,
+                          kernel=KernelSpec("rbf", gamma=8.0), seed=0,
+                          engine=eng)
+    res = fit_dataset(x, cfg)
+    labels = predict(jnp.asarray(x), res.state.medoids,
+                     res.state.medoid_diag, spec=cfg.kernel)
+    assert clustering_accuracy(y, np.asarray(labels)) > 0.9
+
+    # prove the trap is live: the materialize engine must trip it
+    cfg_mat = MiniBatchConfig(n_clusters=c, n_batches=1, s=s,
+                              kernel=KernelSpec("rbf", gamma=7.9), seed=0)
+    with pytest.raises(AssertionError, match="materialized a"):
+        fit_dataset(x, cfg_mat)
+
+
+# ---------------------------------------------------------------------------
+# regression: the fused mode must actually invoke the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def test_fused_mode_invokes_pallas_kernel(monkeypatch):
+    """The old distributed 'fused' mode silently recomputed with plain jnp
+    and never called the Pallas kernel. The engine must dispatch to the
+    kernel wrappers when fused+pallas is selected — and must NOT when the
+    portable fallback is selected."""
+    calls = {"assign": 0, "matvec": 0}
+    real_assign, real_matvec = kops.assign_fused, kops.gram_matvec
+
+    def spy_assign(*a, **k):
+        calls["assign"] += 1
+        return real_assign(*a, **k)
+
+    def spy_matvec(*a, **k):
+        calls["matvec"] += 1
+        return real_matvec(*a, **k)
+
+    monkeypatch.setattr(kops, "assign_fused", spy_assign)
+    monkeypatch.setattr(kops, "gram_matvec", spy_matvec)
+
+    x, spec, diag, l_idx, u0, c = _problem(n=224, d=5, c=3, s=0.5, seed=11)
+    want = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c,
+                       engine=GramEngine("materialize"))
+
+    got = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c,
+                      engine=GramEngine("fused", pallas="always",
+                                        interpret=True))
+    assert calls["assign"] >= 1, "fused one-shot Pallas pass never invoked"
+    assert calls["matvec"] >= 1, "fused Pallas matvec (g stats) never invoked"
+    assert bool(jnp.all(got.labels == want.labels))
+
+    calls["assign"] = calls["matvec"] = 0
+    kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c,
+                engine=GramEngine("fused", pallas="never"))
+    assert calls["assign"] == 0 and calls["matvec"] == 0
+
+
+def test_distributed_inner_fused_invokes_pallas(monkeypatch):
+    """Same regression at the shard_map layer (1-device mesh, interpret
+    mode on CPU): distributed/inner's fused engine must reach the Pallas
+    matvec, not the jnp recompute."""
+    from repro.distributed.inner import (DistributedInnerConfig,
+                                         distributed_kkmeans_fit)
+
+    calls = {"matvec": 0}
+    real_matvec = kops.gram_matvec
+
+    def spy_matvec(*a, **k):
+        calls["matvec"] += 1
+        return real_matvec(*a, **k)
+
+    monkeypatch.setattr(kops, "gram_matvec", spy_matvec)
+
+    rng = np.random.default_rng(4)
+    n, c = 192, 4
+    x = jnp.asarray(rng.normal(size=(n, 6)).astype(np.float32))
+    spec = KernelSpec("rbf", gamma=0.25)
+    diag = spec.diag(x)
+    l_idx = jnp.arange(n, dtype=jnp.int32)
+    u0 = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    mesh = jax.make_mesh((1,), ("data",))
+
+    host = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=c)
+    cfg = DistributedInnerConfig(
+        n_clusters=c, kernel=spec, row_axes=("data",), col_axis=None,
+        engine=GramEngine("fused", pallas="always", interpret=True))
+    dist = distributed_kkmeans_fit(mesh, x, x, l_idx, diag, u0, cfg=cfg)
+    assert calls["matvec"] >= 1, "Pallas path shadowed by the jnp fallback"
+    assert bool(jnp.all(host.labels == dist.labels))
+
+
+# ---------------------------------------------------------------------------
+# deterministic tie-breaking: lowest cluster index wins, every path
+# ---------------------------------------------------------------------------
+
+
+def test_argmin_ties_resolve_to_lowest_cluster_index():
+    """Clusters 0 and 1 are built from IDENTICAL landmark point-sets, so
+    every row's f columns tie bitwise; with the compactness tied too, the
+    distance columns are exactly equal — and BOTH argmin implementations
+    (the shared jnp authority and the Pallas kernel) must pick cluster 0,
+    never 1. There are exactly two argmin implementations behind every
+    engine mode, so this pins 'lowest cluster index wins' for all of them.
+    """
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(8, 6)).astype(np.float32)
+    landmarks = jnp.asarray(np.concatenate([base, base]))     # [16, 6]
+    x = jnp.asarray(rng.normal(size=(40, 6)).astype(np.float32))
+    labels_l = jnp.asarray([0] * 8 + [1] * 8, jnp.int32)
+    c = 2
+    spec = KernelSpec("rbf", gamma=0.3)
+
+    h = jax.nn.one_hot(labels_l, c, dtype=jnp.float32)
+    counts = jnp.sum(h, axis=0)
+    k = spec(x, landmarks)
+    f = k @ (h / counts[None, :])
+    # the duplicated landmark set ties the f columns bitwise ...
+    np.testing.assert_array_equal(np.asarray(f[:, 0]), np.asarray(f[:, 1]))
+    # ... and we tie g explicitly (summing the duplicate halves of K_ll in
+    # different reduction orders can differ by an ulp, which would be a
+    # numeric difference, not a tie — this test is about the tie RULE).
+    k_ll = spec(landmarks, landmarks)
+    g_val = jnp.sum(h * (k_ll @ h), axis=0)[0] / (counts[0] * counts[0])
+    g = jnp.full((c,), g_val, jnp.float32)
+
+    # 1. the shared jnp argmin authority (materialize / tiled / fused-jnp)
+    lab, _ = assign_from_stats(f, g, counts)
+    np.testing.assert_array_equal(np.asarray(lab), 0)
+
+    # 2. the Pallas fused kernel (fused mode, interpret on CPU) — same f
+    #    bitwise, same tie rule
+    lab_p, _, f_p = kops.assign_fused(x, landmarks, labels_l, counts, g,
+                                      n_clusters=c, kind="rbf", gamma=0.3,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(f_p[:, 0]),
+                                  np.asarray(f_p[:, 1]))
+    np.testing.assert_array_equal(np.asarray(lab_p), 0)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f),
+                               rtol=1e-5, atol=1e-5)
+
+    # 3. the engine assign stage under every mode, fed the same tied stats
+    #    through a precomputed operator — label 0 everywhere
+    for name, eng in ENGINES.items():
+        op = GramEngine.from_matrix(k)
+        f_e = eng.matvec(spec, op, h / counts[None, :])
+        lab_e, _ = assign_from_stats(f_e, g, counts)
+        assert (np.asarray(lab_e) == 0).all(), name
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_engine_and_config_validation():
+    assert resolve_engine("tiled").mode == "tiled"
+    eng = GramEngine("fused", pallas="never")
+    assert resolve_engine(eng) is eng
+    with pytest.raises(ValueError, match="engine"):
+        resolve_engine("vmem")
+    with pytest.raises(ValueError, match="unknown engine mode"):
+        GramEngine("resident")
+    with pytest.raises(ValueError, match="engine"):
+        MiniBatchConfig(n_clusters=4, method="rff", engine="tiled")
+    # mode names thread through the config unchanged
+    cfg = MiniBatchConfig(n_clusters=4, engine="tiled")
+    assert resolve_engine(cfg.engine).mode == "tiled"
+
+
+def test_plan_prices_all_three_engine_modes():
+    machine = MachineSpec(memory_bytes=16e9, n_processors=256)
+    p = plan(10_000_000, 100, machine, d=784)
+    assert set(p.engine_footprints) == {"materialize", "fused", "tiled"}
+    assert p.engine in p.engine_footprints
+    # fused keeps only the f panel; tiled adds one panel; materialize the block
+    assert p.engine_footprints["fused"] < p.engine_footprints["tiled"]
+    assert p.engine_footprints["tiled"] < p.engine_footprints["materialize"]
+    # a generous budget keeps the paper's resident layout
+    big = plan(100_000, 10, MachineSpec(memory_bytes=1e12, n_processors=1),
+               d=8)
+    assert big.engine == "materialize"
+    # an impossible budget must say so, not pretend fused rescues it
+    tiny = plan(100_000, 8, MachineSpec(memory_bytes=10e3, n_processors=1),
+                d=16, b=1)
+    assert tiny.engine_footprints["fused"] > 10e3
+    assert "DOES NOT FIT" in tiny.note
+
+
+def test_frontier_ranks_exact_tiled_against_approximations():
+    machine = MachineSpec(memory_bytes=16e9, n_processors=64)
+    p = plan(2_000_000, 50, machine, d=256, selector="rls", sketchable=True,
+             density=0.01)
+    front = p.frontier()
+    names = [r["method"] for r in front]
+    assert "exact-tiled" in names
+    rec = front[names.index("exact-tiled")]
+    assert rec["selector"] == "rls"                 # exact pays ITS selector
+    assert 1 <= rec["m"] <= p.n / p.b               # |L| bounded by the batch
+    assert rec["bytes"] <= p.embed_footprint + p.selector_footprint + 1
+    assert 0.0 <= rec["predicted_accuracy"] <= 1.0

@@ -62,17 +62,41 @@ def test_assign_fused_matches_oracle(kind, shape, n_clusters):
     counts = jnp.bincount(labels_l, length=n_clusters).astype(jnp.float32)
     g = jnp.asarray(rng.random(n_clusters).astype(np.float32))
 
-    got_lab, got_min = ops.assign_fused(
+    got_lab, got_min, got_f = ops.assign_fused(
         x, landmarks, labels_l, counts, g, n_clusters=n_clusters, kind=kind,
         gamma=0.05, interpret=True)
 
     h = jax.nn.one_hot(labels_l, n_clusters) / jnp.maximum(counts, 1.0)[None]
     g_masked = jnp.where(counts > 0, g, 1e30)
-    want_lab, want_min = ref.assign_fused_ref(x, landmarks, h, g_masked,
-                                              kind=kind, gamma=0.05)
+    want_lab, want_min, want_f = ref.assign_fused_ref(x, landmarks, h,
+                                                      g_masked, kind=kind,
+                                                      gamma=0.05)
     assert bool(jnp.all(got_lab == want_lab))
     np.testing.assert_allclose(np.asarray(got_min), np.asarray(want_min),
                                rtol=1e-4, atol=1e-5)
+    # the f panel (Eq.17) feeds the Eq.7 medoid argmin — it must match too
+    assert got_f.shape == (m, n_clusters)
+    np.testing.assert_allclose(np.asarray(got_f), np.asarray(want_f),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["rbf", "linear"])
+@pytest.mark.parametrize("shape", [(64, 32, 16), (300, 130, 40)],
+                         ids=["small", "ragged"])
+def test_gram_matvec_matches_oracle(kind, shape):
+    """The Gram-free matvec (GramEngine fused mode): K @ h without K in
+    HBM must equal the materialized product for an arbitrary h panel."""
+    m, lm, d = shape
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    landmarks = jnp.asarray(rng.normal(size=(lm, d)).astype(np.float32))
+    h = jnp.asarray(rng.random((lm, 5)).astype(np.float32))
+    got = ops.gram_matvec(x, landmarks, h, kind=kind, gamma=0.05,
+                          interpret=True)
+    want = ref.kernel_matrix_ref(x, landmarks, kind=kind, gamma=0.05) @ h
+    assert got.shape == (m, 5) and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_assign_fused_empty_cluster_never_selected():
@@ -84,8 +108,8 @@ def test_assign_fused_empty_cluster_never_selected():
     n_clusters = 5                                                # 3, 4 empty
     counts = jnp.bincount(labels_l, length=n_clusters).astype(jnp.float32)
     g = jnp.zeros((n_clusters,), jnp.float32)
-    lab, _ = ops.assign_fused(x, landmarks, labels_l, counts, g,
-                              n_clusters=n_clusters, interpret=True)
+    lab, _, _ = ops.assign_fused(x, landmarks, labels_l, counts, g,
+                                 n_clusters=n_clusters, interpret=True)
     assert int(jnp.max(lab)) <= 2
 
 
