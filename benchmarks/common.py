@@ -55,16 +55,23 @@ def load_bench(name: str) -> dict | None:
 
 
 def record_bench(name: str, seconds: float, *, mode: str,
-                 params: dict | None = None) -> str:
+                 params: dict | None = None,
+                 obs: dict | None = None) -> str:
     """Append-point of the perf trajectory: one ``results/BENCH_<name>.json``
     per benchmark run — wall time, the workload knobs the benchmark reports
     (n/B/s/m/method, via its payload's ``bench`` dict), mode and commit —
-    so future revisions have a baseline to diff against."""
+    so future revisions have a baseline to diff against. ``obs`` is the
+    flight-recorder summary (``repro.obs.export.summarize`` — the payload's
+    ``obs`` dict when the benchmark ran with a recorder): folded into the
+    record so a perf regression comes with its per-batch evidence
+    attached."""
     bench_dir = os.environ.get("REPRO_BENCH", "results")
     os.makedirs(bench_dir, exist_ok=True)
     path = os.path.join(bench_dir, f"BENCH_{name}.json")
     rec = {"benchmark": name, "seconds": seconds, "mode": mode,
            "commit": git_commit(), "params": params or {}}
+    if obs:
+        rec["obs"] = obs
     with open(path, "w") as f:
         json.dump(rec, f, indent=1, default=float)
     return path

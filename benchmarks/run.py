@@ -53,22 +53,31 @@ def main(argv=None):
             # perf trajectory: diff against the recorded baseline, then
             # re-record one BENCH_<name>.json (wall time, workload knobs
             # from the payload's "bench" dict, commit) so the NEXT revision
-            # has this run to compare against.
-            if baseline and baseline.get("seconds"):
-                if baseline.get("mode", run_mode) == run_mode:
-                    pct = 100.0 * (seconds - baseline["seconds"]) \
-                        / baseline["seconds"]
-                    print(f"[{name}] baseline {baseline['seconds']:.1f}s "
-                          f"@ {baseline.get('commit', '?')} -> "
-                          f"{seconds:.1f}s ({pct:+.1f}%)")
-                    deltas.append((name, baseline["seconds"], seconds, pct))
-                else:
+            # has this run to compare against. A missing or incomparable
+            # baseline still gets a trajectory row — the first run of a
+            # fresh checkout (or a wiped results/) must not silently drop
+            # out of the summary table.
+            if baseline and baseline.get("seconds") \
+                    and baseline.get("mode", run_mode) == run_mode:
+                pct = 100.0 * (seconds - baseline["seconds"]) \
+                    / baseline["seconds"]
+                print(f"[{name}] baseline {baseline['seconds']:.1f}s "
+                      f"@ {baseline.get('commit', '?')} -> "
+                      f"{seconds:.1f}s ({pct:+.1f}%)")
+                deltas.append((name, baseline["seconds"], seconds, pct))
+            else:
+                if baseline:
                     print(f"[{name}] baseline is mode="
                           f"{baseline.get('mode')!r} — not comparable to "
-                          f"this {run_mode!r} run, skipping the delta")
+                          f"this {run_mode!r} run, recording fresh")
+                else:
+                    print(f"[{name}] no recorded baseline — recording "
+                          f"this run as the new one")
+                deltas.append((name, None, seconds, None))
             common.record_bench(
                 name, seconds, mode=run_mode,
-                params=(payload or {}).get("bench", {}))
+                params=(payload or {}).get("bench", {}),
+                obs=(payload or {}).get("obs"))
         except Exception as e:
             failures.append(name)
             print(f"[{name}] FAILED: {type(e).__name__}: {e}")
@@ -77,7 +86,8 @@ def main(argv=None):
         common.table(
             "Perf trajectory vs recorded baselines",
             ["benchmark", "baseline s", "now s", "delta"],
-            [[n, f"{b:.1f}", f"{s:.1f}", f"{p:+.1f}%"]
+            [[n, "(new)" if b is None else f"{b:.1f}", f"{s:.1f}",
+              "—" if p is None else f"{p:+.1f}%"]
              for n, b, s, p in deltas])
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")

@@ -51,10 +51,22 @@ from .common import Timer, nearest_centroid, save, table
 
 
 def run(fast: bool = True):
+    import os
+
+    from repro.obs import JsonlRecorder, export
+
     n = 12000 if fast else 188000
     n_test = 1000 if fast else 5844
     n_classes = 30 if fast else 50
     bs = [4, 16] if fast else [4, 16, 64]
+
+    # flight recorder: one JSONL for the whole benchmark — per-batch wall
+    # times, collective counts and HBM watermarks for every grid below.
+    obs_dir = os.environ.get("REPRO_OBS", "results/obs")
+    os.makedirs(obs_dir, exist_ok=True)
+    obs_path = os.path.join(obs_dir, "tab2_rcv1.jsonl")
+    rec = JsonlRecorder(obs_path, header=export.run_header(
+        benchmark="tab2_rcv1", fast=fast))
     x, y = make_rcv1_like(n + n_test, n_classes=n_classes, seed=0)
     x_tr, x_te, y_te = x[:n], x[n:], y[n:]
     gamma = gamma_from_dmax(jnp.asarray(x_tr[:4096]))
@@ -74,8 +86,9 @@ def run(fast: bool = True):
     for b in bs:
         cfg = MiniBatchConfig(n_clusters=c, n_batches=b, s=1.0,
                               kernel=spec, seed=0)
+        rec.event("grid", grid="exact", B=b)
         with Timer() as t:
-            res = fit_dataset(x_tr, cfg)
+            res = fit_dataset(x_tr, cfg, recorder=rec)
         labels = np.asarray(predict(jnp.asarray(x_te), res.state.medoids,
                                     res.state.medoid_diag, spec=spec))
         acc, nm = clustering_accuracy(y_te, labels), nmi(y_te, labels)
@@ -97,8 +110,10 @@ def run(fast: bool = True):
         cfg = MiniBatchConfig(n_clusters=c, n_batches=b,
                               kernel=KernelSpec("linear"), seed=0,
                               method="sketch", embed_dim=256)
+        rec.event("grid", grid="sparse_sketch", B=b)
         with Timer() as t:
-            res = fit(split_csr(xs_tr, b, strategy="stride"), cfg)
+            res = fit(split_csr(xs_tr, b, strategy="stride"), cfg,
+                      recorder=rec)
         labels = np.asarray(res.predict(xs_te))
         acc, nm = clustering_accuracy(ys_te, labels), nmi(ys_te, labels)
         rows.append([f"sketch d={vocab} B={b}", f"{acc*100:.2f}",
@@ -119,9 +134,10 @@ def run(fast: bool = True):
         bounds = np.concatenate([[0], cuts, [n]])
         chunks = (slice_rows(xs_tr, int(a), int(z))
                   for a, z in zip(bounds[:-1], bounds[1:]) if z > a)
-        km = DistributedEmbedKMeans(make_test_mesh(), cfg)
+        rec.event("grid", grid="streaming", B=b)
+        km = DistributedEmbedKMeans(make_test_mesh(), cfg, recorder=rec)
         src = BatchSource.from_stream(chunks, batch, stage=km.stage,
-                                      prefetch=2)
+                                      prefetch=2, recorder=rec)
         with src, Timer() as t:
             res = km.fit(src)
         labels = np.asarray(res.predict(xs_te))
@@ -192,6 +208,9 @@ def run(fast: bool = True):
     payload["bench"] = {"n": n, "B": bs, "s": 1.0, "m": 256,
                         "m_selector": m_sel, "vocab": vocab,
                         "method": "exact+sketch+nystrom"}
+    rec.close()
+    payload["obs"] = export.summarize(obs_path)
+    print(f"[tab2] obs: {payload['obs']['events']} events -> {obs_path}")
     save("tab2_rcv1", payload)
     return payload
 

@@ -148,31 +148,42 @@ def fit_embedded(
     seed: int = 0,
     state: Optional[EmbedState] = None,
     checkpoint_cb: Optional[Callable[[EmbedState, int], None]] = None,
+    recorder=None,
 ):
     """Embedded-space outer loop. Returns ``(EmbedState, [BatchStats])``.
 
     Mirrors ``repro.core.minibatch.fit``: host-side sequential batches,
     O(C*m) state across batches, checkpoint callback after every merge.
     Consumes ``batches``: a closable source (``repro.data.BatchSource``) is
-    closed on exit, success or failure.
+    closed on exit, success or failure. ``recorder`` (``repro.obs``) logs
+    per-batch wall time, cost series and the measured-vs-predicted HBM
+    watermark — all hooks host-side, outside the jitted steps.
     """
     from repro.data.loader import closing_source
     with closing_source(batches):
         return _fit_embedded_loop(batches, fmap, n_clusters=n_clusters,
                                   max_iters=max_iters, seed=seed,
-                                  state=state, checkpoint_cb=checkpoint_cb)
+                                  state=state, checkpoint_cb=checkpoint_cb,
+                                  recorder=recorder)
 
 
 def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
-                       checkpoint_cb):
-    from repro.core.minibatch import BatchStats  # cycle-free late import
+                       checkpoint_cb, recorder=None):
+    import time
 
+    from repro.core.minibatch import BatchStats  # cycle-free late import
+    from repro.obs import memory as obs_memory
+    from repro.obs import resolve as resolve_recorder
+
+    rec = resolve_recorder(recorder)
     key = jax.random.PRNGKey(seed)
     history: list = []
     start = int(state.batches_done) if state is not None else 0
 
     for i, xb in enumerate(batches, start=start):
-        z = fmap(xb if is_sparse(xb) else jnp.asarray(xb))
+        t_batch = time.perf_counter()
+        sparse = is_sparse(xb)
+        z = fmap(xb if sparse else jnp.asarray(xb))
         sub = jax.random.fold_in(key, i)
         if state is None:
             state, res = _first_batch_step(z, sub, n_clusters=n_clusters,
@@ -182,6 +193,8 @@ def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
             state, res, disp = _next_batch_step(z, state,
                                                 n_clusters=n_clusters,
                                                 max_iters=max_iters)
+        rec.series("inner/cost", res.cost, batch=i)     # deferred fetch
+        rec.series("inner/iters", res.n_iter, batch=i)
         history.append(BatchStats(
             inner_iters=int(res.n_iter),
             cost=float(res.cost),
@@ -190,6 +203,19 @@ def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
         ))
         if checkpoint_cb is not None:
             checkpoint_cb(state, i)
+        if rec.enabled:
+            n_rows, d = xb.shape
+            rec.series("batch/wall_seconds",
+                       time.perf_counter() - t_batch, batch=i, rows=n_rows)
+            rec.gauge("clusters/empty",
+                      int((history[-1].counts == 0).sum()), batch=i)
+            density = (xb.nnz / max(n_rows * d, 1)) if sparse else 1.0
+            obs_memory.watermark(
+                rec, batch=i, predicted_bytes=(
+                    obs_memory.predicted_embed_footprint(
+                        n_rows, n_clusters, fmap, sparse=sparse,
+                        density=density)))
+            rec.batch_boundary(i)
     if state is None:
         raise ValueError("empty batch iterable")
     return state, history

@@ -99,7 +99,10 @@ class GramEngine:
         """Set up one contraction side: materialize evaluates (and keeps)
         the block; fused/tiled only record the features."""
         if self.mode == "materialize":
-            return GramOp(x=x, y=y, k=spec(x, y).astype(jnp.float32))
+            # named profiler span (repro.obs.trace): the once-per-batch
+            # Gram panel build shows up labelled in a device trace.
+            with jax.named_scope("obs:gram_panel_build"):
+                return GramOp(x=x, y=y, k=spec(x, y).astype(jnp.float32))
         return GramOp(x=x, y=y, k=None)
 
     @staticmethod
@@ -175,9 +178,10 @@ def _tiled_matvec(spec, x: Array, y: Array, h: Array,
     panels = xp.reshape(n_pad // bm, bm, d)
 
     def one(xt):
-        kt = spec(xt, y).astype(jnp.float32)
-        return jax.lax.dot_general(kt, h, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.float32)
+        with jax.named_scope("obs:gram_tiled_panel"):
+            kt = spec(xt, y).astype(jnp.float32)
+            return jax.lax.dot_general(kt, h, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
 
     f = jax.lax.map(one, panels).reshape(n_pad, h.shape[1])
     return f[:n]
@@ -199,14 +203,16 @@ def engine_stats(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
     the landmark-column axis, g over rows+columns); None means single-host.
     Returns (f [rows, C], g [C], counts [C]), all fp32.
     """
-    h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
-    counts = _apply(reduce_counts, jnp.sum(h_cols, axis=0))
-    safe = jnp.maximum(counts, 1.0)
-    f = _apply(reduce_f, engine.matvec(spec, op_xl, h_cols)) / safe[None, :]
-    h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
-    t = engine.matvec(spec, op_ll, h_cols)                     # [Lrows, C]
-    g = _apply(reduce_g, jnp.sum(h_rows * t, axis=0)) / (safe * safe)
-    return f, g, counts
+    with jax.named_scope(f"obs:engine_stats[{engine.mode}]"):
+        h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
+        counts = _apply(reduce_counts, jnp.sum(h_cols, axis=0))
+        safe = jnp.maximum(counts, 1.0)
+        f = _apply(reduce_f,
+                   engine.matvec(spec, op_xl, h_cols)) / safe[None, :]
+        h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
+        t = engine.matvec(spec, op_ll, h_cols)                 # [Lrows, C]
+        g = _apply(reduce_g, jnp.sum(h_rows * t, axis=0)) / (safe * safe)
+        return f, g, counts
 
 
 def assign_from_stats(f: Array, g: Array,

@@ -89,6 +89,47 @@ JL projection with error ~ sqrt(C/m). At a fixed byte budget each
 candidate gets its maximal feasible m, the model predicts its accuracy,
 and the report is sorted by accuracy-per-byte — uniform sampling pays the
 same bytes per landmark but buys measurably less accuracy with them.
+
+Reading the flight recorder
+---------------------------
+
+Everything this module PREDICTS, the ``repro.obs`` flight recorder
+MEASURES. A fit run with a ``JsonlRecorder`` writes one JSON object per
+line; the lines that close the loop with the planner:
+
+* ``{"kind": "event", "name": "hbm_watermark", ...}`` — one per
+  mini-batch: ``measured_bytes``/``peak_bytes`` from the allocator
+  (``device.memory_stats()``; ``source: "host_rss"`` on backends without
+  allocator stats) NEXT TO ``predicted_bytes``, which is exactly
+  ``engine_footprint_bytes`` / ``embed_footprint_bytes`` /
+  ``sketch_footprint_bytes`` re-priced at that batch's (rows, mode, m).
+  A systematic measured/predicted gap is the calibration signal the
+  self-tuning planner needs.
+* ``{"kind": "series", "name": "batch/wall_seconds", ...}`` — per-batch
+  wall time (tags: batch, rows); ``inner/cost`` and ``inner/iters`` are
+  the per-batch convergence trajectory.
+* ``{"kind": "counter", "name": "collectives/psum", ...}`` — the
+  analytic communication bill (``distributed.inner/embed
+  .collectives_per_iteration`` x the batch's realized inner iterations):
+  the measurable counterpart of the paper's Q*(N/(B*P) + 2C) bound.
+* ``prefetch/queue_depth`` (gauge), ``prefetch/stage_seconds`` and
+  ``prefetch/starve_seconds`` (series) — ingestion-pipeline health: a
+  shallow queue with a starved consumer means the host, not the mesh, is
+  the bottleneck (the §3.3 trade, observed live).
+* ``straggler_detected`` / ``batch_timing`` events come from
+  ``repro.ft.straggler.StragglerMonitor``; ``elastic/resume`` and
+  ``elastic/checkpoint`` from the elastic runner.
+
+``repro.obs.export.summarize(path)`` folds a log into the per-series
+count/total/max/mean digest that ``benchmarks/common.record_bench`` stores
+in ``results/BENCH_*.json``. For device-side timelines, wrap a run with
+``repro.obs.start_profile(logdir)``/``stop_profile()`` and open the dump
+in TensorBoard — the hot paths are labelled with ``obs:*`` named scopes
+(``obs:gram_panel_build``, ``obs:engine_stats[mode]``, ``obs:psum_*``,
+``obs:embed_phi``, ``obs:stage``).
+
+These are RUNTIME metrics; clustering QUALITY metrics (accuracy, NMI,
+elbow, displacement) live in ``repro.core.metrics``.
 """
 from __future__ import annotations
 

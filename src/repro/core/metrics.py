@@ -1,6 +1,12 @@
 """Clustering quality measures (paper §4): accuracy via majority-vote mapping,
 normalized mutual information, the elbow criterion, and the sampling-quality
-displacement diagnostic."""
+displacement diagnostic.
+
+These score the MODEL (how good is the clustering). Runtime metrics — how
+the run behaved: per-batch wall time, collective counts, HBM watermarks,
+prefetch-queue health — are a different subsystem, the ``repro.obs``
+flight recorder; see the "Reading the flight recorder" section in
+``repro.core.memory``."""
 from __future__ import annotations
 
 import numpy as np

@@ -27,12 +27,16 @@ one mini-batch of work (DESIGN.md §6).
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Callable, Iterable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import memory as obs_memory
+from repro.obs import resolve as resolve_recorder
 
 from .engine import GramEngine, resolve_engine
 from .init import assign_to_medoids, kmeans_pp_indices
@@ -249,6 +253,7 @@ def fit(
     state: Optional[GlobalState] = None,
     checkpoint_cb: Optional[Callable[[GlobalState, int], None]] = None,
     fmap=None,
+    recorder=None,
 ) -> FitResult:
     """Run the outer loop over an iterable of mini-batches.
 
@@ -270,17 +275,26 @@ def fit(
     ingestion handle: list / live stream / prefetch); fit consumes it, so a
     closable source is closed on exit — success or failure — and the
     prefetch producer thread never leaks.
+
+    ``recorder`` (``repro.obs``) is the flight recorder: per-batch wall
+    time, cost/displacement series, empty-cluster counts and an HBM
+    watermark next to the planner-predicted footprint. All hooks are
+    host-side, outside the jitted steps — enabling metrics changes no
+    traced program (tests/test_obs.py asserts the compile counts match).
     """
     from repro.data.loader import closing_source
     with closing_source(batches):
         return _fit(batches, cfg, state=state, checkpoint_cb=checkpoint_cb,
-                    fmap=fmap)
+                    fmap=fmap, recorder=recorder)
 
 
-def _fit(batches, cfg, *, state, checkpoint_cb, fmap) -> FitResult:
+def _fit(batches, cfg, *, state, checkpoint_cb, fmap,
+         recorder=None) -> FitResult:
+    rec = resolve_recorder(recorder)
     if cfg.method != "exact":
         return _fit_embedded(batches, cfg, state=state,
-                             checkpoint_cb=checkpoint_cb, fmap=fmap)
+                             checkpoint_cb=checkpoint_cb, fmap=fmap,
+                             recorder=rec)
     from repro.data.sparse import is_sparse
 
     key = jax.random.PRNGKey(cfg.seed)
@@ -288,6 +302,7 @@ def _fit(batches, cfg, *, state, checkpoint_cb, fmap) -> FitResult:
     start = int(state.batches_done) if state is not None else 0
 
     for i, xb in enumerate(batches, start=start):
+        t_batch = time.perf_counter()
         if is_sparse(xb):
             raise ValueError(
                 "method='exact' evaluates kernel blocks on dense rows and "
@@ -310,6 +325,11 @@ def _fit(batches, cfg, *, state, checkpoint_cb, fmap) -> FitResult:
         else:
             state, res, disp = _next_batch_step(xb, sub, state, cfg=cfg,
                                                 n_landmarks=n_l)
+        # flight recorder: device scalars are parked unconverted (the
+        # batch_boundary drain fetches them in one batched device_get) —
+        # a mid-loop blocking sync would serialize the dispatch stream.
+        rec.series("inner/cost", res.cost, batch=i)
+        rec.series("inner/iters", res.n_iter, batch=i)
         history.append(BatchStats(
             inner_iters=int(res.n_iter),
             cost=float(res.cost),
@@ -318,13 +338,25 @@ def _fit(batches, cfg, *, state, checkpoint_cb, fmap) -> FitResult:
         ))
         if checkpoint_cb is not None:
             checkpoint_cb(state, i)
+        if rec.enabled:
+            h = history[-1]
+            rec.series("batch/wall_seconds",
+                       time.perf_counter() - t_batch, batch=i, rows=n)
+            rec.gauge("clusters/empty", int((h.counts == 0).sum()), batch=i)
+            rec.gauge("medoids/mean_displacement",
+                      float(np.mean(h.displacement)), batch=i)
+            obs_memory.watermark(
+                rec, batch=i, engine=resolve_engine(cfg.engine).mode,
+                predicted_bytes=obs_memory.predicted_batch_footprint(
+                    cfg, n, int(xb.shape[1])))
+            rec.batch_boundary(i)
     if state is None:
         raise ValueError("empty batch iterable")
     return FitResult(state, history, spec=cfg.kernel)
 
 
 def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
-                  checkpoint_cb=None, fmap=None) -> FitResult:
+                  checkpoint_cb=None, fmap=None, recorder=None) -> FitResult:
     """Embedded-space dispatch target of ``fit`` (cfg.method != 'exact')."""
     import itertools
 
@@ -350,7 +382,8 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
         it = itertools.chain([first], it)
     est, history = approx.fit_embedded(
         it, fmap, n_clusters=cfg.n_clusters, max_iters=cfg.max_inner_iters,
-        seed=cfg.seed, state=state, checkpoint_cb=checkpoint_cb)
+        seed=cfg.seed, state=state, checkpoint_cb=checkpoint_cb,
+        recorder=recorder)
     return FitResult(est, history, fmap=fmap, spec=cfg.kernel)
 
 

@@ -63,18 +63,27 @@ class PrefetchLoader:
     ``jax.device_put``s them (any other pytree — e.g. a ``CSRBatch`` — is
     device_put leaf-wise). Pass a mesh-aware hook (e.g.
     ``DistributedEmbedKMeans.stage``) to land batches pre-sharded.
+
+    ``recorder`` (``repro.obs``) watches pipeline health from both sides:
+    the producer thread times each stage call (``prefetch/stage_seconds``)
+    and gauges the queue depth after every put, the consumer records how
+    long it sat starved waiting for an item (``prefetch/starve_seconds``).
+    A persistently shallow queue + starved consumer means ingestion is the
+    bottleneck, not the mesh.
     """
 
     _SENTINEL = object()
 
     def __init__(self, batches: Iterable, *, depth: int = 2,
                  device: Optional[jax.Device] = None, dtype=np.float32,
-                 stage: Optional[Callable] = None):
+                 stage: Optional[Callable] = None, recorder=None):
+        from repro.obs import resolve
         self._src = iter(batches)
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._device = device
         self._dtype = dtype
         self._stage = stage if stage is not None else self._default_stage
+        self._rec = resolve(recorder)
         self._err: Optional[BaseException] = None
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._produce, daemon=True)
@@ -108,19 +117,34 @@ class PrefetchLoader:
         return False
 
     def _produce(self) -> None:
+        from repro.obs import trace as obs_trace
+        rec = self._rec
         try:
-            for batch in self._src:
+            for k, batch in enumerate(self._src):
                 if self._stop.is_set():
                     return
-                if not self._put(self._stage(batch)):
+                t0 = time.perf_counter()
+                with obs_trace.annotate("obs:stage"):
+                    staged = self._stage(batch)
+                if rec.enabled:
+                    rec.series("prefetch/stage_seconds",
+                               time.perf_counter() - t0, index=k)
+                if not self._put(staged):
                     return
+                if rec.enabled:
+                    rec.gauge("prefetch/queue_depth", self._q.qsize(),
+                              index=k)
         except BaseException as e:  # surfaced on the consumer side
             self._err = e
         finally:
             self._put(self._SENTINEL)
 
     def __iter__(self) -> Iterator:
+        rec = self._rec
+        t_wait = None   # set when the consumer starts waiting for an item
         while True:
+            if rec.enabled and t_wait is None:
+                t_wait = time.perf_counter()
             try:
                 item = self._q.get(timeout=0.05)
             except queue.Empty:
@@ -135,6 +159,10 @@ class PrefetchLoader:
                 if self._err is not None:
                     raise self._err
                 return
+            if rec.enabled:
+                rec.series("prefetch/starve_seconds",
+                           time.perf_counter() - t_wait)
+                t_wait = None
             yield item
 
     def close(self, timeout: float = 10.0) -> None:
@@ -178,11 +206,13 @@ class BatchSource:
     """
 
     def __init__(self, batches: Iterable, *, stage: Optional[Callable] = None,
-                 prefetch: int = 0, skip: int = 0):
+                 prefetch: int = 0, skip: int = 0, recorder=None):
+        from repro.obs import resolve
         self._batches = batches
         self._stage = stage
         self._prefetch = prefetch
         self._skip = skip
+        self._rec = resolve(recorder)
         self._loader: Optional[PrefetchLoader] = None
 
     @classmethod
@@ -219,11 +249,20 @@ class BatchSource:
         if self._prefetch > 0:
             self.close()   # re-iteration must not orphan a live producer
             self._loader = PrefetchLoader(it, depth=self._prefetch,
-                                          stage=self._stage)
+                                          stage=self._stage,
+                                          recorder=self._rec)
             yield from self._loader
         elif self._stage is not None:
-            for b in it:
-                yield self._stage(b)
+            for k, b in enumerate(it):
+                if self._rec.enabled:
+                    t0 = time.perf_counter()
+                    staged = self._stage(b)
+                    self._rec.series("prefetch/stage_seconds",
+                                     time.perf_counter() - t0, index=k,
+                                     sync=True)
+                    yield staged
+                else:
+                    yield self._stage(b)
         else:
             yield from it
 

@@ -50,6 +50,9 @@ from repro.core.minibatch import BatchStats, FitResult, MiniBatchConfig
 from repro.data.loader import BatchSource
 from repro.data.sparse import (CSRBatch, concat_csr, is_sparse, slice_rows,
                                take_rows)
+from repro.obs import memory as obs_memory
+from repro.obs import resolve as resolve_recorder
+from repro.obs import trace as obs_trace
 
 from .compat import shard_map
 from .mesh import axis_size, ghost_row_ids, row_axes_of
@@ -94,14 +97,15 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
     """Per-shard Lloyd body: local assign, one psum per iteration."""
 
     def means(labels):
-        h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
-        h = h * wgt_local[:, None]                       # padded rows -> 0
-        counts = jax.lax.psum(jnp.sum(h, axis=0), row_axes)
-        sums = jax.lax.psum(
-            jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32),
-            row_axes)                                    # [C, m]
-        return sums / jnp.maximum(counts, 1.0)[:, None], counts
+        with jax.named_scope("obs:psum_means"):
+            h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
+            h = h * wgt_local[:, None]                   # padded rows -> 0
+            counts = jax.lax.psum(jnp.sum(h, axis=0), row_axes)
+            sums = jax.lax.psum(
+                jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32),
+                row_axes)                                # [C, m]
+            return sums / jnp.maximum(counts, 1.0)[:, None], counts
 
     def assign(cents, counts):
         labels, mind = assign_embedded(z_local, cents, counts)
@@ -134,6 +138,17 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
     return labels, cents, counts, t, cost
 
 
+def collectives_per_iteration(n_clusters: int, m: int) -> dict:
+    """Analytic per-Lloyd-iteration collective bill of ``_shard_lloyd``
+    (the jit-safe count — see ``distributed.inner.collectives_per_iteration``
+    for why it is computed instead of instrumented): counts + sums +
+    convergence flag + cost = 4 psums, payload C*(m+1) + 2 floats. The
+    fixpoint ``means`` after the loop adds 2 more (counts + sums)."""
+    payload = 4 * (n_clusters * (m + 1) + 2)
+    return {"psum": 4, "psum_bytes": payload,
+            "final_psum": 2, "final_psum_bytes": 4 * n_clusters * (m + 1)}
+
+
 class DistributedEmbedKMeans:
     """Mesh-resident embedded-space mini-batch k-means.
 
@@ -141,7 +156,8 @@ class DistributedEmbedKMeans:
     is sampled from the first batch per ``cfg.method`` / ``cfg.embed_dim``.
     """
 
-    def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *, fmap=None):
+    def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *, fmap=None,
+                 recorder=None):
         if cfg.method == "exact":
             raise ValueError("DistributedEmbedKMeans needs an embedded "
                              "cfg.method ('rff', 'nystrom', 'sketch', "
@@ -150,6 +166,10 @@ class DistributedEmbedKMeans:
         self.mesh = mesh
         self.cfg = cfg
         self.fmap = fmap
+        # repro.obs flight recorder; hooks are host-side only. ``stage``
+        # also records through it FROM THE PREFETCH PRODUCER THREAD, which
+        # is why JsonlRecorder takes a lock.
+        self.rec = resolve_recorder(recorder)
         self.row_axes = row_axes_of(mesh)
         self.d_size = axis_size(mesh, self.row_axes)
         self._row_sharding = NamedSharding(mesh, P(self.row_axes, None))
@@ -256,9 +276,13 @@ class DistributedEmbedKMeans:
         in ``fit``); the H2D copies land pre-sharded on the mesh."""
         if isinstance(xb, StagedBatch):
             return xb
-        if is_sparse(xb):
-            return self._stage_csr(xb)
-        return self._stage_dense(np.asarray(xb, np.float32))
+        # timer + host-timeline annotation: staging usually runs on the
+        # prefetch producer thread, so the trace shows whether H2D staging
+        # overlaps the consumer's compute (the whole point of §3.3).
+        with self.rec.timer("stage/seconds"), obs_trace.annotate("obs:stage"):
+            if is_sparse(xb):
+                return self._stage_csr(xb)
+            return self._stage_dense(np.asarray(xb, np.float32))
 
     def _wgt(self, n: int, pad: int) -> np.ndarray:
         wgt = np.ones((n + pad,), np.float32)
@@ -333,7 +357,7 @@ class DistributedEmbedKMeans:
         """Wrap raw batches in a ``BatchSource`` whose background producer
         stages each one onto this mesh (pre-sharded H2D overlap, §3.3)."""
         return BatchSource(batches, stage=self.stage, prefetch=depth,
-                           skip=skip)
+                           skip=skip, recorder=self.rec)
 
     # -- per-device embedding ----------------------------------------------
 
@@ -367,10 +391,11 @@ class DistributedEmbedKMeans:
         on their own (data, indices, indptr) slices — the embedding is the
         only dense array ever built from a sparse batch, and it is [rows, m]
         per device, never [n, d]."""
-        if st.sparse:
-            fn = self._embed_fn(("csr", st.rows, st.d))
-            return fn(self.fmap, st.data, st.indices, st.indptr)
-        return self._embed_fn(("dense",))(self.fmap, st.x)
+        with obs_trace.annotate("obs:embed_phi"):
+            if st.sparse:
+                fn = self._embed_fn(("csr", st.rows, st.d))
+                return fn(self.fmap, st.data, st.indices, st.indptr)
+            return self._embed_fn(("dense",))(self.fmap, st.x)
 
     def _batch_step(self, x: Array, wgt: Array, centroids0: Array,
                     mask0: Array):
@@ -390,7 +415,10 @@ class DistributedEmbedKMeans:
                              checkpoint_cb=checkpoint_cb)
 
     def _fit(self, batches: Iterable, *, state, checkpoint_cb) -> FitResult:
+        import time
+
         cfg = self.cfg
+        rec = self.rec
         key = jax.random.PRNGKey(cfg.seed)
         history: list[BatchStats] = []
         start = int(state.batches_done) if state is not None else 0
@@ -398,6 +426,7 @@ class DistributedEmbedKMeans:
             raise ValueError("resuming requires the original fmap")
 
         for i, xb in enumerate(batches, start=start):
+            t_batch = time.perf_counter()
             self._ensure_fmap(xb)
             st = self.stage(xb)
             wgt = st.wgt
@@ -447,6 +476,35 @@ class DistributedEmbedKMeans:
                 displacement=np.asarray(disp), counts=np.asarray(counts)))
             if checkpoint_cb is not None:
                 checkpoint_cb(state, i)
+            if rec.enabled:
+                n_iter = history[-1].inner_iters
+                m = getattr(self.fmap, "dim", 0)
+                bill = collectives_per_iteration(cfg.n_clusters, m)
+                rec.counter("collectives/psum",
+                            bill["psum"] * n_iter + bill["final_psum"],
+                            batch=i)
+                rec.counter("collectives/psum_bytes",
+                            bill["psum_bytes"] * n_iter
+                            + bill["final_psum_bytes"], batch=i)
+                rec.series("batch/wall_seconds",
+                           time.perf_counter() - t_batch, batch=i,
+                           rows=st.n)
+                rec.series("inner/cost", history[-1].cost, batch=i)
+                rec.series("inner/iters", n_iter, batch=i)
+                density = 1.0
+                if st.sparse:
+                    # indptr is shard-major [P*(rows+1)]; each shard's last
+                    # entry is its stored nnz.
+                    ptr = np.asarray(st.indptr).reshape(self.d_size,
+                                                        st.rows + 1)
+                    density = float(ptr[:, -1].sum()) / max(st.n * st.d, 1)
+                obs_memory.watermark(
+                    rec, batch=i, predicted_bytes=(
+                        obs_memory.predicted_embed_footprint(
+                            st.n, cfg.n_clusters, self.fmap,
+                            sparse=st.sparse, density=density,
+                            n_devices=self.d_size)))
+                rec.batch_boundary(i)
         if state is None:
             raise ValueError("empty batch iterable")
         return FitResult(state, history, fmap=self.fmap, spec=cfg.kernel)

@@ -99,16 +99,24 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
     op_xl = engine.prepare(spec, x_local, lm_cols)        # rows_p x L/M
     op_ll = engine.prepare(spec, lm_rows, lm_cols)        # L/D x L/M
 
-    # the mesh's collectives, handed to the SHARED stats code as hooks:
-    # counts/f reduce over the landmark-column axis, g over rows + columns.
-    red_cols = ((lambda v: jax.lax.psum(v, col_axis))
-                if col_axis is not None else None)
+    # the mesh's collectives, handed to the SHARED stats code as hooks —
+    # each wrapped in a named profiler span (repro.obs.trace) so a device
+    # trace attributes reduce time to the specific collective.
+    def red_cols_fn(v):
+        with jax.named_scope("obs:psum_cols"):
+            return jax.lax.psum(v, col_axis)
+
+    red_cols = red_cols_fn if col_axis is not None else None
     g_axes = row_axes if col_axis is None else (*row_axes, col_axis)
-    red_g = lambda v: jax.lax.psum(v, g_axes)             # noqa: E731
+
+    def red_g(v):
+        with jax.named_scope("obs:psum_g"):
+            return jax.lax.psum(v, g_axes)
 
     def iterate(u_local):
         # paper line 10: allgather U (tiled -> [n]) over the row axes.
-        u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
+        with jax.named_scope("obs:allgather_u"):
+            u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
         f, g, counts = engine_stats(
             engine, spec, op_xl, op_ll,
             jnp.take(u_full, l_idx_cols), jnp.take(u_full, l_idx_rows),
@@ -133,6 +141,26 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
         return jnp.logical_and(changed, t < cfg.max_iters)
 
     return body, cond, iterate
+
+
+def collectives_per_iteration(cfg: DistributedInnerConfig) -> dict:
+    """Analytic per-iteration collective bill of the inner while_loop body
+    — the jit-safe way to count them: the traced program is static, so the
+    flight recorder multiplies these constants by the returned ``n_iter``
+    instead of instrumenting inside the loop (which would change the
+    lowered program). Returns ``{"allgather": ..., "psum": ...,
+    "psum_bytes": ...}`` per Lloyd iteration (psum_bytes: the g/counts/f
+    reduce payloads, 4-byte floats, per device).
+    """
+    c = cfg.n_clusters
+    psum = 2                                 # cost + convergence flag
+    psum_bytes = 4 * (1 + 1)
+    psum += 1                                # g over rows (+ columns)
+    psum_bytes += 4 * c
+    if cfg.col_axis is not None:
+        psum += 2                            # counts + f over the model axis
+        psum_bytes += 4 * 2 * c              # counts [C] + f rows (>= C)
+    return {"allgather": 1, "psum": psum, "psum_bytes": psum_bytes}
 
 
 def _inner_shard_fn(x_local, lm_cols, lm_rows, diag_local, l_idx_cols,

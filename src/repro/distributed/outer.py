@@ -25,6 +25,7 @@ cardinalities and Eq.12 alphas exactly.
 from __future__ import annotations
 
 import math
+import time
 from typing import Iterable, NamedTuple, Optional
 
 import jax
@@ -38,9 +39,12 @@ from repro.core.kkmeans import BIG
 from repro.core.landmarks import (choose_landmarks, num_landmarks,
                                   select_landmark_indices)
 from repro.core.minibatch import BatchStats, FitResult, GlobalState, MiniBatchConfig
+from repro.obs import memory as obs_memory
+from repro.obs import resolve as resolve_recorder
 
 from .compat import shard_map
-from .inner import DistributedInnerConfig, distributed_kkmeans_fit
+from .inner import (DistributedInnerConfig, collectives_per_iteration,
+                    distributed_kkmeans_fit)
 from .mesh import ghost_row_ids
 
 Array = jax.Array
@@ -71,13 +75,18 @@ class DistributedMiniBatchKMeans:
     """Mesh-resident mini-batch kernel k-means (the production entry point)."""
 
     def __init__(self, mesh: Mesh, cfg: MiniBatchConfig, *,
-                 mode: object = None):
+                 mode: object = None, recorder=None):
         """``mode`` names the GramEngine of the inner loop — "materialize" |
         "fused" | "tiled" or a ``repro.core.engine.GramEngine`` instance;
         default: whatever ``cfg.engine`` says (itself "materialize" unless
-        the planner picked otherwise)."""
+        the planner picked otherwise). ``recorder`` is a ``repro.obs``
+        flight recorder; all its hooks run host-side between the jitted
+        mesh programs (the collective bill inside the inner while_loop is
+        counted analytically — ``inner.collectives_per_iteration`` x the
+        returned n_iter — never by instrumenting the traced body)."""
         self.mesh = mesh
         self.cfg = cfg
+        self.rec = resolve_recorder(recorder)
         row_axes = tuple(n for n in mesh.axis_names if n != "model")
         col_axis = "model" if "model" in mesh.axis_names else None
         self.row_axes = row_axes
@@ -203,11 +212,17 @@ class DistributedMiniBatchKMeans:
             checkpoint_cb=None) -> FitResult:
         cfg = self.cfg
         spec = cfg.kernel
+        rec = self.rec
+        monitor = None
+        if rec.enabled:
+            from repro.ft.straggler import StragglerMonitor
+            monitor = StragglerMonitor(rec)
         key = jax.random.PRNGKey(cfg.seed)
         history: list[BatchStats] = []
         start = int(state.batches_done) if state is not None else 0
 
         for i, xb in enumerate(batches, start=start):
+            t_batch = time.perf_counter()
             xb = np.asarray(xb, np.float32)
             n = len(xb)
             idx = ghost_row_ids(n, self.d_size)
@@ -265,6 +280,29 @@ class DistributedMiniBatchKMeans:
                 displacement=np.asarray(disp), counts=np.asarray(res.counts)))
             if checkpoint_cb is not None:
                 checkpoint_cb(state, i)
+            if rec.enabled:
+                dt = time.perf_counter() - t_batch
+                n_iter = history[-1].inner_iters
+                bill = collectives_per_iteration(self.inner_cfg)
+                # n_iter loop sweeps + the fixpoint pass = n_iter + 1
+                rec.counter("collectives/psum",
+                            bill["psum"] * (n_iter + 1), batch=i)
+                rec.counter("collectives/allgather",
+                            bill["allgather"] * (n_iter + 1), batch=i)
+                rec.counter("collectives/psum_bytes",
+                            bill["psum_bytes"] * (n_iter + 1), batch=i)
+                rec.series("batch/wall_seconds", dt, batch=i, rows=n)
+                rec.series("inner/cost", history[-1].cost, batch=i)
+                rec.series("inner/iters", n_iter, batch=i)
+                obs_memory.watermark(
+                    rec, batch=i, engine=self.inner_cfg.engine.mode,
+                    predicted_bytes=obs_memory.predicted_batch_footprint(
+                        cfg, len(xb), xb.shape[1], n_devices=self.d_size))
+                # single controller: all devices advance in lock-step, so
+                # the timing unit is this process (a multi-host launch
+                # contributes one per host).
+                monitor.observe(i, {jax.process_index(): dt}, n_rows=len(xb))
+                rec.batch_boundary(i)
         if state is None:
             raise ValueError("empty batch iterable")
         return FitResult(state, history, spec=cfg.kernel)

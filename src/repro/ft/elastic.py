@@ -41,15 +41,20 @@ from .checkpoint import CheckpointManager
 
 class ElasticClusteringRunner:
     def __init__(self, cfg: MiniBatchConfig, ckpt: CheckpointManager, *,
-                 mode: object = None, prefetch: int = 0):
+                 mode: object = None, prefetch: int = 0, recorder=None):
         """``mode`` overrides the exact inner loop's GramEngine; default
         None defers to ``cfg.engine`` (the planner-threaded pick) — an
         elastic restart must not silently demote a tiled/fused plan back
-        to the resident-block layout."""
+        to the resident-block layout. ``recorder`` (``repro.obs``) is
+        threaded into the mesh runner and the checkpoint callback, so a
+        flight-recorder log shows every ``elastic/resume`` and
+        ``elastic/checkpoint`` next to the per-batch metrics."""
+        from repro.obs import resolve
         self.cfg = cfg
         self.ckpt = ckpt
         self.mode = mode
         self.prefetch = prefetch
+        self.rec = resolve(recorder)
 
     # -- checkpoint structure ------------------------------------------------
 
@@ -98,15 +103,22 @@ class ElasticClusteringRunner:
         state, fmap = self._restore()
         start = int(state.batches_done) if state is not None else 0
         cfg = self.cfg
+        rec = self.rec
+        rec.event("elastic/resume", start_batch=start,
+                  resumed=state is not None, method=cfg.method,
+                  mesh_shape={k: int(v) for k, v in mesh.shape.items()})
 
         if cfg.method == "exact":
-            runner = DistributedMiniBatchKMeans(mesh, cfg, mode=self.mode)
+            runner = DistributedMiniBatchKMeans(mesh, cfg, mode=self.mode,
+                                                recorder=rec)
 
             def cb(s, i: int):
                 self.ckpt.save(i, s, extra={"n_batches": cfg.n_batches,
                                             "s": cfg.s})
+                rec.event("elastic/checkpoint", batch=i)
         else:
-            runner = DistributedEmbedKMeans(mesh, cfg, fmap=fmap)
+            runner = DistributedEmbedKMeans(mesh, cfg, fmap=fmap,
+                                            recorder=rec)
 
             def cb(s, i: int):
                 from repro.approx.selectors import name_of
@@ -116,6 +128,7 @@ class ElasticClusteringRunner:
                                       "s": cfg.s, "method": cfg.method,
                                       "m": fm.dim, "d": fm.in_dim,
                                       "selector": name_of(cfg.selector)})
+                rec.event("elastic/checkpoint", batch=i)
 
         if isinstance(batches, BatchSource):
             src = batches

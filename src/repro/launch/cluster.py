@@ -51,6 +51,12 @@ def main(argv=None):
                          "(repro.core.engine); auto = the planner's pick")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="write a repro.obs flight-recorder JSONL here "
+                         "(per-batch wall time, collective counts, HBM "
+                         "watermarks vs the plan)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="dump a TensorBoard profiler trace of the fit")
     args = ap.parse_args(argv)
 
     mesh = build_mesh(args.mesh)
@@ -78,7 +84,14 @@ def main(argv=None):
     cfg = MiniBatchConfig(n_clusters=args.clusters, n_batches=b, s=s,
                           kernel=KernelSpec("rbf", gamma=gamma),
                           sampling=args.sampling, seed=args.seed)
-    km = DistributedMiniBatchKMeans(mesh, cfg, mode=mode)
+
+    rec = None
+    if args.obs:
+        from repro.obs import JsonlRecorder, export
+        rec = JsonlRecorder(args.obs, header=export.run_header(
+            entry="launch.cluster", plan=p, b=b, s=s, engine=str(mode),
+            mesh={k: int(v) for k, v in mesh.shape.items()}))
+    km = DistributedMiniBatchKMeans(mesh, cfg, mode=mode, recorder=rec)
 
     cb = None
     if args.ckpt_dir:
@@ -86,9 +99,20 @@ def main(argv=None):
         cb = lambda state, i: cm.save(i, state,  # noqa: E731
                                       extra={"B": b, "s": s})
 
+    if args.profile:
+        from repro.obs import start_profile
+        start_profile(args.profile)
     t0 = time.time()
-    res = km.fit(split_batches(x, b, strategy=args.sampling),
-                 checkpoint_cb=cb)
+    try:
+        res = km.fit(split_batches(x, b, strategy=args.sampling),
+                     checkpoint_cb=cb)
+    finally:
+        if args.profile:
+            from repro.obs import stop_profile
+            stop_profile()
+            print(f"[cluster] profiler trace -> {args.profile}")
+        if rec is not None:
+            rec.close()
     dt = time.time() - t0
 
     labels = np.asarray(predict(jax.numpy.asarray(x), res.state.medoids,
@@ -100,6 +124,10 @@ def main(argv=None):
           f"{np.array2string(disp, precision=4)}")
     print(f"[cluster] inner iters/batch: "
           f"{[h.inner_iters for h in res.history]}")
+    if args.obs:
+        from repro.obs import export
+        s_ = export.summarize(args.obs)
+        print(f"[cluster] obs: {s_['events']} events -> {args.obs}")
     return acc
 
 

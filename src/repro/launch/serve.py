@@ -32,6 +32,8 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--top-p", type=float, default=0.0,
                     help="0 -> greedy; else nucleus sampling")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="write a repro.obs flight-recorder JSONL here")
     args = ap.parse_args(argv)
 
     mesh = build_mesh(args.mesh)
@@ -52,10 +54,24 @@ def main(argv=None):
     for l in lens:
         eng.submit(rng.integers(1, cfg.vocab_size, size=int(l)))
 
+    rec = None
+    if args.obs:
+        from repro.obs import JsonlRecorder, export
+        rec = JsonlRecorder(args.obs, header=export.run_header(
+            entry="launch.serve", arch=args.arch,
+            mesh={k: int(v) for k, v in mesh.shape.items()}))
+    results = {}
     t0 = time.time()
-    with mesh:
-        results = eng.run(axes)
-    dt = time.time() - t0
+    try:
+        with mesh:
+            results = eng.run(axes)
+    finally:
+        dt = time.time() - t0
+        if rec is not None:
+            rec.event("serve/summary", requests=len(lens),
+                      tokens=sum(len(v) for v in results.values()),
+                      seconds=dt, ticks=eng.ticks)
+            rec.close()
     n_tokens = sum(len(v) for v in results.values())
     print(f"[serve] {args.arch}: {len(results)} requests, "
           f"{n_tokens} tokens in {dt:.2f}s "

@@ -1,0 +1,126 @@
+"""Live HBM watermarks, recorded next to the planner's predicted footprint.
+
+``core.memory.plan`` prices every Gram residency / embedding method from a
+static analytic byte model; nothing so far checked that model against the
+allocator. ``watermark`` samples ``device.memory_stats()`` (bytes in use +
+peak) on every local device at a mini-batch boundary and records it in the
+SAME event as the predicted per-device bytes for that batch and mode — one
+``hbm_watermark`` line per batch is exactly the measured-vs-predicted
+dataset the self-tuning planner (ROADMAP) needs to calibrate on.
+
+Backends without allocator stats (CPU jax returns ``memory_stats() ==
+None``) fall back to the host's peak RSS (``resource.getrusage``), tagged
+``source: "host_rss"`` so readers never mistake process memory for HBM.
+
+``predicted_batch_footprint`` re-prices one mini-batch with the
+``core.memory`` formulas at (n = batch rows, B = 1): the per-device bytes
+the planner would claim for the exact engine mode / embedded method the
+fit is actually running.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .recorder import MetricsRecorder
+
+
+def device_memory_stats() -> list[dict]:
+    """One dict per local device: ``{"device", "bytes_in_use",
+    "peak_bytes_in_use"}``; empty list when no device reports stats."""
+    import jax
+    out = []
+    for dev in jax.local_devices():
+        stats = dev.memory_stats() if hasattr(dev, "memory_stats") else None
+        if not stats:
+            continue
+        out.append({
+            "device": f"{dev.platform}:{dev.id}",
+            "bytes_in_use": int(stats.get("bytes_in_use", 0)),
+            "peak_bytes_in_use": int(
+                stats.get("peak_bytes_in_use",
+                          stats.get("bytes_in_use", 0))),
+        })
+    return out
+
+
+def host_rss_peak_bytes() -> Optional[int]:
+    """Peak resident set size of this process (the CPU fallback)."""
+    try:
+        import resource
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # ru_maxrss is KiB on Linux, bytes on macOS.
+        import sys
+        return int(peak if sys.platform == "darwin" else peak * 1024)
+    except Exception:
+        return None
+
+
+def watermark(recorder: MetricsRecorder, *, batch: int,
+              predicted_bytes: Optional[float] = None, **tags) -> None:
+    """Record one ``hbm_watermark`` event: measured allocator state on
+    every local device next to the planner's predicted per-device bytes."""
+    if not recorder.enabled:
+        return                       # skip the stats syscalls entirely
+    devs = device_memory_stats()
+    if devs:
+        measured = max(d["bytes_in_use"] for d in devs)
+        peak = max(d["peak_bytes_in_use"] for d in devs)
+        source = "device"
+    else:
+        measured = peak = host_rss_peak_bytes()
+        source = "host_rss"
+    recorder.event(
+        "hbm_watermark", batch=int(batch), source=source,
+        measured_bytes=measured, peak_bytes=peak,
+        predicted_bytes=(float(predicted_bytes)
+                         if predicted_bytes is not None else None),
+        devices=devs, **tags)
+
+
+def predicted_batch_footprint(cfg, n_rows: int, d: int, *,
+                              n_devices: int = 1,
+                              density: float = 1.0) -> float:
+    """Planner-predicted per-device bytes for ONE mini-batch of ``n_rows``
+    rows under ``cfg`` (a ``MiniBatchConfig``) — the static model the
+    ``watermark`` events are diffed against.
+
+    Exact method: ``engine_footprint_bytes`` at the fit's actual GramEngine
+    mode; embedded methods: ``embed_footprint_bytes`` /
+    ``sketch_footprint_bytes`` at the fit's m.
+    """
+    from repro.core import memory as cm
+
+    c = cfg.n_clusters
+    if cfg.method == "exact":
+        from repro.core.engine import resolve_engine
+        eng = resolve_engine(cfg.engine)
+        return cm.engine_footprint_bytes(
+            n_rows, 1, c, n_devices, s=cfg.s, d=d,
+            mode=eng.mode, tile_rows=eng.tile_rows)
+    m = cfg.embed_dim
+    if not m:
+        from repro.approx import default_embed_dim
+        m = default_embed_dim(c)
+    if cfg.method in ("sketch", "tensorsketch"):
+        return cm.sketch_footprint_bytes(n_rows, 1, c, n_devices, m=m, d=d,
+                                         density=density)
+    return cm.embed_footprint_bytes(n_rows, 1, c, n_devices, m=m, d=d)
+
+
+def predicted_embed_footprint(n_rows: int, c: int, fmap, *,
+                              sparse: bool = False, density: float = 1.0,
+                              n_devices: int = 1) -> Optional[float]:
+    """Predicted per-device bytes of one embedded-space batch, priced from
+    the live feature map (m = ``fmap.dim``, d = ``fmap.in_dim``) — what the
+    embedded fit loops record next to their measured watermark. Sparse
+    batches take the O(nnz) sketch pricing at the batch's density."""
+    from repro.core import memory as cm
+
+    m = getattr(fmap, "dim", 0)
+    d = getattr(fmap, "in_dim", 0)
+    if not m:
+        return None
+    if sparse:
+        return cm.sketch_footprint_bytes(n_rows, 1, c, n_devices, m=m, d=d,
+                                         density=density)
+    return cm.embed_footprint_bytes(n_rows, 1, c, n_devices, m=m, d=d)

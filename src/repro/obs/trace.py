@@ -1,0 +1,64 @@
+"""Profiler spans over the named hot paths + on-demand trace dumps.
+
+Two span flavors, matching where the work happens:
+
+  ``span(name)``      -> ``jax.named_scope``: names the ops traced under it,
+                         so the Gram panel build, engine stats, psum hooks
+                         and embed/assign kernels show up as labelled
+                         regions in a TensorBoard/XProf device trace. Free
+                         at run time of an already-compiled program (the
+                         scope only exists while tracing) and identical
+                         with the recorder on or off — it cannot change a
+                         lowered program.
+  ``annotate(name)``  -> ``jax.profiler.TraceAnnotation``: marks HOST-side
+                         activity (PrefetchLoader H2D staging, checkpoint
+                         writes) on the profiler timeline.
+
+``start_profile(logdir)`` / ``stop_profile()`` wrap
+``jax.profiler.start_trace`` / ``stop_trace``: dump a TensorBoard-loadable
+trace of a chosen window on demand (``tensorboard --logdir <dir>`` or
+``xprof`` opens it). The launchers expose this as ``--profile <dir>``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def span(name: str):
+    """Named scope for device-side work (see module docstring)."""
+    return jax.named_scope(name)
+
+
+def annotate(name: str, **kwargs):
+    """Host-side profiler timeline annotation; no-op context manager when
+    the running jax has no TraceAnnotation (very old CPU builds)."""
+    ta = getattr(jax.profiler, "TraceAnnotation", None)
+    if ta is None:
+        return contextlib.nullcontext()
+    return ta(name, **kwargs)
+
+
+_active_logdir: str | None = None
+
+
+def start_profile(logdir: str) -> None:
+    """Begin capturing a profiler trace into ``logdir`` (idempotent —
+    starting while active restarts nothing and keeps the first window)."""
+    global _active_logdir
+    if _active_logdir is not None:
+        return
+    jax.profiler.start_trace(logdir)
+    _active_logdir = logdir
+
+
+def stop_profile() -> str | None:
+    """Stop the capture; returns the logdir the trace was written to
+    (None when no capture was active)."""
+    global _active_logdir
+    if _active_logdir is None:
+        return None
+    out, _active_logdir = _active_logdir, None
+    jax.profiler.stop_trace()
+    return out
