@@ -1,0 +1,24 @@
+"""Static program auditing: jaxpr-level proofs + AST lint.
+
+Layer 1 (``repro.analysis.jaxpr``) traces jitted hot paths and proves
+collective counts, memory residency, Pallas dispatch, and host-sync
+hygiene from the jaxpr — before anything runs. Layer 2
+(``repro.analysis.lint``, ``python -m repro.analysis``) lints ``src/``
+for the repo's key-discipline and jit-hygiene rules (RK001-RK004).
+"""
+from .jaxpr import (  # noqa: F401
+    COLLECTIVE_PRIMS,
+    HOST_SYNC_PRIMS,
+    AuditError,
+    LoopReport,
+    ProgramReport,
+    audit,
+    collective_bill,
+)
+from .lint import (  # noqa: F401
+    Finding,
+    Waiver,
+    apply_waivers,
+    lint_paths,
+    load_waivers,
+)

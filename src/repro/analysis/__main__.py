@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — run the AST lint gate (RK001-RK004)."""
+import sys
+
+from .lint import main
+
+if __name__ == "__main__":
+    sys.exit(main())

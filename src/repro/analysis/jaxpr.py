@@ -1,0 +1,436 @@
+"""Layer 1 of the program auditor: static jaxpr analysis of the hot paths.
+
+``audit(fn, *args)`` traces ``fn`` to a ClosedJaxpr (abstract evaluation —
+nothing executes, no device memory is touched) and walks it recursively,
+descending into every sub-jaxpr a primitive carries (``pjit`` bodies,
+``scan``/``while`` loops, ``cond`` branches, ``shard_map`` programs, custom
+derivative wrappers) to produce a ``ProgramReport``:
+
+* **collectives** — static counts per primitive (``psum``, ``all_gather``,
+  ``ppermute``, ...), split into *per-iteration* counts inside each
+  ``while`` loop and *outside* counts, with payload bytes from the avals.
+  The per-iteration bill is exact: the traced program is static, so "how
+  many psums does one Lloyd iteration issue" is a decidable property — it
+  must equal ``distributed.inner.collectives_per_iteration``'s analytic
+  bill, and the flight recorder bills from this count (satellite of PR 7).
+* **memory residency** — peak live intermediate bytes from a liveness walk
+  over the jaxpr (values die at their last use), plus the largest single
+  intermediate. A ``tiled``-mode program that materializes the full
+  ``[n, |L|]`` Gram block is a *static* failure here; no runtime spy
+  needed. Checked against ``core.memory.engine_footprint_bytes``.
+* **Pallas dispatch** — ``pallas_call`` occurrence counts. The PR 5 bug
+  (a "fused" mode that never invoked its kernel) becomes unrepresentable:
+  ``check_pallas`` fails the audit when presence mismatches the mode.
+* **host syncs** — callback primitives (``pure_callback``/``io_callback``/
+  ``debug_callback``) that force a device⇄host round-trip, flagged
+  especially inside loops where they serialize the dispatch stream.
+
+Scan bodies are counted with their trip count multiplied through
+(``length`` is static); ``while`` trip counts are dynamic, so their bodies
+are reported per-iteration and the caller supplies the realized ``n_iter``
+(``ProgramReport.collective_totals``). ``cond`` branches are merged by
+elementwise max (a conservative upper bound — branches of the audited hot
+paths are collective-free). ``pallas_call`` inner jaxprs are NOT descended
+into: their refs live in VMEM and would pollute the HBM residency walk.
+
+jnp-only analysis — no XLA compilation. The HLO-level cross-check (FLOPs,
+compiled peak bytes) is ``launch/audit.py`` + ``launch/hlocost.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Optional
+
+import jax
+
+try:  # jax >= 0.5 public location
+    from jax.extend import core as _core
+except ImportError:  # pragma: no cover - pinned-jax fallback
+    import jax.core as _core
+
+_Jaxpr = _core.Jaxpr
+_ClosedJaxpr = _core.ClosedJaxpr
+_Var = _core.Var
+_Literal = _core.Literal
+
+
+#: jaxpr-level collective primitives (what crosses the mesh network).
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "psum2", "pmax", "pmin", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "reduce_scatter", "psum_scatter",
+})
+
+#: primitives that force a host<->device round-trip (or stage one).
+HOST_SYNC_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "infeed", "outfeed",
+})
+
+#: sub-jaxprs never descended into (off-HBM address spaces).
+_OPAQUE_PRIMS = frozenset({"pallas_call"})
+
+
+class AuditError(AssertionError):
+    """A statically-decidable program invariant does not hold."""
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(aval.size) * int(aval.dtype.itemsize)
+    except Exception:       # tokens / abstract values without a layout
+        return 0
+
+
+def _is_var(v) -> bool:
+    return isinstance(v, _Var) and not isinstance(v, _Literal)
+
+
+def _subjaxprs(params: dict):
+    """Every jaxpr-valued entry in eqn.params (version-robust discovery)."""
+    for val in params.values():
+        if isinstance(val, (_Jaxpr, _ClosedJaxpr)):
+            yield val
+        elif isinstance(val, (tuple, list)):
+            for item in val:
+                if isinstance(item, (_Jaxpr, _ClosedJaxpr)):
+                    yield item
+
+
+def _open(j):
+    return j.jaxpr if isinstance(j, _ClosedJaxpr) else j
+
+
+@dataclasses.dataclass
+class LoopReport:
+    """One ``while`` loop: its per-iteration collective/host-sync bill."""
+    path: str                                   # nesting path, e.g. "pjit/while"
+    collectives: dict = dataclasses.field(default_factory=dict)
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    host_callbacks: dict = dataclasses.field(default_factory=dict)
+    pallas_calls: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ProgramReport:
+    """What is statically true of one traced program. See module docstring."""
+    name: str
+    input_bytes: int = 0
+    output_bytes: int = 0
+    peak_live_bytes: int = 0
+    largest_intermediate_bytes: int = 0
+    largest_intermediate_shape: str = ""
+    collectives_outside: dict = dataclasses.field(default_factory=dict)
+    collective_bytes_outside: dict = dataclasses.field(default_factory=dict)
+    loops: list = dataclasses.field(default_factory=list)
+    pallas_calls: int = 0
+    pallas_calls_in_loop: int = 0
+    host_callbacks: dict = dataclasses.field(default_factory=dict)
+    host_callbacks_in_loop: dict = dataclasses.field(default_factory=dict)
+    primitive_counts: dict = dataclasses.field(default_factory=dict)
+    hlo: Optional[dict] = None      # launch/audit.py fills in hlocost terms
+
+    # -- derived views -------------------------------------------------------
+
+    @property
+    def collectives_per_iteration(self) -> dict:
+        """Merged per-iteration collective counts over every while loop —
+        for the single-while inner-loop programs this IS the bill the
+        analytic ``collectives_per_iteration`` functions predict."""
+        out: Counter = Counter()
+        for loop in self.loops:
+            out.update(loop.collectives)
+        return dict(out)
+
+    @property
+    def collective_bytes_per_iteration(self) -> dict:
+        out: Counter = Counter()
+        for loop in self.loops:
+            out.update(loop.collective_bytes)
+        return dict(out)
+
+    def collective_totals(self, n_iter: int) -> dict:
+        """Realized bill: per-iteration counts x ``n_iter`` + the
+        outside-the-loop epilogue/prologue collectives. This is what the
+        flight recorder records (exact, unlike the PR 6 analytic
+        ``bill x (n_iter + 1)`` which charged the fixpoint pass a full
+        iteration)."""
+        out = Counter({k: v * n_iter
+                       for k, v in self.collectives_per_iteration.items()})
+        out.update(self.collectives_outside)
+        return dict(out)
+
+    def collective_byte_totals(self, n_iter: int) -> dict:
+        out = Counter({k: v * n_iter
+                       for k, v in self.collective_bytes_per_iteration.items()})
+        out.update(self.collective_bytes_outside)
+        return dict(out)
+
+    # -- checks (each returns a list of violation strings) -------------------
+
+    def check_collectives(self, expected_per_iteration: dict,
+                          expected_outside: Optional[dict] = None) -> list:
+        """Per-iteration counts must match the analytic bill exactly; with
+        ``expected_outside`` given, the unconditional (outside-any-while,
+        scan-multiplied) counts are held to the same standard. Both dicts
+        use the analytic-bill vocabulary: ``{"psum": n, "allgather": m}``
+        (``allgather`` is normalized to the jaxpr primitive
+        ``all_gather``; ``*_bytes`` keys are ignored)."""
+        alias = {"allgather": "all_gather", "allreduce": "psum"}
+
+        def compare(got: dict, expected: dict, where: str) -> list:
+            out = []
+            for key, want in expected.items():
+                if key.endswith("_bytes"):
+                    continue
+                prim = alias.get(key, key)
+                have = got.get(prim, 0)
+                if have != want:
+                    out.append(
+                        f"{self.name}: {prim} {where} is {have}, analytic "
+                        f"bill says {want}")
+            known = {alias.get(k, k) for k in expected
+                     if not k.endswith("_bytes")}
+            for prim, have in sorted(got.items()):
+                if prim not in known and have:
+                    out.append(
+                        f"{self.name}: unbilled collective {prim} x{have} "
+                        f"{where} (analytic bill has no entry for it)")
+            return out
+
+        out = compare(self.collectives_per_iteration,
+                      expected_per_iteration, "per iteration")
+        if expected_outside is not None:
+            out += compare(dict(self.collectives_outside),
+                           expected_outside, "outside the loop")
+        return out
+
+    def check_memory(self, budget_bytes: float, *, slack: float = 3.0) -> list:
+        """Peak live bytes <= slack x the planner's priced footprint.
+
+        ``slack`` absorbs what the jaxpr view cannot see: XLA fuses
+        elementwise chains the jaxpr shows as distinct simultaneously-live
+        values (a - b -> exp chain on an [n, L] block is one fusion on
+        device but ~3 live blocks here). It does NOT absorb an extra
+        resident Gram block: a materialized [n, L] in tiled mode overshoots
+        any per-mode budget by x(n/bm), far beyond slack."""
+        if self.peak_live_bytes > slack * budget_bytes:
+            return [f"{self.name}: peak live bytes "
+                    f"{self.peak_live_bytes:,} > {slack:g} x budget "
+                    f"{budget_bytes:,.0f}"]
+        return []
+
+    def check_max_intermediate(self, limit_bytes: float) -> list:
+        """No single intermediate may reach ``limit_bytes`` — the tiled
+        booby-trap: one materialized [n, |L|] Gram block trips this."""
+        if self.largest_intermediate_bytes >= limit_bytes:
+            return [f"{self.name}: intermediate "
+                    f"{self.largest_intermediate_shape} of "
+                    f"{self.largest_intermediate_bytes:,} bytes >= limit "
+                    f"{limit_bytes:,.0f}"]
+        return []
+
+    def check_pallas(self, expected: bool) -> list:
+        """pallas_call present iff the mode says so (the PR 5 dead-kernel
+        class of bug, decided before anything runs)."""
+        if expected and self.pallas_calls == 0:
+            return [f"{self.name}: expected a pallas_call dispatch, the "
+                    f"traced program contains none (dead-kernel bug)"]
+        if not expected and self.pallas_calls > 0:
+            return [f"{self.name}: unexpected pallas_call x"
+                    f"{self.pallas_calls} (mode promises a Pallas-free "
+                    f"program)"]
+        return []
+
+    def check_host_sync(self) -> list:
+        """No host round-trip primitive inside an inner loop."""
+        out = []
+        for prim, cnt in sorted(self.host_callbacks_in_loop.items()):
+            out.append(f"{self.name}: host-sync primitive {prim} x{cnt} "
+                       f"inside a while/scan body (serializes the dispatch "
+                       f"stream every iteration)")
+        return out
+
+    def verify(self, *violation_lists) -> "ProgramReport":
+        """Raise AuditError with every violation, or return self."""
+        flat = [v for vs in violation_lists for v in vs]
+        if flat:
+            raise AuditError(
+                "static audit failed:\n  " + "\n  ".join(flat))
+        return self
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["collectives_per_iteration"] = self.collectives_per_iteration
+        d["collective_bytes_per_iteration"] = \
+            self.collective_bytes_per_iteration
+        return d
+
+
+class _Walker:
+    """Recursive jaxpr walk accumulating the ProgramReport fields."""
+
+    def __init__(self, report: ProgramReport):
+        self.r = report
+        self._loop_stack: list[LoopReport] = []
+
+    # -- counting ------------------------------------------------------------
+
+    def _count(self, prim: str, eqn, mult: int) -> None:
+        counts = self.r.primitive_counts
+        counts[prim] = counts.get(prim, 0) + mult
+        if prim in COLLECTIVE_PRIMS:
+            payload = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+            if self._loop_stack:
+                loop = self._loop_stack[-1]
+                loop.collectives[prim] = loop.collectives.get(prim, 0) + mult
+                loop.collective_bytes[prim] = \
+                    loop.collective_bytes.get(prim, 0) + payload * mult
+            else:
+                co = self.r.collectives_outside
+                co[prim] = co.get(prim, 0) + mult
+                cb = self.r.collective_bytes_outside
+                cb[prim] = cb.get(prim, 0) + payload * mult
+        if prim in HOST_SYNC_PRIMS:
+            hc = self.r.host_callbacks
+            hc[prim] = hc.get(prim, 0) + mult
+            if self._loop_stack:
+                hl = self.r.host_callbacks_in_loop
+                hl[prim] = hl.get(prim, 0) + mult
+                self._loop_stack[-1].host_callbacks[prim] = \
+                    self._loop_stack[-1].host_callbacks.get(prim, 0) + mult
+        if prim in _OPAQUE_PRIMS:
+            self.r.pallas_calls += mult
+            if self._loop_stack:
+                self.r.pallas_calls_in_loop += mult
+                self._loop_stack[-1].pallas_calls += mult
+
+    def _note_intermediate(self, var) -> None:
+        b = _aval_bytes(var.aval)
+        if b > self.r.largest_intermediate_bytes:
+            self.r.largest_intermediate_bytes = b
+            self.r.largest_intermediate_shape = str(var.aval)
+
+    # -- liveness walk -------------------------------------------------------
+
+    def walk(self, jaxpr, *, mult: int = 1, path: str = "") -> int:
+        """Walk one (open) jaxpr; returns its peak live bytes given that
+        its invars/constvars are resident for its whole extent."""
+        eqns = jaxpr.eqns
+        last_use: dict = {}
+        for i, eqn in enumerate(eqns):
+            for v in eqn.invars:
+                if _is_var(v):
+                    last_use[v] = i
+        for v in jaxpr.outvars:
+            if _is_var(v):
+                last_use[v] = len(eqns)
+
+        live: dict = {}
+        for v in list(jaxpr.invars) + list(jaxpr.constvars):
+            if _is_var(v):
+                live[v] = _aval_bytes(v.aval)
+        cur = sum(live.values())
+        peak = cur
+
+        for i, eqn in enumerate(eqns):
+            prim = eqn.primitive.name
+            self._count(prim, eqn, mult)
+            sub_peak = self._descend(prim, eqn, mult, path)
+            out_bytes = 0
+            for v in eqn.outvars:
+                if _is_var(v):
+                    b = _aval_bytes(v.aval)
+                    live[v] = b
+                    out_bytes += b
+                    self._note_intermediate(v)
+            cur = sum(live.values())
+            # transient high-water mark: inputs still live + the callee's
+            # own peak + the outputs being written.
+            peak = max(peak, cur + sub_peak)
+            for v in list(eqn.invars) + list(eqn.outvars):
+                if _is_var(v) and last_use.get(v, -1) <= i and v in live:
+                    del live[v]
+        return max(peak, sum(live.values()))
+
+    def _descend(self, prim: str, eqn, mult: int, path: str) -> int:
+        """Recurse into sub-jaxprs; returns the callee peak live bytes."""
+        if prim in _OPAQUE_PRIMS:
+            return 0                       # VMEM address space, not HBM
+        if prim == "while":
+            loop = LoopReport(path=f"{path}/while".lstrip("/"))
+            self.r.loops.append(loop)
+            self._loop_stack.append(loop)
+            try:
+                body = self.walk(_open(eqn.params["body_jaxpr"]), mult=1,
+                                 path=loop.path)
+                cond = self.walk(_open(eqn.params["cond_jaxpr"]), mult=1,
+                                 path=loop.path)
+            finally:
+                self._loop_stack.pop()
+            return max(body, cond)
+        if prim == "scan":
+            length = int(eqn.params.get("length", 1) or 1)
+            # scan trips are static: multiply counts through, but memory is
+            # per-iteration (stacked outputs are the eqn's outvars).
+            return self.walk(_open(eqn.params["jaxpr"]), mult=mult * length,
+                             path=f"{path}/scan".lstrip("/"))
+        if prim == "cond":
+            branches = eqn.params.get("branches", ())
+            # conservative: memory is the max branch; counts are max-merged
+            # by counting only the heaviest branch (branches of audited hot
+            # paths are collective-free, so this never hides a psum).
+            best, best_peak = None, -1
+            for b in branches:
+                probe = _Walker(ProgramReport(name="_probe"))
+                p = probe.walk(_open(b), mult=mult)
+                if p > best_peak or best is None:
+                    best, best_peak = b, p
+            if best is None:
+                return 0
+            return self.walk(_open(best), mult=mult,
+                             path=f"{path}/cond".lstrip("/"))
+        peak = 0
+        for sub in _subjaxprs(eqn.params):
+            peak = max(peak, self.walk(_open(sub), mult=mult,
+                                       path=f"{path}/{prim}".lstrip("/")))
+        return peak
+
+
+def audit(fn, *args, name: Optional[str] = None, **kwargs) -> ProgramReport:
+    """Trace ``fn(*args, **kwargs)`` (abstract — nothing runs) and return
+    its ``ProgramReport``. Args may be concrete arrays or
+    ``jax.ShapeDtypeStruct`` placeholders."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    report = ProgramReport(name=name or getattr(fn, "__name__", "program"))
+    report.input_bytes = sum(_aval_bytes(v.aval)
+                             for v in closed.jaxpr.invars)
+    report.output_bytes = sum(
+        _aval_bytes(v.aval) for v in closed.jaxpr.outvars if _is_var(v))
+    walker = _Walker(report)
+    report.peak_live_bytes = walker.walk(closed.jaxpr)
+    return report
+
+
+def collective_bill(fn, *args, name: Optional[str] = None,
+                    **kwargs) -> dict:
+    """The audit-derived communication bill of one traced program:
+
+    ``{"per_iteration": {prim: count}, "outside": {prim: count},
+    "per_iteration_bytes": {prim: bytes}, "outside_bytes": {prim: bytes}}``
+
+    ``per_iteration`` is the while-body bill (exact — the traced loop body
+    is static); ``outside`` is the prologue/epilogue (e.g. the fixpoint
+    stats pass after the inner loop). The flight recorder records
+    ``per_iteration x n_iter + outside`` — see ``distributed.outer``.
+    """
+    r = audit(fn, *args, name=name, **kwargs)
+    return {
+        "per_iteration": r.collectives_per_iteration,
+        "outside": dict(r.collectives_outside),
+        "per_iteration_bytes": r.collective_bytes_per_iteration,
+        "outside_bytes": dict(r.collective_bytes_outside),
+    }

@@ -1,0 +1,443 @@
+"""Layer 2 of the program auditor: repo-specific AST lint rules.
+
+Four rules, each encoding a discipline this repo has shipped a bug by
+violating (see ISSUE 7 / CHANGES.md):
+
+* **RK001 — key reuse.** The same PRNG key variable consumed by two
+  ``jax.random.*`` sampling calls without a rebind between them. The
+  repo's resume/elasticity guarantees hang on fold_in discipline (every
+  draw keyed by ``fold_in(key, tag)`` / per-row id, never a shared key
+  consumed twice) — reuse silently correlates draws and breaks
+  bit-identical resume (the PR 2/3 class of bug).
+* **RK002 — tracer-leaking coercion.** ``float()``/``int()``/``bool()``
+  on a non-literal, ``np.asarray``/``np.array``, ``.item()``/
+  ``.tolist()``/``.numpy()`` inside a function that is jitted (decorated
+  with ``jax.jit``/``partial(jax.jit, ...)``, or any function nested in
+  one). Under trace these either raise ``ConcretizationTypeError`` at the
+  worst moment or force a silent host sync.
+* **RK003 — dead Pallas kernel.** A function in ``kernels/`` whose body
+  issues ``pl.pallas_call`` but whose name is never referenced outside
+  its defining module: a kernel no dispatch table can reach. The PR 5
+  fused-mode bug — kernel written, never invoked — as a lint.
+* **RK004 — non-hashable static arg.** A jit ``static_argnums``/
+  ``static_argnames`` entry whose parameter default is a list/dict/set
+  display. Hashing fails on first call — but only on the code path that
+  hits the default, so it escapes shallow tests.
+
+Findings can be waived via a checked-in JSON file (see ``waivers.json``):
+``[{"rule": "RK003", "path": "src/repro/...", "symbol": "...",
+"reason": "..."}]`` — every waiver must carry a reason, and unused
+waivers are reported so the file cannot rot. Run as
+``python -m repro.analysis [paths] [--waivers FILE]``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional
+
+#: jax.random functions that *derive* keys rather than consume them.
+_KEY_DERIVERS = frozenset({
+    "split", "fold_in", "PRNGKey", "key", "key_data", "wrap_key_data",
+    "clone", "key_impl",
+})
+
+#: numpy-ish coercions that leak tracers / force host syncs under jit.
+_NP_COERCIONS = frozenset({"asarray", "array", "asanyarray"})
+_METHOD_COERCIONS = frozenset({"item", "tolist", "numpy"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    symbol: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    rule: str
+    path: str
+    symbol: str = ""
+    reason: str = ""
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule:
+            return False
+        if not f.path.endswith(self.path):
+            return False
+        return (not self.symbol) or self.symbol == f.symbol
+
+
+def load_waivers(path: str) -> list:
+    with open(path) as fh:
+        raw = json.load(fh)
+    out = []
+    for entry in raw:
+        if not entry.get("reason"):
+            raise ValueError(
+                f"waiver {entry} has no reason — every waiver must say why")
+        out.append(Waiver(rule=entry["rule"], path=entry["path"],
+                          symbol=entry.get("symbol", ""),
+                          reason=entry["reason"]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# helpers over the AST
+
+
+def _dotted(node) -> str:
+    """'jax.random.uniform' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_decorator(dec) -> bool:
+    """@jax.jit / @jit / @partial(jax.jit, ...) / @functools.partial(...)."""
+    d = _dotted(dec)
+    if d in ("jax.jit", "jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        head = _dotted(dec.func)
+        if head in ("jax.jit", "jit"):
+            return True
+        if head in ("partial", "functools.partial") and dec.args:
+            return _dotted(dec.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _jit_static_params(call: ast.Call):
+    """(static_argnums tuple, static_argnames tuple) from a jit call."""
+    nums: tuple = ()
+    names: tuple = ()
+    for kw in call.keywords:
+        try:
+            val = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            continue
+        if kw.arg == "static_argnums":
+            nums = tuple(val) if isinstance(val, (tuple, list)) else (val,)
+        elif kw.arg == "static_argnames":
+            names = (val,) if isinstance(val, str) else tuple(val)
+    return nums, names
+
+
+def _is_unhashable_literal(node) -> bool:
+    return isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp))
+
+
+# ---------------------------------------------------------------------------
+# RK001 — key reuse
+
+
+def _scoped_walk(root):
+    """Pre-order (source-order) walk that does NOT descend into nested
+    function/lambda scopes — their key parameters are different keys."""
+    for child in ast.iter_child_nodes(root):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield child
+        yield from _scoped_walk(child)
+
+
+def _check_key_reuse(tree: ast.AST, path: str) -> Iterable[Finding]:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        consumed: dict = {}   # key var name -> line of first consumption
+        # Source-order walk of this function's own scope only (nested defs
+        # get their own pass via the outer ast.walk).
+        for node in _scoped_walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name):
+                            consumed.pop(leaf.id, None)
+            if not isinstance(node, ast.Call):
+                continue
+            head = _dotted(node.func)
+            if not head.startswith(("jax.random.", "jrandom.", "random.")):
+                continue
+            leaf_fn = head.rsplit(".", 1)[-1]
+            if leaf_fn in _KEY_DERIVERS or not node.args:
+                continue
+            first = node.args[0]
+            if isinstance(first, ast.Name):
+                name = first.id
+                if name in consumed:
+                    yield Finding(
+                        "RK001", path, node.lineno, fn.name,
+                        f"key `{name}` consumed again by jax.random."
+                        f"{leaf_fn} (first consumed at line "
+                        f"{consumed[name]}) — derive per-use keys with "
+                        f"fold_in/split instead of reusing one key")
+                else:
+                    consumed[name] = node.lineno
+
+
+# ---------------------------------------------------------------------------
+# RK002 — tracer-leaking coercions inside jitted functions
+
+
+def _traced_names(fn) -> set:
+    """Names that may hold tracers inside a jitted ``fn``: its non-static
+    parameters plus every name bound in its body. Names outside this set
+    (static args, globals, builtins, modules) are trace-time constants, so
+    ``int(...)`` over them is fine — e.g. ``int(math.log(n_clusters))``
+    with ``n_clusters`` in static_argnames."""
+    static: set = set()
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call) and _is_jit_decorator(dec):
+            nums, names = _jit_static_params(dec)
+            static.update(names)
+            params = fn.args.args
+            for i in nums:
+                if isinstance(i, int) and 0 <= i < len(params):
+                    static.add(params[i].arg)
+    out = {a.arg for a in (fn.args.args + fn.args.kwonlyargs +
+                           fn.args.posonlyargs)} - static
+    if fn.args.vararg:
+        out.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        out.add(fn.args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+    return out
+
+
+def _check_tracer_leaks(tree: ast.AST, path: str) -> Iterable[Finding]:
+    jitted: list = [
+        fn for fn in ast.walk(tree)
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+        and any(_is_jit_decorator(d) for d in fn.decorator_list)
+    ]
+    for fn in jitted:
+        traced = _traced_names(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            head = _dotted(node.func)
+            # float(x) / int(x) / bool(x) on a potentially-traced value
+            if head in ("float", "int", "bool") and node.args:
+                arg = node.args[0]
+                arg_names = {n.id for n in ast.walk(arg)
+                             if isinstance(n, ast.Name)}
+                if not isinstance(arg, ast.Constant) and arg_names & traced:
+                    yield Finding(
+                        "RK002", path, node.lineno, fn.name,
+                        f"`{head}(...)` on a traced value inside jitted "
+                        f"`{fn.name}` — concretizes the tracer (use jnp "
+                        f"ops or hoist to host code)")
+            elif head.split(".", 1)[0] in ("np", "numpy", "onp") and \
+                    head.rsplit(".", 1)[-1] in _NP_COERCIONS:
+                yield Finding(
+                    "RK002", path, node.lineno, fn.name,
+                    f"`{head}(...)` inside jitted `{fn.name}` — forces a "
+                    f"host transfer under trace (use jnp.asarray)")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _METHOD_COERCIONS and not node.args:
+                yield Finding(
+                    "RK002", path, node.lineno, fn.name,
+                    f"`.{node.func.attr}()` inside jitted `{fn.name}` — "
+                    f"device->host sync under trace")
+
+
+# ---------------------------------------------------------------------------
+# RK003 — dead Pallas kernels
+
+
+def _pallas_wrappers(tree: ast.AST):
+    """Top-level functions whose body issues pl.pallas_call."""
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    _dotted(node.func).endswith("pallas_call"):
+                yield fn
+                break
+
+
+def _names_referenced(tree: ast.AST) -> set:
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add(alias.name.rsplit(".", 1)[-1])
+                if alias.asname:
+                    out.add(alias.asname)
+    return out
+
+
+def _check_dead_kernels(files: dict) -> Iterable[Finding]:
+    """files: {path: ast tree} over the whole lint target set."""
+    kernel_files = {p: t for p, t in files.items()
+                    if f"kernels{os.sep}" in p}
+    if not kernel_files:
+        return
+    refs_by_file = {p: _names_referenced(t) for p, t in files.items()}
+    for kpath, ktree in kernel_files.items():
+        for fn in _pallas_wrappers(ktree):
+            reachable = any(fn.name in refs for p, refs in
+                            refs_by_file.items() if p != kpath)
+            if not reachable:
+                yield Finding(
+                    "RK003", kpath, fn.lineno, fn.name,
+                    f"Pallas kernel wrapper `{fn.name}` is never "
+                    f"referenced outside its module — no dispatch table "
+                    f"can reach it (dead kernel)")
+
+
+# ---------------------------------------------------------------------------
+# RK004 — non-hashable static args
+
+
+def _check_static_args(tree: ast.AST, path: str) -> Iterable[Finding]:
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        nums: tuple = ()
+        names: tuple = ()
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) and _is_jit_decorator(dec):
+                n, s = _jit_static_params(dec)
+                nums += n
+                names += s
+        if not nums and not names:
+            continue
+        params = fn.args.args
+        kwonly = fn.args.kwonlyargs
+        # positional defaults align to the tail of params
+        pos_defaults = dict(zip(
+            [p.arg for p in params[len(params) - len(fn.args.defaults):]],
+            fn.args.defaults))
+        kw_defaults = {p.arg: d for p, d in zip(kwonly, fn.args.kw_defaults)
+                       if d is not None}
+        defaults = {**pos_defaults, **kw_defaults}
+        static_names = set(names)
+        for i in nums:
+            if isinstance(i, int) and 0 <= i < len(params):
+                static_names.add(params[i].arg)
+        for pname in static_names:
+            d = defaults.get(pname)
+            if d is not None and _is_unhashable_literal(d):
+                yield Finding(
+                    "RK004", path, d.lineno, fn.name,
+                    f"static arg `{pname}` of jitted `{fn.name}` defaults "
+                    f"to an unhashable {type(d).__name__.lower()} — jit "
+                    f"hashes static args; use a tuple/frozen dataclass")
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def lint_paths(paths: Iterable[str]) -> list:
+    """Lint every .py file under ``paths`` (files or directories)."""
+    files: dict = {}
+    for root in paths:
+        if os.path.isfile(root):
+            targets = [root]
+        else:
+            targets = sorted(
+                os.path.join(dp, f)
+                for dp, _dn, fns in os.walk(root) for f in fns
+                if f.endswith(".py"))
+        for path in targets:
+            with open(path, encoding="utf-8") as fh:
+                src = fh.read()
+            try:
+                files[path] = ast.parse(src, filename=path)
+            except SyntaxError as e:   # pragma: no cover
+                raise SystemExit(f"{path}: cannot parse: {e}")
+    findings: list = []
+    for path, tree in files.items():
+        findings.extend(_check_key_reuse(tree, path))
+        findings.extend(_check_tracer_leaks(tree, path))
+        findings.extend(_check_static_args(tree, path))
+    findings.extend(_check_dead_kernels(files))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def apply_waivers(findings: list, waivers: list):
+    """-> (active findings, waived findings, unused waivers)."""
+    active, waived = [], []
+    used = set()
+    for f in findings:
+        hit = None
+        for i, w in enumerate(waivers):
+            if w.matches(f):
+                hit = i
+                break
+        if hit is None:
+            active.append(f)
+        else:
+            used.add(hit)
+            waived.append(f)
+    unused = [w for i, w in enumerate(waivers) if i not in used]
+    return active, waived, unused
+
+
+def main(argv: Optional[list] = None) -> int:
+    import argparse
+    here = os.path.dirname(os.path.abspath(__file__))
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific AST lint (RK001-RK004); exit 1 on any "
+                    "unwaived finding")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help="files/dirs to lint (default: src/repro)")
+    parser.add_argument("--waivers",
+                        default=os.path.join(here, "waivers.json"),
+                        help="JSON waiver file (default: the checked-in "
+                             "repro/analysis/waivers.json)")
+    parser.add_argument("--no-waivers", action="store_true",
+                        help="ignore the waiver file (show everything)")
+    args = parser.parse_args(argv)
+
+    paths = args.paths
+    if not paths:
+        pkg_root = os.path.dirname(here)         # .../src/repro
+        paths = [pkg_root]
+    waivers = [] if args.no_waivers else load_waivers(args.waivers)
+    findings = lint_paths(paths)
+    active, waived, unused = apply_waivers(findings, waivers)
+
+    for f in active:
+        print(f.render())
+    if waived:
+        print(f"[{len(waived)} finding(s) waived via "
+              f"{os.path.basename(args.waivers)}]")
+    for w in unused:
+        print(f"warning: unused waiver {w.rule} {w.path} "
+              f"{w.symbol or ''} ({w.reason})".rstrip())
+    if active:
+        print(f"{len(active)} unwaived finding(s)")
+        return 1
+    print(f"lint clean ({len(findings)} finding(s), all waived)"
+          if findings else "lint clean")
+    return 0

@@ -178,6 +178,16 @@ def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     VMEM (nothing but the [rows, C] f panel in HBM); tiled streams
     ``tile_rows``-high panels. All modes pay the f panel, the label/medoid
     bookkeeping, and (d > 0) the feature rows the rebuild needs on-node.
+
+    This price is not only what the planner optimizes against — it is a
+    statically *enforced* residency contract: ``repro.analysis.audit``
+    walks the traced inner-loop jaxpr and checks its peak live
+    intermediate bytes against this function's value for the chosen mode
+    (within a fusion-slack factor), and checks that no single intermediate
+    reaches the full [rows, |L|] Gram block unless mode=="materialize".
+    A tiled program that accidentally materializes the block it promised
+    to stream fails ``launch/audit.py`` before anything runs, rather than
+    OOMing at scale (see the "Auditing the program" README section).
     """
     nb = n / b
     rows = nb / p

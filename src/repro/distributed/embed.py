@@ -178,6 +178,7 @@ class DistributedEmbedKMeans:
         # them once per mini-batch, and rebuilding the shard_map wrapper
         # each call would re-trace (and re-compile) every batch.
         self._embed_fns: dict = {}
+        self._bill_cache: dict = {}
         fn = partial(_shard_lloyd, row_axes=self.row_axes,
                      n_clusters=cfg.n_clusters,
                      max_iters=cfg.max_inner_iters)
@@ -401,6 +402,34 @@ class DistributedEmbedKMeans:
                     mask0: Array):
         return self._lloyd_fn(x, wgt, centroids0, mask0)
 
+    def _audited_bill(self, z, wgt, centroids0, mask0):
+        """Statically-audited collective bill of ``_lloyd_fn`` (see
+        ``repro.analysis.collective_bill``), cached per embedded-batch
+        shape; analytic fallback (+ ``audit_error`` event) if tracing
+        fails — billing must never take the fit down."""
+        key = (z.shape, centroids0.shape, str(z.dtype))
+        bill = self._bill_cache.get(key)
+        if bill is None:
+            from repro.analysis import collective_bill
+            try:
+                bill = collective_bill(self._lloyd_fn, z, wgt, centroids0,
+                                       mask0, name="embed_lloyd")
+            except Exception as e:   # pragma: no cover - defensive
+                self.rec.event("audit_error", where="embed_lloyd",
+                               error=repr(e))
+                m = getattr(self.fmap, "dim", 0)
+                analytic = collectives_per_iteration(self.cfg.n_clusters, m)
+                bill = {
+                    "per_iteration": {"psum": analytic["psum"]},
+                    "outside": {"psum": analytic["final_psum"]},
+                    "per_iteration_bytes":
+                        {"psum": analytic["psum_bytes"]},
+                    "outside_bytes":
+                        {"psum": analytic["final_psum_bytes"]},
+                }
+            self._bill_cache[key] = bill
+        return bill
+
     def fit(self, batches: Iterable, *,
             state: Optional[EmbedState] = None,
             checkpoint_cb=None) -> FitResult:
@@ -478,14 +507,20 @@ class DistributedEmbedKMeans:
                 checkpoint_cb(state, i)
             if rec.enabled:
                 n_iter = history[-1].inner_iters
-                m = getattr(self.fmap, "dim", 0)
-                bill = collectives_per_iteration(cfg.n_clusters, m)
+                # statically-audited bill (repro.analysis): per-iteration
+                # while-body count x n_iter + the audited fixpoint
+                # epilogue; `collectives_per_iteration` remains the
+                # analytic cross-check the audit must agree with.
+                bill = self._audited_bill(z, wgt, centroids0, mask0)
+                per, out = bill["per_iteration"], bill["outside"]
                 rec.counter("collectives/psum",
-                            bill["psum"] * n_iter + bill["final_psum"],
-                            batch=i)
+                            per.get("psum", 0) * n_iter
+                            + out.get("psum", 0), batch=i)
                 rec.counter("collectives/psum_bytes",
-                            bill["psum_bytes"] * n_iter
-                            + bill["final_psum_bytes"], batch=i)
+                            bill["per_iteration_bytes"].get("psum", 0)
+                            * n_iter
+                            + bill["outside_bytes"].get("psum", 0),
+                            batch=i)
                 rec.series("batch/wall_seconds",
                            time.perf_counter() - t_batch, batch=i,
                            rows=st.n)

@@ -82,8 +82,12 @@ class DistributedMiniBatchKMeans:
         the planner picked otherwise). ``recorder`` is a ``repro.obs``
         flight recorder; all its hooks run host-side between the jitted
         mesh programs (the collective bill inside the inner while_loop is
-        counted analytically — ``inner.collectives_per_iteration`` x the
-        returned n_iter — never by instrumenting the traced body)."""
+        counted *statically* — ``repro.analysis.collective_bill`` walks the
+        traced jaxpr once per batch shape and the recorder multiplies the
+        per-iteration count by the returned n_iter, plus the audited
+        outside-the-loop epilogue — never by instrumenting the traced
+        body; ``inner.collectives_per_iteration`` stays as the analytic
+        cross-check the audit must agree with)."""
         self.mesh = mesh
         self.cfg = cfg
         self.rec = resolve_recorder(recorder)
@@ -99,8 +103,43 @@ class DistributedMiniBatchKMeans:
             engine=resolve_engine(cfg.engine if mode is None else mode),
             row_axes=row_axes, col_axis=col_axis)
         self._row_sharding = NamedSharding(mesh, P(row_axes, None))
+        self._bill_cache: dict = {}
 
     # -- helpers -----------------------------------------------------------
+
+    def _audited_bill(self, x, landmarks, l_idx, diag, u0, wgt):
+        """Statically-audited collective bill of the inner mesh program
+        (``repro.analysis.collective_bill`` over the traced jaxpr), cached
+        per batch shape. Falls back to the analytic
+        ``collectives_per_iteration`` (recording an ``audit_error`` event)
+        if tracing fails — billing must never take the fit down."""
+        key = (x.shape, landmarks.shape, str(x.dtype))
+        bill = self._bill_cache.get(key)
+        if bill is None:
+            from repro.analysis import collective_bill
+            try:
+                bill = collective_bill(
+                    lambda xa, lm, li, dg, u, w: distributed_kkmeans_fit(
+                        self.mesh, xa, lm, li, dg, u, cfg=self.inner_cfg,
+                        wgt=w),
+                    x, landmarks, l_idx, diag, u0, wgt,
+                    name="distributed_inner")
+            except Exception as e:   # pragma: no cover - defensive
+                self.rec.event("audit_error", where="distributed_inner",
+                               error=repr(e))
+                analytic = collectives_per_iteration(self.inner_cfg)
+                # analytic equivalent of the audited bill: the fixpoint
+                # pass re-runs everything but the convergence-flag psum.
+                bill = {
+                    "per_iteration": {"psum": analytic["psum"],
+                                      "all_gather": analytic["allgather"]},
+                    "outside": {"psum": analytic["psum"] - 1,
+                                "all_gather": analytic["allgather"]},
+                    "per_iteration_bytes": {"psum": analytic["psum_bytes"]},
+                    "outside_bytes": {"psum": analytic["psum_bytes"] - 4},
+                }
+            self._bill_cache[key] = bill
+        return bill
 
     def _put_rows(self, x: np.ndarray) -> Array:
         return jax.device_put(jnp.asarray(x), self._row_sharding)
@@ -283,14 +322,25 @@ class DistributedMiniBatchKMeans:
             if rec.enabled:
                 dt = time.perf_counter() - t_batch
                 n_iter = history[-1].inner_iters
-                bill = collectives_per_iteration(self.inner_cfg)
-                # n_iter loop sweeps + the fixpoint pass = n_iter + 1
+                # statically-audited bill: per-iteration count x n_iter
+                # loop sweeps + the audited outside-the-loop collectives
+                # (the fixpoint pass — which has NO convergence psum, so
+                # the old analytic `bill x (n_iter + 1)` overcounted by
+                # one psum per batch).
+                bill = self._audited_bill(x, landmarks, l_idx, diag, u0,
+                                          wgt)
+                per, out = bill["per_iteration"], bill["outside"]
+                per_b = bill["per_iteration_bytes"]
+                out_b = bill["outside_bytes"]
                 rec.counter("collectives/psum",
-                            bill["psum"] * (n_iter + 1), batch=i)
+                            per.get("psum", 0) * n_iter
+                            + out.get("psum", 0), batch=i)
                 rec.counter("collectives/allgather",
-                            bill["allgather"] * (n_iter + 1), batch=i)
+                            per.get("all_gather", 0) * n_iter
+                            + out.get("all_gather", 0), batch=i)
                 rec.counter("collectives/psum_bytes",
-                            bill["psum_bytes"] * (n_iter + 1), batch=i)
+                            per_b.get("psum", 0) * n_iter
+                            + out_b.get("psum", 0), batch=i)
                 rec.series("batch/wall_seconds", dt, batch=i, rows=n)
                 rec.series("inner/cost", history[-1].cost, batch=i)
                 rec.series("inner/iters", n_iter, batch=i)

@@ -4,6 +4,14 @@ Handle padding (MXU tile alignment), norm precomputation, block-size
 selection against the VMEM budget, and CPU fallback (interpret mode runs the
 kernel body in Python — correct but slow, so the wrappers default to the
 pure-jnp oracle off-TPU unless forced for testing).
+
+This module is also the DISPATCH TABLE the static analyzer audits: every
+``*_pallas`` wrapper defined under ``kernels/`` must be imported (reached)
+from here or another module, or lint rule RK003 flags it as a dead kernel
+(``python -m repro.analysis``) — and ``repro.analysis.audit`` checks that
+the ``pallas_call`` these wrappers stage actually appears in the traced
+program whenever an engine mode promises one (the bug class where a
+"fused" mode silently fell back to jnp).
 """
 from __future__ import annotations
 

@@ -1,0 +1,279 @@
+"""Static program audit — ``python -m repro.launch.audit``.
+
+Traces every hot path the repo ships (the three GramEngine modes of the
+exact inner loop, the mesh program of ``distributed/inner``, the embedded
+Lloyd program, and the serving ``predict``) WITHOUT running any of them,
+and proves from the jaxprs (``repro.analysis``):
+
+  * collective counts — the mesh programs' per-iteration psum/all_gather
+    counts equal ``collectives_per_iteration``'s analytic bill exactly;
+  * memory residency — peak live intermediate bytes stay within a slack
+    factor of ``core.memory.engine_footprint_bytes``'s priced footprint,
+    and no single intermediate reaches the full [n, |L|] Gram block unless
+    the mode is ``materialize`` (the tiled/fused residency promise);
+  * Pallas dispatch — ``pallas_call`` present iff mode == "fused" (the
+    PR 5 dead-kernel bug, decided before anything runs);
+  * host-sync hygiene — no callback primitives inside inner loops.
+
+``--hlo`` additionally compiles each single-host program and attaches
+``launch/hlocost.py``'s loop-aware FLOPs / HBM bytes plus XLA's own
+``cost_analysis`` numbers to the report. ``--out FILE`` writes the full
+``ProgramReport`` JSON (the CI artifact). Exit code 1 on any violation.
+
+On CPU the fused path is audited in Pallas interpret mode (same jaxpr
+structure, ``pallas_call`` primitive included) — pass ``--no-interpret``
+on a real accelerator.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import ProgramReport, audit
+from repro.core.engine import ENGINE_MODES, GramEngine
+from repro.core.kernels import KernelSpec
+from repro.core.memory import engine_footprint_bytes
+
+#: jaxpr-level liveness double-counts what XLA fuses (see
+#: ProgramReport.check_memory) — 4x absorbs the elementwise-chain
+#: inflation on every mode without hiding a resident Gram block, which
+#: overshoots by x(rows / tile_rows) >> 4.
+MEMORY_SLACK = 4.0
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def mode_budget(n: int, d: int, n_landmarks: int, c: int, mode: str,
+                tile_rows: int, *, pallas: bool) -> float:
+    """The planner's priced per-iteration footprint for one audit shape.
+
+    The Pallas path (fused mode on an accelerator, or interpret mode here)
+    pads rows/landmarks/features up to its 128-multiple block grid before
+    dispatch, so its *traced* intermediates are the padded arrays — price
+    the budget at the padded shape or the audit would compare apples to
+    oranges."""
+    if pallas:
+        n = _round_up(n, 128)
+        d = _round_up(d, 128)
+        n_landmarks = _round_up(n_landmarks, 128)
+    return engine_footprint_bytes(
+        n, 1, c, 1, s=n_landmarks / n, d=d, mode=mode, tile_rows=tile_rows)
+
+
+def _attach_hlo(report: ProgramReport, fn, *args, **kwargs) -> None:
+    from repro.launch.hlocost import compiled_cost_terms
+    try:
+        report.hlo = compiled_cost_terms(fn, *args, **kwargs)
+    except Exception as e:   # pragma: no cover - backend-dependent
+        report.hlo = {"error": repr(e)}
+
+
+def audit_engine_modes(*, n: int, d: int, n_landmarks: int, c: int,
+                       tile_rows: int, interpret: bool,
+                       with_hlo: bool) -> list:
+    """(report, violations) per GramEngine mode on the single-host inner
+    loop — no mesh, so ANY collective in the trace is a violation."""
+    from repro.core import kkmeans
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    l_idx = jnp.arange(n_landmarks, dtype=jnp.int32)
+    diag = spec.diag(x)
+    labels0 = jnp.zeros((n,), jnp.int32)
+    out = []
+    for mode in ENGINE_MODES:
+        engine = GramEngine(mode=mode, tile_rows=tile_rows,
+                            interpret=interpret)
+        uses_pallas = engine._use_pallas(spec)
+        report = audit(kkmeans.kkmeans_fit, x, l_idx, diag, labels0,
+                       spec=spec, n_clusters=c, max_iters=10, engine=engine,
+                       name=f"kkmeans_fit[{mode}]")
+        budget = mode_budget(n, d, n_landmarks, c, mode, tile_rows,
+                             pallas=uses_pallas and mode == "fused")
+        violations = []
+        violations += report.check_pallas(mode == "fused" and uses_pallas)
+        violations += report.check_memory(budget, slack=MEMORY_SLACK)
+        if mode != "materialize":
+            # the residency promise: nothing the size of the full Gram
+            # block may ever be materialized (pad-aware for Pallas).
+            rows = _round_up(n, 128) if uses_pallas else n
+            cols = _round_up(n_landmarks, 128) if uses_pallas \
+                else n_landmarks
+            violations += report.check_max_intermediate(4 * rows * cols)
+        violations += report.check_host_sync()
+        if report.collectives_per_iteration or report.collectives_outside:
+            violations.append(f"{report.name}: collectives in a "
+                              f"single-host program")
+        if with_hlo:
+            _attach_hlo(report, kkmeans.kkmeans_fit, x, l_idx, diag,
+                        labels0, spec=spec, n_clusters=c, max_iters=10,
+                        engine=engine)
+        out.append((report, violations))
+    return out
+
+
+def audit_mesh_path(*, n: int, d: int, n_landmarks: int, c: int,
+                    with_model_axis: bool) -> tuple:
+    """(report, violations) for ``distributed_kkmeans_fit`` on a 1x1 mesh
+    — the jaxpr (and therefore the bill) is the same program every device
+    runs, whatever the axis sizes."""
+    from repro.distributed import inner as dinner
+    from repro.distributed.compat import make_mesh
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    mesh = make_mesh((1, 1), ("data", "model")) if with_model_axis \
+        else make_mesh((1,), ("data",))
+    cfg = dinner.DistributedInnerConfig(
+        n_clusters=c, kernel=spec, max_iters=10,
+        engine=GramEngine(mode="materialize"),
+        col_axis="model" if with_model_axis else None)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    landmarks = x[:n_landmarks]
+    l_idx = jnp.arange(n_landmarks, dtype=jnp.int32)
+    diag = spec.diag(x)
+    u0 = jnp.zeros((n,), jnp.int32)
+    tag = "data x model" if with_model_axis else "data"
+    report = audit(
+        lambda *a: dinner.distributed_kkmeans_fit(mesh, *a, cfg=cfg),
+        x, landmarks, l_idx, diag, u0, name=f"distributed_inner[{tag}]")
+    bill = dinner.collectives_per_iteration(cfg)
+    # the fixpoint epilogue re-runs one stats pass minus the convergence
+    # psum — the exact count PR 6's analytic x(n_iter+1) got wrong.
+    violations = report.check_collectives(
+        bill, {"psum": bill["psum"] - 1, "allgather": bill["allgather"]})
+    violations += report.check_host_sync()
+    if len(report.loops) != 1:
+        violations.append(f"{report.name}: expected exactly one inner "
+                          f"while loop, found {len(report.loops)}")
+    return report, violations
+
+
+def audit_embed_path(*, n: int, d: int, m: int, c: int) -> tuple:
+    """(report, violations) for the embedded-space Lloyd mesh program."""
+    from repro.core.minibatch import MiniBatchConfig
+    from repro.distributed import embed as dembed
+    from repro.distributed.compat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    cfg = MiniBatchConfig(n_clusters=c, n_batches=1,
+                          kernel=KernelSpec(name="rbf", gamma=0.5),
+                          method="rff", embed_dim=m, max_inner_iters=10)
+    km = dembed.DistributedEmbedKMeans(mesh, cfg)
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (n, m), jnp.float32)
+    wgt = jnp.ones((n,), jnp.float32)
+    centroids0 = z[:c]
+    mask0 = jnp.ones((c,), bool)
+    report = audit(km._lloyd_fn, z, wgt, centroids0, mask0,
+                   name="embed_lloyd")
+    bill = dembed.collectives_per_iteration(c, m)
+    violations = report.check_collectives({"psum": bill["psum"]},
+                                          {"psum": bill["final_psum"]})
+    violations += report.check_host_sync()
+    return report, violations
+
+
+def audit_predict_path(*, n: int, d: int, c: int) -> tuple:
+    """(report, violations) for serving ``predict`` — a pure map: no
+    collectives, no loops, no host syncs."""
+    from repro.core.minibatch import predict
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    medoids = x[:c]
+    report = audit(predict, x, medoids, spec.diag(medoids), spec=spec,
+                   name="serving_predict")
+    violations = report.check_host_sync()
+    if report.primitive_counts.get("while", 0):
+        violations.append(f"{report.name}: serving predict must be "
+                          f"loop-free")
+    if report.collectives_per_iteration or report.collectives_outside:
+        violations.append(f"{report.name}: collectives in the serving "
+                          f"path")
+    return report, violations
+
+
+def run_audits(*, n: int, d: int, n_landmarks: int, c: int, m: int,
+               tile_rows: int, interpret: bool, with_hlo: bool) -> list:
+    results = audit_engine_modes(
+        n=n, d=d, n_landmarks=n_landmarks, c=c, tile_rows=tile_rows,
+        interpret=interpret, with_hlo=with_hlo)
+    results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
+                                   with_model_axis=True))
+    results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
+                                   with_model_axis=False))
+    results.append(audit_embed_path(n=n, d=d, m=m, c=c))
+    results.append(audit_predict_path(n=n, d=d, c=c))
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.audit",
+        description="static audit of every hot path (no execution); "
+                    "exit 1 on any violated invariant")
+    # defaults keep the padded landmark axis (Pallas pads to 128-multiples)
+    # strictly wider than the padded feature axis, so a feature panel can
+    # never alias the Gram-block residency threshold.
+    ap.add_argument("--n", type=int, default=512, help="audit batch rows")
+    ap.add_argument("--d", type=int, default=16, help="feature dim")
+    ap.add_argument("--landmarks", type=int, default=256)
+    ap.add_argument("--clusters", type=int, default=8)
+    ap.add_argument("--embed-dim", type=int, default=32)
+    ap.add_argument("--tile-rows", type=int, default=64)
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="audit the real Pallas lowering (accelerator)")
+    ap.add_argument("--hlo", action="store_true",
+                    help="compile single-host programs and attach "
+                         "hlocost FLOPs/bytes to the reports")
+    ap.add_argument("--out", default=None,
+                    help="write the ProgramReport JSON here (CI artifact)")
+    args = ap.parse_args(argv)
+
+    results = run_audits(
+        n=args.n, d=args.d, n_landmarks=args.landmarks, c=args.clusters,
+        m=args.embed_dim, tile_rows=args.tile_rows,
+        interpret=not args.no_interpret, with_hlo=args.hlo)
+
+    all_violations = []
+    for report, violations in results:
+        status = "FAIL" if violations else "ok"
+        per = report.collectives_per_iteration
+        print(f"[{status}] {report.name}: peak_live="
+              f"{report.peak_live_bytes:,}B largest="
+              f"{report.largest_intermediate_bytes:,}B "
+              f"pallas={report.pallas_calls} "
+              f"per-iter={per or '{}'} "
+              f"outside={report.collectives_outside or '{}'}")
+        for v in violations:
+            print(f"       {v}")
+        all_violations += violations
+
+    if args.out:
+        payload = {
+            "ok": not all_violations,
+            "violations": all_violations,
+            "reports": [r.to_dict() for r, _ in results],
+        }
+        with open(args.out, "w") as fh:
+            json.dump(payload, fh, indent=2, default=str)
+        print(f"report written to {args.out}")
+
+    if all_violations:
+        print(f"{len(all_violations)} violation(s)")
+        return 1
+    print(f"all {len(results)} program audits clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 import re
 
+import jax
+
 _DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
              "s64": 8, "u64": 8, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
              "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
@@ -420,3 +422,59 @@ def analyze(hlo: str) -> Cost:
     if entry is None:
         return Cost()
     return comp_cost(entry, False)
+
+
+# ---------------------------------------------------------------------------
+# compiled-program helpers (repro.analysis integration)
+#
+# The static auditor wants XLA's own cost/memory numbers NEXT TO the
+# loop-aware text analysis above, in one dict. Getting them portably is the
+# same compat minefield PR 1 patched in launch/dryrun*: the pinned JAX's
+# ``compiled.cost_analysis()`` returns a one-element LIST of dicts (newer
+# return the dict), and on CPU ``memory_analysis()`` can return None, raise,
+# or lack ``peak_memory_in_bytes`` — every attribute must be guarded.
+
+
+def xla_cost(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a flat dict, or ``{}``
+    when the backend provides none (list-vs-dict and None-safe)."""
+    try:
+        from repro.distributed.compat import cost_analysis
+        return cost_analysis(compiled)
+    except Exception:
+        return {}
+
+
+def xla_memory(compiled) -> dict:
+    """``compiled.memory_analysis()`` as the dryrun report dict, all-None
+    when the backend has no memory analysis (CPU)."""
+    empty = {"bytes_per_device": None, "argument_bytes": None,
+             "output_bytes": None, "peak_bytes": None}
+    try:
+        from repro.distributed.compat import memory_stats
+        if compiled.memory_analysis() is None:
+            return empty
+        return memory_stats(compiled)
+    except Exception:
+        return empty
+
+
+def compiled_cost_terms(fn, *args, **kwargs) -> dict:
+    """Compile ``fn(*args, **kwargs)`` and return every static cost term in
+    one dict: XLA's ``cost_analysis`` FLOPs/bytes (once-per-while-body, see
+    module docstring), the compat-guarded memory analysis, and this
+    module's loop-aware re-derivation over the HLO text. kwargs are closed
+    over, so static (hashable) config objects pass through untouched."""
+    compiled = jax.jit(lambda *a: fn(*a, **kwargs)).lower(*args).compile()
+    xla = xla_cost(compiled)
+    mem = xla_memory(compiled)
+    loop = analyze(compiled.as_text())
+    return {
+        "xla_flops": xla.get("flops"),
+        "xla_bytes_accessed": xla.get("bytes accessed"),
+        "memory": mem,
+        "flops": loop.flops,
+        "hbm_bytes": loop.bytes,
+        "coll_bytes": loop.coll_bytes,
+        "coll_counts": {k: v for k, v in loop.coll_counts.items() if v},
+    }

@@ -24,6 +24,14 @@ flushing only at batch boundaries and on ``close``.
 
 Nothing in this module imports jax at call time beyond ``device_get`` in
 the drain — recorder hooks must stay cheap enough to leave on.
+
+The ``collectives/*`` counters the mesh fit loops emit are derived from
+the STATIC audit (``repro.analysis.collective_bill`` over the traced
+inner program, cached per batch shape): per-iteration while-body counts x
+realized ``n_iter`` + the audited outside-the-loop epilogue. If that
+trace-time audit ever fails, the loops fall back to the analytic
+``collectives_per_iteration`` bill and emit an ``audit_error`` event with
+the exception — billing must never take a fit down.
 """
 from __future__ import annotations
 

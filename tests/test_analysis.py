@@ -1,0 +1,445 @@
+"""repro.analysis: the auditor's booby-trap suite + lint round-trips.
+
+Every static check must FIRE on an intentionally-bad program (a hidden
+psum, a materialized Gram block in tiled mode, a jnp-only "fused" step, a
+host callback in a loop, a reused key) and stay silent on the shipped hot
+paths — the contract tests at the bottom pin the audited invariants
+across engine modes and mesh axes.
+"""
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (AuditError, ProgramReport, audit,
+                            collective_bill)
+from repro.analysis.lint import (Finding, apply_waivers, lint_paths,
+                                 load_waivers)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# auditor mechanics
+
+
+def test_audit_counts_primitives_and_bytes():
+    def f(a, b):
+        return jnp.dot(a, b) + 1.0
+
+    a = jnp.ones((8, 4), jnp.float32)
+    b = jnp.ones((4, 2), jnp.float32)
+    r = audit(f, a, b)
+    assert r.primitive_counts.get("dot_general", 0) == 1
+    assert r.input_bytes == (32 + 8) * 4
+    assert r.output_bytes == 16 * 4
+    assert r.pallas_calls == 0
+    assert not r.loops
+
+
+def test_audit_liveness_peak_vs_sum():
+    """A big intermediate that dies early must not stack with a later one:
+    peak < total allocated."""
+    def f(x):
+        big = jnp.outer(x, x)            # [n, n], dies after the sum
+        s = jnp.sum(big)
+        big2 = jnp.outer(x, x) * 2.0     # second [n, n]
+        return s + jnp.sum(big2)
+
+    x = jnp.ones((64,), jnp.float32)
+    r = audit(f, x)
+    one_block = 64 * 64 * 4
+    assert r.largest_intermediate_bytes == one_block
+    # liveness: the two [n, n] blocks never coexist.
+    assert r.peak_live_bytes < 2 * one_block + r.input_bytes
+
+
+def test_audit_scan_multiplier():
+    """Collectives inside a scan body are multiplied by the static trip
+    count — the hidden-psum-in-a-scan booby-trap."""
+    from repro.distributed.compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("data",))
+    length = 7
+
+    def body(x):
+        def step(c, xi):
+            return c + jax.lax.psum(xi, "data"), None
+        out, _ = jax.lax.scan(step, 0.0, x)
+        return out
+
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                  check_vma=False)
+    r = audit(f, jnp.ones((length,), jnp.float32))
+    # scan is static: the psum count is exact, and it is NOT a while loop,
+    # so it lands in the outside (unconditional) bill.
+    assert r.collectives_outside.get("psum") == length
+    assert not r.loops
+    # a bill that promised zero psums must be rejected
+    violations = r.check_collectives({}, {"psum": 0})
+    assert violations and "psum" in violations[0]
+
+
+def test_audit_hidden_psum_in_while_body():
+    """A while body smuggling an extra psum breaks the per-iteration bill."""
+    from repro.distributed.compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("data",))
+
+    def body(x):
+        def cond(c):
+            i, _ = c
+            return i < 3
+
+        def step(c):
+            i, a = c
+            a = jax.lax.psum(a, "data")          # billed
+            a = a + jax.lax.psum(a * 2, "data")  # smuggled
+            return i + 1, a
+
+        return jax.lax.while_loop(cond, step, (0, jnp.sum(x)))[1]
+
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                  check_vma=False)
+    r = audit(f, jnp.ones((4,), jnp.float32))
+    assert len(r.loops) == 1
+    assert r.collectives_per_iteration == {"psum": 2}
+    violations = r.check_collectives({"psum": 1})
+    assert violations, "the smuggled psum must be caught"
+    with pytest.raises(AuditError):
+        r.verify(violations)
+
+
+def test_audit_unbilled_collective_kind():
+    """A collective kind the analytic bill has no entry for is flagged."""
+    from repro.distributed.compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("data",))
+
+    def body(x):
+        def cond(c):
+            return c[0] < 2
+
+        def step(c):
+            i, a = c
+            g = jax.lax.all_gather(a, "data")
+            return i + 1, jnp.sum(g)
+
+        return jax.lax.while_loop(cond, step, (0, jnp.sum(x)))[1]
+
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                  check_vma=False)
+    r = audit(f, jnp.ones((4,), jnp.float32))
+    violations = r.check_collectives({"psum": 0})
+    assert any("unbilled" in v and "all_gather" in v for v in violations)
+
+
+def test_audit_oversized_intermediate_fires():
+    """The tiled residency booby-trap: materializing the full [n, L] Gram
+    block is a static failure, no runtime spy needed."""
+    n, L = 128, 64
+
+    def bad_tiled_step(x, lm):
+        k = jnp.exp(-jnp.sum((x[:, None, :] - lm[None, :, :]) ** 2, -1))
+        return jnp.sum(k, axis=1)        # full [n, L] materialized
+
+    x = jnp.ones((n, 4), jnp.float32)
+    lm = jnp.ones((L, 4), jnp.float32)
+    r = audit(bad_tiled_step, x, lm)
+    assert r.largest_intermediate_bytes >= n * L * 4
+    violations = r.check_max_intermediate(n * L * 4)
+    assert violations
+    with pytest.raises(AuditError):
+        r.verify(violations)
+
+
+def test_audit_jnp_only_fused_step_fires():
+    """The PR 5 dead-kernel bug: a 'fused' step that never dispatches a
+    pallas_call is rejected before anything runs."""
+    def fake_fused(x, lm, h):
+        return jnp.exp(-((x @ lm.T) ** 2)) @ h   # pure jnp, no kernel
+
+    x = jnp.ones((32, 4), jnp.float32)
+    lm = jnp.ones((16, 4), jnp.float32)
+    h = jnp.ones((16, 3), jnp.float32)
+    r = audit(fake_fused, x, lm, h)
+    assert r.pallas_calls == 0
+    assert r.check_pallas(expected=True)
+
+    # and the converse: a real Pallas dispatch where none was promised
+    from repro.kernels import ops as kops
+    r2 = audit(lambda *a: kops.gram_matvec(*a, kind="rbf", gamma=1.0,
+                                           interpret=True), x, lm, h)
+    assert r2.pallas_calls >= 1
+    assert r2.check_pallas(expected=False)
+    assert not r2.check_pallas(expected=True)
+
+
+def test_audit_host_callback_in_loop_fires():
+    def bad(x):
+        def cond(c):
+            return c[0] < 3
+
+        def step(c):
+            i, a = c
+            a = a + jax.pure_callback(
+                lambda v: np.asarray(v, np.float32),
+                jax.ShapeDtypeStruct((), jnp.float32), jnp.sum(a))
+            return i + 1, a
+
+        return jax.lax.while_loop(cond, step, (0, x))[1]
+
+    r = audit(bad, jnp.ones((4,), jnp.float32))
+    assert r.host_callbacks_in_loop.get("pure_callback") == 1
+    assert r.check_host_sync()
+    # same callback outside any loop: recorded but not a violation
+    r2 = audit(lambda x: jax.pure_callback(
+        lambda v: np.asarray(v, np.float32),
+        jax.ShapeDtypeStruct((), jnp.float32), jnp.sum(x)),
+        jnp.ones((4,), jnp.float32))
+    assert r2.host_callbacks.get("pure_callback") == 1
+    assert not r2.check_host_sync()
+
+
+def test_collective_bill_shape():
+    from repro.distributed.compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((1,), ("data",))
+
+    def body(x):
+        def cond(c):
+            return c[0] < 2
+
+        def step(c):
+            i, a = c
+            return i + 1, jax.lax.psum(a, "data")
+
+        out = jax.lax.while_loop(cond, step, (0, jnp.sum(x)))[1]
+        return jax.lax.psum(out, "data")     # epilogue
+
+    f = shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P(),
+                  check_vma=False)
+    bill = collective_bill(f, jnp.ones((4,), jnp.float32))
+    assert bill["per_iteration"] == {"psum": 1}
+    assert bill["outside"] == {"psum": 1}
+    assert bill["per_iteration_bytes"]["psum"] == 4
+    assert bill["outside_bytes"]["psum"] == 4
+
+
+def test_report_totals_and_json_round_trip():
+    r = ProgramReport(name="p")
+    r.loops.append(
+        __import__("repro.analysis", fromlist=["LoopReport"]).LoopReport(
+            path="while", collectives={"psum": 3, "all_gather": 1}))
+    r.collectives_outside = {"psum": 2}
+    assert r.collective_totals(10) == {"psum": 32, "all_gather": 10}
+    d = json.loads(json.dumps(r.to_dict()))
+    assert d["collectives_per_iteration"] == {"psum": 3, "all_gather": 1}
+
+
+# ---------------------------------------------------------------------------
+# lint: each rule fires on a fixture, waivers round-trip
+
+
+def _lint_src(tmp_path, source, fname="mod.py"):
+    p = tmp_path / fname
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return lint_paths([str(tmp_path)])
+
+
+def test_lint_rk001_key_reuse(tmp_path):
+    findings = _lint_src(tmp_path, """
+        import jax
+
+        def sampler(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))    # reuse!
+            return a + b
+    """)
+    assert [f.rule for f in findings] == ["RK001"]
+    assert "key `key`" in findings[0].message
+
+    clean = _lint_src(tmp_path, """
+        import jax
+
+        def sampler(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (3,))
+            b = jax.random.uniform(k2, (3,))
+            return a + b
+
+        def folded(key, i):
+            a = jax.random.normal(jax.random.fold_in(key, 0), (3,))
+            b = jax.random.normal(jax.random.fold_in(key, 1), (3,))
+            return a + b
+    """, fname="clean.py")
+    assert not [f for f in clean if f.rule == "RK001"
+                and f.path.endswith("clean.py")]
+
+
+def test_lint_rk002_tracer_leaks(tmp_path):
+    findings = _lint_src(tmp_path, """
+        import jax
+        import numpy as np
+        from functools import partial
+
+        @jax.jit
+        def leaky(x):
+            return float(x.sum())
+
+        @partial(jax.jit, static_argnames=("n",))
+        def fine(x, *, n):
+            import math
+            return x * int(math.log(n))     # n is static: trace-time int
+
+        @jax.jit
+        def leaky2(x):
+            return np.asarray(x) + x.item()
+    """)
+    rk2 = [f for f in findings if f.rule == "RK002"]
+    assert {f.symbol for f in rk2} == {"leaky", "leaky2"}
+    assert len([f for f in rk2 if f.symbol == "leaky2"]) == 2
+
+
+def test_lint_rk003_dead_kernel(tmp_path):
+    (tmp_path / "kernels").mkdir()
+    (tmp_path / "kernels" / "dead.py").write_text(textwrap.dedent("""
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def dead_pallas(x):
+            return pl.pallas_call(_kernel, out_shape=x)(x)
+    """))
+    (tmp_path / "kernels" / "live.py").write_text(textwrap.dedent("""
+        from jax.experimental import pallas as pl
+
+        def live_pallas(x):
+            return pl.pallas_call(lambda i, o: None, out_shape=x)(x)
+    """))
+    (tmp_path / "ops.py").write_text(
+        "from kernels.live import live_pallas\n")
+    findings = lint_paths([str(tmp_path)])
+    rk3 = [f for f in findings if f.rule == "RK003"]
+    assert [f.symbol for f in rk3] == ["dead_pallas"]
+
+
+def test_lint_rk004_unhashable_static(tmp_path):
+    findings = _lint_src(tmp_path, """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("shape",))
+        def bad(x, *, shape=[1, 2]):
+            return x.reshape(shape)
+
+        @partial(jax.jit, static_argnums=(1,))
+        def bad2(x, opts={}):
+            return x
+
+        @partial(jax.jit, static_argnames=("shape",))
+        def good(x, *, shape=(1, 2)):
+            return x.reshape(shape)
+    """)
+    rk4 = [f for f in findings if f.rule == "RK004"]
+    assert {f.symbol for f in rk4} == {"bad", "bad2"}
+
+
+def test_waiver_round_trip(tmp_path):
+    f1 = Finding("RK003", "src/kernels/dead.py", 7, "dead_pallas", "dead")
+    f2 = Finding("RK001", "src/x.py", 3, "g", "reuse")
+    wpath = tmp_path / "waivers.json"
+    wpath.write_text(json.dumps([
+        {"rule": "RK003", "path": "kernels/dead.py",
+         "symbol": "dead_pallas", "reason": "staged for PR 8 dispatch"},
+        {"rule": "RK002", "path": "never/hit.py", "reason": "stale"},
+    ]))
+    waivers = load_waivers(str(wpath))
+    active, waived, unused = apply_waivers([f1, f2], waivers)
+    assert [f.rule for f in active] == ["RK001"]
+    assert [f.rule for f in waived] == ["RK003"]
+    assert [w.rule for w in unused] == ["RK002"]
+
+    # a waiver without a reason is rejected outright
+    wpath.write_text(json.dumps([{"rule": "RK001", "path": "x.py"}]))
+    with pytest.raises(ValueError, match="reason"):
+        load_waivers(str(wpath))
+
+
+def test_lint_cli_green_on_shipped_tree():
+    """The gate the CI job enforces: python -m repro.analysis exits 0."""
+    from repro.analysis.lint import main
+    assert main([]) == 0
+
+
+# ---------------------------------------------------------------------------
+# contract tests: the shipped hot paths, engine x mesh
+
+
+@pytest.mark.parametrize("mode", ["materialize", "fused", "tiled"])
+def test_contract_engine_modes(mode):
+    from repro.launch.audit import audit_engine_modes
+
+    results = audit_engine_modes(n=256, d=8, n_landmarks=256, c=4,
+                                 tile_rows=64, interpret=True,
+                                 with_hlo=False)
+    by_name = {r.name: (r, v) for r, v in results}
+    r, violations = by_name[f"kkmeans_fit[{mode}]"]
+    assert violations == []
+    assert (r.pallas_calls > 0) == (mode == "fused")
+    if mode == "tiled":
+        assert r.largest_intermediate_bytes < 256 * 256 * 4
+
+
+@pytest.mark.parametrize("with_model_axis", [False, True])
+def test_contract_mesh_path(with_model_axis):
+    """Static per-iteration counts == the analytic bill, and the fixpoint
+    epilogue is one (convergence) psum short of a full iteration."""
+    from repro.launch.audit import audit_mesh_path
+
+    r, violations = audit_mesh_path(n=64, d=4, n_landmarks=16, c=4,
+                                    with_model_axis=with_model_axis)
+    assert violations == []
+    per, out = r.collectives_per_iteration, r.collectives_outside
+    assert per["psum"] == (5 if with_model_axis else 3)
+    assert per["all_gather"] == 1
+    assert out["psum"] == per["psum"] - 1
+    assert out["all_gather"] == 1
+
+
+def test_contract_embed_and_predict():
+    from repro.launch.audit import audit_embed_path, audit_predict_path
+
+    r, violations = audit_embed_path(n=64, d=4, m=16, c=4)
+    assert violations == []
+    assert r.collectives_per_iteration == {"psum": 4}
+    assert r.collectives_outside == {"psum": 2}
+
+    r2, violations2 = audit_predict_path(n=64, d=4, c=4)
+    assert violations2 == []
+    assert not r2.loops and not r2.host_callbacks
+
+
+def test_audit_cli_smoke(tmp_path):
+    """The CI smoke: full CLI over every path, report artifact written."""
+    from repro.launch.audit import main
+
+    out = tmp_path / "report.json"
+    assert main(["--n", "256", "--d", "8", "--landmarks", "256",
+                 "--clusters", "4", "--tile-rows", "64",
+                 "--out", str(out)]) == 0
+    payload = json.loads(out.read_text())
+    assert payload["ok"] and not payload["violations"]
+    assert len(payload["reports"]) == 7
+    names = {r["name"] for r in payload["reports"]}
+    assert "kkmeans_fit[fused]" in names
+    assert "serving_predict" in names

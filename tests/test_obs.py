@@ -160,7 +160,8 @@ def test_recorder_is_jit_safe_embedded(tmp_path):
 
 def test_distributed_exact_recorder_identity(tmp_path):
     """Mesh path: recorder on vs off — identical medoids, and the log
-    carries the analytic collective bill + straggler timing events."""
+    carries the statically-audited collective bill (analytic == static ==
+    recorded) + straggler timing events."""
     from repro.distributed.mesh import make_test_mesh
     from repro.distributed.outer import DistributedMiniBatchKMeans
 
@@ -172,20 +173,33 @@ def test_distributed_exact_recorder_identity(tmp_path):
     res_off = DistributedMiniBatchKMeans(mesh, cfg).fit(list(batches))
     path = str(tmp_path / "dist.jsonl")
     with JsonlRecorder(path) as rec:
-        res_on = DistributedMiniBatchKMeans(mesh, cfg,
-                                            recorder=rec).fit(list(batches))
+        km_on = DistributedMiniBatchKMeans(mesh, cfg, recorder=rec)
+        res_on = km_on.fit(list(batches))
 
     np.testing.assert_array_equal(np.asarray(res_off.state.medoids),
                                   np.asarray(res_on.state.medoids))
 
     psums = _events(path, kind="counter", name="collectives/psum")
-    assert len(psums) == 2
-    # bill = per-iteration constant x (n_iter + 1 fixpoint pass)
+    gathers = _events(path, kind="counter", name="collectives/allgather")
+    assert len(psums) == 2 and len(gathers) == 2
+
+    # analytic == static: the audited per-iteration while-body counts must
+    # equal the hand-derived bill exactly.
     from repro.distributed.inner import collectives_per_iteration
-    km = DistributedMiniBatchKMeans(mesh, cfg)
-    bill = collectives_per_iteration(km.inner_cfg)
-    assert psums[0]["inc"] == bill["psum"] * (res_on.history[0].inner_iters
-                                              + 1)
+    analytic = collectives_per_iteration(km_on.inner_cfg)
+    (static,) = km_on._bill_cache.values()   # both batches share one shape
+    per, out = static["per_iteration"], static["outside"]
+    assert per["psum"] == analytic["psum"]
+    assert per["all_gather"] == analytic["allgather"]
+
+    # static == recorded: per-iteration x n_iter + the audited epilogue.
+    n0 = res_on.history[0].inner_iters
+    assert psums[0]["inc"] == per["psum"] * n0 + out["psum"]
+    assert gathers[0]["inc"] == per["all_gather"] * n0 + out["all_gather"]
+    # the fixpoint pass has no convergence psum — PR 6's analytic
+    # `bill x (n_iter + 1)` overcounted by exactly one psum per batch.
+    assert psums[0]["inc"] == analytic["psum"] * (n0 + 1) - 1
+
     timings = _events(path, kind="event", name="batch_timing")
     assert len(timings) == 2
     assert str(jax.process_index()) in timings[0]["timings"]
