@@ -1,6 +1,7 @@
 # The paper's primary contribution: approximate distributed mini-batch
 # kernel k-means (Ferrarotti, Decherchi & Rocchia, CS.DC 2017).
-from .engine import (GramEngine, assign_from_stats, engine_stats,
+from .engine import (GramEngine, ReducePlan, assign_from_stats,
+                     engine_stats, engine_stats_raw, finalize_stats,
                      resolve_engine)
 from .kernels import KernelSpec, gamma_from_dmax, get_kernel, sq_distances
 from .kkmeans import (InnerResult, kkmeans_fit, kkmeans_fit_full,
@@ -11,14 +12,15 @@ from .landmarks import (choose_landmarks, num_landmarks,
 from .memory import (MachineSpec, Plan, b_min, b_min_paper,
                      embed_footprint_bytes, engine_footprint_bytes,
                      footprint_bytes, host_staging_bytes, plan,
-                     predicted_accuracy, selector_footprint_bytes,
-                     sketch_footprint_bytes)
+                     predicted_accuracy, s_step_state_bytes,
+                     selector_footprint_bytes, sketch_footprint_bytes)
 from .metrics import clustering_accuracy, elbow, mean_displacement, nmi
 from .minibatch import (FitResult, GlobalState, MiniBatchConfig, fit,
                         fit_dataset, predict)
 
 __all__ = [
-    "GramEngine", "assign_from_stats", "engine_stats", "resolve_engine",
+    "GramEngine", "ReducePlan", "assign_from_stats", "engine_stats",
+    "engine_stats_raw", "finalize_stats", "resolve_engine",
     "KernelSpec", "gamma_from_dmax", "get_kernel", "sq_distances",
     "InnerResult", "kkmeans_fit", "kkmeans_fit_full", "kkmeans_fit_gram",
     "medoid_indices",
@@ -26,7 +28,7 @@ __all__ = [
     "choose_landmarks", "num_landmarks", "select_landmark_indices",
     "MachineSpec", "Plan", "b_min", "b_min_paper", "embed_footprint_bytes",
     "engine_footprint_bytes", "footprint_bytes", "host_staging_bytes",
-    "plan", "predicted_accuracy",
+    "plan", "predicted_accuracy", "s_step_state_bytes",
     "selector_footprint_bytes", "sketch_footprint_bytes",
     "clustering_accuracy", "elbow", "mean_displacement", "nmi",
     "FitResult", "GlobalState", "MiniBatchConfig", "fit", "fit_dataset",

@@ -33,11 +33,14 @@ prices all three and names the cheapest feasible one.
 
 The single-host inner loop (core.kkmeans) and the mesh inner loop
 (distributed.inner, inside shard_map) run literally the same stats code
-(``engine_stats``): the mesh passes its psum collectives through the
-``reduce_*`` hooks, the single host passes nothing. The argmin authority is
-``assign_from_stats`` — jnp.argmin, FIRST (lowest) cluster index on ties —
-and the Pallas kernel implements the identical rule, so engine choice never
-changes labels.
+(``engine_stats``): the mesh passes ONE batched ``ReducePlan`` that reduces
+the whole raw payload (counts, K@H, g partials) in a single fused
+collective, the single host passes nothing. The raw/finalize split
+(``engine_stats_raw`` / ``finalize_stats``) is public so the s-step
+communication-avoiding loop can do delta bookkeeping on the un-normalized
+partials between syncs. The argmin authority is ``assign_from_stats`` —
+jnp.argmin, FIRST (lowest) cluster index on ties — and the Pallas kernel
+implements the identical rule, so engine choice never changes labels.
 """
 from __future__ import annotations
 
@@ -70,18 +73,42 @@ class GramOp(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
+class ReducePlan:
+    """The mesh's ONE batched cross-device reduction per stats pass.
+
+    ``fn`` receives the raw partial payload — counts [C], f_raw [rows, C]
+    (the un-normalized K@H partial), g_raw [C] — and returns the reduced
+    triple. Packing all three into a single flat psum is the caller's job
+    (``distributed.inner`` concatenates them into one [rows+2, C] buffer),
+    which is what turns "exactly one psum per sync" into a statically
+    provable property (``launch.audit``). ``None`` in ``engine_stats``
+    means single host: no reduction at all.
+    """
+    fn: Callable
+
+    def __call__(self, counts: Array, f_raw: Array, g_raw: Array):
+        return self.fn(counts, f_raw, g_raw)
+
+
+@dataclasses.dataclass(frozen=True)
 class GramEngine:
     """Hashable (jit-static) strategy handle for the exact inner loop.
 
-    mode:      Gram residency — "materialize" | "fused" | "tiled".
-    tile_rows: row-panel height of the tiled mode (bounds its peak HBM).
-    pallas:    fused-mode dispatch — "auto" (TPU only) | "always" | "never".
-    interpret: run the Pallas kernel in interpret mode (CPU tests).
+    mode:          Gram residency — "materialize" | "fused" | "tiled".
+    tile_rows:     row-panel height of the tiled mode (bounds its peak HBM).
+    pallas:        fused-mode dispatch — "auto" (TPU only) | "always" | "never".
+    interpret:     run the Pallas kernel in interpret mode (CPU tests).
+    double_buffer: software-pipeline the tiled mode — build Gram panel
+                   i+1 while panel i is being contracted, so XLA's
+                   latency-hiding scheduler can overlap the build with the
+                   contraction (and, on the mesh, with in-flight
+                   collectives). Peak HBM holds two panels instead of one.
     """
     mode: str = "materialize"
     tile_rows: int = 256
     pallas: str = "auto"
     interpret: bool = False
+    double_buffer: bool = True
 
     def __post_init__(self):
         if self.mode not in ENGINE_MODES:
@@ -140,7 +167,8 @@ class GramEngine:
                 coef0=spec.coef0, degree=spec.degree,
                 interpret=self.interpret)
         if self.mode == "tiled":
-            return _tiled_matvec(spec, op.x, op.y, h, self.tile_rows)
+            return _tiled_matvec(spec, op.x, op.y, h, self.tile_rows,
+                                 double_buffer=self.double_buffer)
         # fused portable fallback: recompute the block, contract, drop it —
         # same math and shapes as materialize, HBM residency only transient.
         k = spec(op.x, op.y).astype(jnp.float32)
@@ -167,52 +195,89 @@ def resolve_engine(engine) -> GramEngine:
 
 
 def _tiled_matvec(spec, x: Array, y: Array, h: Array,
-                  tile_rows: int) -> Array:
+                  tile_rows: int, *, double_buffer: bool = True) -> Array:
     """Stream [bm, |L|] Gram panels: each panel is built, contracted against
-    h and dropped before the next one exists, so peak memory is one panel
-    plus the [rows, C] accumulator — never the full block."""
+    h and dropped, so peak memory is one panel (two when double-buffered)
+    plus the [rows, C] accumulator — never the full block.
+
+    With ``double_buffer`` the loop is software-pipelined: inside each scan
+    step the carried panel i is contracted while panel i+1 is built — the
+    two are data-independent, so the latency-hiding scheduler is free to
+    overlap the build with the contraction (and with any in-flight
+    collective the mesh loop has issued). Output is bit-identical either
+    way: the same panels are built and contracted in the same order.
+    """
     n, d = x.shape
     bm = min(tile_rows, n)
     n_pad = -(-n // bm) * bm
     xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
     panels = xp.reshape(n_pad // bm, bm, d)
 
-    def one(xt):
+    def build(xt):
         with jax.named_scope("obs:gram_tiled_panel"):
-            kt = spec(xt, y).astype(jnp.float32)
-            return jax.lax.dot_general(kt, h, (((1,), (0,)), ((), ())),
-                                       preferred_element_type=jnp.float32)
+            return spec(xt, y).astype(jnp.float32)
 
-    f = jax.lax.map(one, panels).reshape(n_pad, h.shape[1])
-    return f[:n]
+    def contract(kt):
+        return jax.lax.dot_general(kt, h, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    if not double_buffer or panels.shape[0] == 1:
+        f = jax.lax.map(lambda xt: contract(build(xt)), panels)
+        return f.reshape(n_pad, h.shape[1])[:n]
+
+    def step(kt, xt_next):
+        return build(xt_next), contract(kt)
+
+    k_last, outs = jax.lax.scan(step, build(panels[0]), panels[1:])
+    f = jnp.concatenate([outs, contract(k_last)[None]], axis=0)
+    return f.reshape(n_pad, h.shape[1])[:n]
 
 
-def _apply(reduce_fn: Optional[Callable], v: Array) -> Array:
-    return v if reduce_fn is None else reduce_fn(v)
+def engine_stats_raw(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
+                     labels_l_cols: Array, labels_l_rows: Array,
+                     n_clusters: int):
+    """Raw (pre-reduction, un-normalized) Eq.5-6/16-17 partials.
+
+    Returns (counts [C], f_raw [rows, C] = K_xl @ H, g_raw [C] =
+    diag(H^T K_ll H)) — exactly the payload a mesh shard must reduce
+    before ``finalize_stats`` normalizes. Public so the s-step loop can
+    keep local/remote partials separate between syncs.
+    """
+    with jax.named_scope(f"obs:engine_stats[{engine.mode}]"):
+        h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
+        counts = jnp.sum(h_cols, axis=0)
+        f_raw = engine.matvec(spec, op_xl, h_cols)
+        h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
+        t = engine.matvec(spec, op_ll, h_cols)                 # [Lrows, C]
+        g_raw = jnp.sum(h_rows * t, axis=0)
+        return counts, f_raw, g_raw
+
+
+def finalize_stats(counts: Array, f_raw: Array, g_raw: Array):
+    """Normalize reduced raw partials into (f, g, counts) — the empty-safe
+    divisions every caller shares (same ops, same order, as the historical
+    in-line normalization: bit-identical results)."""
+    safe = jnp.maximum(counts, 1.0)
+    return f_raw / safe[None, :], g_raw / (safe * safe), counts
 
 
 def engine_stats(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
                  labels_l_cols: Array, labels_l_rows: Array, n_clusters: int,
-                 *, reduce_counts=None, reduce_f=None, reduce_g=None):
+                 *, reduce: Optional[ReducePlan] = None):
     """Eq.5-6/16-17 stats — THE shared code path of the single-host and mesh
     inner loops.
 
     op_xl: batch rows x landmark cols; op_ll: landmark rows x landmark cols.
     labels_l_cols/rows: labels of the column/row landmark slices (identical
-    single-host). The ``reduce_*`` hooks are the mesh's psums (counts/f over
-    the landmark-column axis, g over rows+columns); None means single-host.
-    Returns (f [rows, C], g [C], counts [C]), all fp32.
+    single-host). ``reduce`` is the mesh's single batched collective
+    (``ReducePlan``), applied ONCE to the whole raw payload; None means
+    single-host. Returns (f [rows, C], g [C], counts [C]), all fp32.
     """
-    with jax.named_scope(f"obs:engine_stats[{engine.mode}]"):
-        h_cols = jax.nn.one_hot(labels_l_cols, n_clusters, dtype=jnp.float32)
-        counts = _apply(reduce_counts, jnp.sum(h_cols, axis=0))
-        safe = jnp.maximum(counts, 1.0)
-        f = _apply(reduce_f,
-                   engine.matvec(spec, op_xl, h_cols)) / safe[None, :]
-        h_rows = jax.nn.one_hot(labels_l_rows, n_clusters, dtype=jnp.float32)
-        t = engine.matvec(spec, op_ll, h_cols)                 # [Lrows, C]
-        g = _apply(reduce_g, jnp.sum(h_rows * t, axis=0)) / (safe * safe)
-        return f, g, counts
+    counts, f_raw, g_raw = engine_stats_raw(
+        engine, spec, op_xl, op_ll, labels_l_cols, labels_l_rows, n_clusters)
+    if reduce is not None:
+        counts, f_raw, g_raw = reduce(counts, f_raw, g_raw)
+    return finalize_stats(counts, f_raw, g_raw)
 
 
 def assign_from_stats(f: Array, g: Array,

@@ -198,10 +198,28 @@ def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     elif mode == "fused":
         k_term = 0.0
     elif mode == "tiled":
-        k_term = min(tile_rows, rows) * cols
+        # two panels live at once: the tiled matvec is double-buffered
+        # (GramEngine.double_buffer — panel i+1 builds while i contracts).
+        k_term = 2.0 * min(tile_rows, rows) * cols
     else:
         raise ValueError(f"unknown engine mode {mode!r}; have {ENGINE_MODES}")
     return q * (k_term + rows * c + nb + 2 * c + feat)
+
+
+def s_step_state_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
+                       s_step: int = 1) -> float:
+    """Per-device bytes of the s-step communication-avoiding carry
+    (``distributed.inner``, ``s_step > 1``): the replicated global-label
+    estimate u_full [N/B] (int32) each shard scatters its refinements
+    into, plus the frozen remote raw partials it holds between syncs
+    (F_rem [rows, C] + the counts/g remainders [2C]). ``s_step == 1``
+    carries nothing beyond the engine footprint — the stats the loop
+    carries then are the same arrays the engine already prices."""
+    if s_step <= 1:
+        return 0.0
+    nb = n / b
+    rows = nb / p
+    return q * (nb + rows * c + 2 * c)
 
 
 def embed_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
@@ -337,6 +355,11 @@ class Plan:
     engine: str = "materialize"
     engine_footprints: dict = dataclasses.field(default_factory=dict)
     tile_rows: int = 256
+    # -- s-step communication-avoiding depth (distributed.inner.s_step):
+    #    Lloyd refinements per global sync, and the replicated-carry bytes
+    #    that depth costs per device (s_step_state_bytes).
+    s_step: int = 1
+    s_step_footprint: float = 0.0
 
     def gram_engine(self):
         """The priced pick as a runnable ``GramEngine`` — mode AND the
@@ -448,6 +471,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
          selector: str = "uniform",
          prefetch_depth: int = 2,
          tile_rows: int = 256,
+         s_step: int = 1,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
     """§4.2 model-selection rationale, automated.
@@ -495,6 +519,13 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     (``selector_footprint_bytes``) joins the embedded method in the
     auto-pick, and ``Plan.frontier()`` ranks all strategies by what their
     bytes buy at a fixed budget.
+
+    ``s_step`` is the communication-avoiding depth of the distributed
+    inner loop (``DistributedInnerConfig.s_step``): s Lloyd refinements
+    per global sync cut the collective bill to (1 allgather + 1 psum)/s
+    but cost the replicated carry ``s_step_state_bytes`` per device —
+    priced into every engine-mode budget check below and reported as
+    ``Plan.s_step_footprint``.
     """
     if b is None:
         b = b_min(n, c, machine)
@@ -523,14 +554,20 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     eng_fp = {mode: engine_footprint_bytes(n, b, c, p, q, s=s, d=d,
                                            mode=mode, tile_rows=tile_rows)
               for mode in ENGINE_MODES}
-    if eng_fp["materialize"] <= machine.memory_bytes:
+    # the s-step replicated carry rides along whatever the Gram residency
+    # is, so it tightens every mode's budget check equally.
+    fp_sstep = s_step_state_bytes(n, b, c, p, q, s_step=s_step)
+    if s_step > 1:
+        note += (f"; s_step={s_step} (collectives /{s_step}, replicated "
+                 f"carry {fp_sstep / 1e6:.1f} MB/device)")
+    if eng_fp["materialize"] + fp_sstep <= machine.memory_bytes:
         engine = "materialize"
-    elif eng_fp["tiled"] <= machine.memory_bytes:
+    elif eng_fp["tiled"] + fp_sstep <= machine.memory_bytes:
         engine = "tiled"
         note += (f"; exact engine: tiled (resident Gram block "
                  f"{eng_fp['materialize']/1e6:.0f} MB > budget — streaming "
                  f"{tile_rows}-row panels)")
-    elif eng_fp["fused"] <= machine.memory_bytes:
+    elif eng_fp["fused"] + fp_sstep <= machine.memory_bytes:
         engine = "fused"
         note += ("; exact engine: fused (even one Gram panel is tight — "
                  "needs the Pallas VMEM-tile path; the portable jnp "
@@ -578,5 +615,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
         engine=engine,
         engine_footprints=eng_fp,
         tile_rows=tile_rows,
+        s_step=s_step,
+        s_step_footprint=fp_sstep,
         n=n, c=c, d=d, p=p, q=q, density=density, sketchable=sketchable,
     )

@@ -73,10 +73,18 @@ class MiniBatchConfig:
     # ``Plan.engine``. Only meaningful for method="exact" (the embedded
     # methods never evaluate Gram blocks).
     engine: object = "materialize"
+    # s-step communication-avoiding depth of the distributed exact inner
+    # loop (distributed.inner.DistributedInnerConfig.s_step): Lloyd
+    # refinements per global sync. 1 = fully synchronous (bit-identical
+    # to the single-host loop); >1 cuts the collective bill to
+    # (1 allgather + 1 psum)/s_step. Single-host fits ignore it.
+    s_step: int = 1
 
     _METHODS = ("exact", "rff", "nystrom", "sketch", "tensorsketch")
 
     def __post_init__(self):
+        if self.s_step < 1:
+            raise ValueError(f"s_step must be >= 1, got {self.s_step}")
         if self.method not in self._METHODS:
             raise ValueError(
                 f"method must be one of {self._METHODS}, "

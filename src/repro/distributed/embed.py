@@ -94,34 +94,44 @@ class StagedBatch:
 
 def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
                  n_clusters: int, max_iters: int):
-    """Per-shard Lloyd body: local assign, one psum per iteration."""
+    """Per-shard Lloyd body: local assign, ONE fused psum per iteration.
 
-    def means(labels):
-        with jax.named_scope("obs:psum_means"):
+    The body is pipelined like ``distributed.inner``: it assigns from the
+    CARRIED centroids/counts, then syncs the stats of the labels it just
+    wrote — sums [C, m], counts [C], convergence flag and cost all ride a
+    single flat ``concat`` psum of C*(m+1) + 2 floats. A prologue sync
+    (same fused payload, dummy scalars) seeds the carry from the warm-start
+    labels, so the stats in the carry always describe the final labels and
+    no fixpoint ``means`` pass is needed after the loop."""
+    m = z_local.shape[1]
+
+    def sync(labels, changed_f, cost_loc):
+        with jax.named_scope("obs:psum_fused"):
             h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
             h = h * wgt_local[:, None]                   # padded rows -> 0
-            counts = jax.lax.psum(jnp.sum(h, axis=0), row_axes)
-            sums = jax.lax.psum(
-                jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32),
-                row_axes)                                # [C, m]
-            return sums / jnp.maximum(counts, 1.0)[:, None], counts
-
-    def assign(cents, counts):
-        labels, mind = assign_embedded(z_local, cents, counts)
-        return labels, mind
+            sums_p = jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+            counts_p = jnp.sum(h, axis=0)
+            flat = jax.lax.psum(
+                jnp.concatenate([sums_p.ravel(), counts_p,
+                                 jnp.stack([changed_f, cost_loc])]),
+                row_axes)                                # [C*(m+1) + 2]
+        sums = flat[:n_clusters * m].reshape(n_clusters, m)
+        counts = flat[n_clusters * m:-2]
+        cents = sums / jnp.maximum(counts, 1.0)[:, None]
+        return cents, counts, flat[-2] > 0, flat[-1]
 
     def body(state):
-        labels, _, t, _ = state
-        cents, counts = means(labels)
-        new_labels, mind = assign(cents, counts)
-        changed = jax.lax.psum(
-            jnp.sum((new_labels != labels).astype(jnp.int32)), row_axes) > 0
-        cost = jax.lax.psum(jnp.sum(mind * wgt_local), row_axes)
-        return new_labels, changed, t + 1, cost
+        labels, cents, counts, _, t, _ = state
+        new_labels, mind = assign_embedded(z_local, cents, counts)
+        changed_f = jnp.sum((new_labels != labels).astype(jnp.float32)
+                            * wgt_local)
+        cost_loc = jnp.sum(mind * wgt_local)
+        cents, counts, changed, cost = sync(new_labels, changed_f, cost_loc)
+        return new_labels, cents, counts, changed, t + 1, cost
 
     def cond(state):
-        _, changed, t, _ = state
+        _, _, _, changed, t, _ = state
         return jnp.logical_and(changed, t < max_iters)
 
     # init: nearest centroid0 (masked like the single-device warm start).
@@ -131,22 +141,26 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
     d2 = jnp.where(mask0[None, :], d2, BIG)
     labels0 = jnp.argmin(d2, axis=1).astype(jnp.int32)
 
-    init = (labels0, jnp.array(True), jnp.array(0, jnp.int32),
-            jnp.array(jnp.inf, jnp.float32))
-    labels, _, t, cost = jax.lax.while_loop(cond, body, init)
-    cents, counts = means(labels)
+    # prologue sync: seed the carry with means(labels0) — the dummy scalars
+    # are overridden (changed := True, cost := inf) before the carry forms.
+    cents0, counts0, _, _ = sync(labels0, jnp.float32(0), jnp.float32(0))
+    init = (labels0, cents0, counts0, jnp.array(True),
+            jnp.array(0, jnp.int32), jnp.array(jnp.inf, jnp.float32))
+    labels, cents, counts, _, t, cost = jax.lax.while_loop(cond, body, init)
     return labels, cents, counts, t, cost
 
 
 def collectives_per_iteration(n_clusters: int, m: int) -> dict:
     """Analytic per-Lloyd-iteration collective bill of ``_shard_lloyd``
     (the jit-safe count — see ``distributed.inner.collectives_per_iteration``
-    for why it is computed instead of instrumented): counts + sums +
-    convergence flag + cost = 4 psums, payload C*(m+1) + 2 floats. The
-    fixpoint ``means`` after the loop adds 2 more (counts + sums)."""
+    for why it is computed instead of instrumented): ONE fused psum of
+    sums + counts + convergence flag + cost, payload C*(m+1) + 2 floats.
+    The prologue sync before the loop is the same fused payload
+    (``final_psum`` keeps its historical name for the outside-the-loop
+    slot in the audited bill)."""
     payload = 4 * (n_clusters * (m + 1) + 2)
-    return {"psum": 4, "psum_bytes": payload,
-            "final_psum": 2, "final_psum_bytes": 4 * n_clusters * (m + 1)}
+    return {"psum": 1, "psum_bytes": payload,
+            "final_psum": 1, "final_psum_bytes": payload}
 
 
 class DistributedEmbedKMeans:
@@ -508,9 +522,11 @@ class DistributedEmbedKMeans:
             if rec.enabled:
                 n_iter = history[-1].inner_iters
                 # statically-audited bill (repro.analysis): per-iteration
-                # while-body count x n_iter + the audited fixpoint
-                # epilogue; `collectives_per_iteration` remains the
-                # analytic cross-check the audit must agree with.
+                # while-body count x n_iter + the audited prologue sync
+                # (the fixpoint ``means`` epilogue is gone — the pipelined
+                # body syncs the stats of the labels it just wrote);
+                # `collectives_per_iteration` remains the analytic
+                # cross-check the audit must agree with.
                 bill = self._audited_bill(z, wgt, centroids0, mask0)
                 per, out = bill["per_iteration"], bill["outside"]
                 rec.counter("collectives/psum",

@@ -85,7 +85,7 @@ class DistributedMiniBatchKMeans:
         counted *statically* — ``repro.analysis.collective_bill`` walks the
         traced jaxpr once per batch shape and the recorder multiplies the
         per-iteration count by the returned n_iter, plus the audited
-        outside-the-loop epilogue — never by instrumenting the traced
+        outside-the-loop prologue sync — never by instrumenting the traced
         body; ``inner.collectives_per_iteration`` stays as the analytic
         cross-check the audit must agree with)."""
         self.mesh = mesh
@@ -101,7 +101,8 @@ class DistributedMiniBatchKMeans:
             n_clusters=cfg.n_clusters, kernel=cfg.kernel,
             max_iters=cfg.max_inner_iters,
             engine=resolve_engine(cfg.engine if mode is None else mode),
-            row_axes=row_axes, col_axis=col_axis)
+            row_axes=row_axes, col_axis=col_axis,
+            s_step=getattr(cfg, "s_step", 1))
         self._row_sharding = NamedSharding(mesh, P(row_axes, None))
         self._bill_cache: dict = {}
 
@@ -127,16 +128,19 @@ class DistributedMiniBatchKMeans:
             except Exception as e:   # pragma: no cover - defensive
                 self.rec.event("audit_error", where="distributed_inner",
                                error=repr(e))
-                analytic = collectives_per_iteration(self.inner_cfg)
-                # analytic equivalent of the audited bill: the fixpoint
-                # pass re-runs everything but the convergence-flag psum.
+                analytic = collectives_per_iteration(
+                    self.inner_cfg, x.shape[0] // self.d_size)
+                # analytic equivalent of the audited bill: one fused
+                # allgather+psum sync per while-loop body, and the same
+                # pair once outside (the prologue that seeds the carry —
+                # there is no fixpoint epilogue any more).
                 bill = {
                     "per_iteration": {"psum": analytic["psum"],
                                       "all_gather": analytic["allgather"]},
-                    "outside": {"psum": analytic["psum"] - 1,
+                    "outside": {"psum": analytic["psum"],
                                 "all_gather": analytic["allgather"]},
                     "per_iteration_bytes": {"psum": analytic["psum_bytes"]},
-                    "outside_bytes": {"psum": analytic["psum_bytes"] - 4},
+                    "outside_bytes": {"psum": analytic["psum_bytes"]},
                 }
             self._bill_cache[key] = bill
         return bill
@@ -322,11 +326,11 @@ class DistributedMiniBatchKMeans:
             if rec.enabled:
                 dt = time.perf_counter() - t_batch
                 n_iter = history[-1].inner_iters
-                # statically-audited bill: per-iteration count x n_iter
-                # loop sweeps + the audited outside-the-loop collectives
-                # (the fixpoint pass — which has NO convergence psum, so
-                # the old analytic `bill x (n_iter + 1)` overcounted by
-                # one psum per batch).
+                # statically-audited bill: per-sync count x n_iter loop
+                # sweeps + the audited outside-the-loop collectives (the
+                # prologue sync that seeds the s-step carry; the old
+                # fixpoint epilogue is gone — the pipelined body syncs
+                # the stats of the labels it just wrote).
                 bill = self._audited_bill(x, landmarks, l_idx, diag, u0,
                                           wgt)
                 per, out = bill["per_iteration"], bill["outside"]

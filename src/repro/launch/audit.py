@@ -120,10 +120,13 @@ def audit_engine_modes(*, n: int, d: int, n_landmarks: int, c: int,
 
 
 def audit_mesh_path(*, n: int, d: int, n_landmarks: int, c: int,
-                    with_model_axis: bool) -> tuple:
+                    with_model_axis: bool, s_step: int = 1) -> tuple:
     """(report, violations) for ``distributed_kkmeans_fit`` on a 1x1 mesh
     — the jaxpr (and therefore the bill) is the same program every device
-    runs, whatever the axis sizes."""
+    runs, whatever the axis sizes. ``s_step > 1`` audits the
+    communication-avoiding variant: the bill per SYNC is unchanged
+    (1 allgather + 1 fused psum), the s-1 extra local refinements must
+    add zero collectives."""
     from repro.distributed import inner as dinner
     from repro.distributed.compat import make_mesh
 
@@ -133,7 +136,7 @@ def audit_mesh_path(*, n: int, d: int, n_landmarks: int, c: int,
     cfg = dinner.DistributedInnerConfig(
         n_clusters=c, kernel=spec, max_iters=10,
         engine=GramEngine(mode="materialize"),
-        col_axis="model" if with_model_axis else None)
+        col_axis="model" if with_model_axis else None, s_step=s_step)
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n, d), jnp.float32)
     landmarks = x[:n_landmarks]
@@ -141,14 +144,18 @@ def audit_mesh_path(*, n: int, d: int, n_landmarks: int, c: int,
     diag = spec.diag(x)
     u0 = jnp.zeros((n,), jnp.int32)
     tag = "data x model" if with_model_axis else "data"
+    if s_step > 1:
+        tag += f", s={s_step}"
     report = audit(
         lambda *a: dinner.distributed_kkmeans_fit(mesh, *a, cfg=cfg),
         x, landmarks, l_idx, diag, u0, name=f"distributed_inner[{tag}]")
     bill = dinner.collectives_per_iteration(cfg)
-    # the fixpoint epilogue re-runs one stats pass minus the convergence
-    # psum — the exact count PR 6's analytic x(n_iter+1) got wrong.
+    # s-step contract: exactly ONE allgather + ONE fused psum per sync,
+    # and the prologue sync outside the loop pays the identical pair
+    # (the fixpoint epilogue is gone — the pipelined body syncs the
+    # stats of the labels it just wrote).
     violations = report.check_collectives(
-        bill, {"psum": bill["psum"] - 1, "allgather": bill["allgather"]})
+        bill, {"psum": bill["psum"], "allgather": bill["allgather"]})
     violations += report.check_host_sync()
     if len(report.loops) != 1:
         violations.append(f"{report.name}: expected exactly one inner "
@@ -211,6 +218,12 @@ def run_audits(*, n: int, d: int, n_landmarks: int, c: int, m: int,
                                    with_model_axis=True))
     results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
                                    with_model_axis=False))
+    # the communication-avoiding s-step variant must keep the identical
+    # per-sync bill on both layouts — local refinements are collective-free.
+    results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
+                                   with_model_axis=True, s_step=2))
+    results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
+                                   with_model_axis=False, s_step=2))
     results.append(audit_embed_path(n=n, d=d, m=m, c=c))
     results.append(audit_predict_path(n=n, d=d, c=c))
     return results

@@ -16,8 +16,15 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import numpy as np
+# XLA_FLAGS must be staged BEFORE the first jax import: the latency-hiding
+# scheduler that overlaps the s-step loop's one fused collective per sync
+# with the next Gram panel is a compile-time, process-level switch
+# (repro.launch.env) — importing jax first would freeze XLA_FLAGS as-is.
+from .env import configure as _configure_env
+_ENV = _configure_env()
+
+import jax   # noqa: E402  (env staging above is load-bearing)
+import numpy as np   # noqa: E402
 
 from repro.core import (KernelSpec, MachineSpec, MiniBatchConfig,
                         clustering_accuracy, gamma_from_dmax,
@@ -49,6 +56,12 @@ def main(argv=None):
                     choices=["auto", "materialize", "fused", "tiled"],
                     help="Gram residency of the exact inner loop "
                          "(repro.core.engine); auto = the planner's pick")
+    ap.add_argument("--s-step", type=int, default=1,
+                    help="communication-avoiding s-step depth: s local "
+                         "Lloyd refinements per global sync — the "
+                         "collective bill drops to (1 allgather + 1 "
+                         "psum)/s at the price of replicating the batch "
+                         "labels on every device")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--obs", default=None, metavar="PATH",
@@ -69,7 +82,8 @@ def main(argv=None):
     # -- memory-aware (B, s) plan — the paper's §4.2 rationale
     machine = MachineSpec(memory_bytes=args.memory_gb * 1e9,
                           n_processors=n_proc)
-    p = plan(args.n, args.clusters, machine, d=args.d)
+    p = plan(args.n, args.clusters, machine, d=args.d,
+             s_step=args.s_step)
     b = args.b or p.b
     s = args.s if args.s is not None else p.s
     gamma = gamma_from_dmax(jax.numpy.asarray(x[:4096]))
@@ -83,13 +97,15 @@ def main(argv=None):
 
     cfg = MiniBatchConfig(n_clusters=args.clusters, n_batches=b, s=s,
                           kernel=KernelSpec("rbf", gamma=gamma),
-                          sampling=args.sampling, seed=args.seed)
+                          sampling=args.sampling, seed=args.seed,
+                          s_step=args.s_step)
 
     rec = None
     if args.obs:
         from repro.obs import JsonlRecorder, export
         rec = JsonlRecorder(args.obs, header=export.run_header(
             entry="launch.cluster", plan=p, b=b, s=s, engine=str(mode),
+            s_step=args.s_step, xla_flags=_ENV.get("xla_flags", ""),
             mesh={k: int(v) for k, v in mesh.shape.items()}))
     km = DistributedMiniBatchKMeans(mesh, cfg, mode=mode, recorder=rec)
 

@@ -1,8 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_SMOKE_DEVICES", "512"))
 
 # ^ must precede every other import (jax locks the device count on first
-# init) — same contract as repro.launch.dryrun.
+# init) — same contract as repro.launch.dryrun. The multi-process smoke
+# workers (--smoke-mp) override the per-process device count via
+# REPRO_SMOKE_DEVICES so P processes x 2 devices stay CI-sized.
 
 """Dry-run for the PAPER'S ALGORITHM on the production mesh.
 
@@ -86,7 +89,7 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
     t0 = time.time()
 
     from jax.sharding import PartitionSpec as P
-    from repro.core.engine import (GramEngine, assign_from_stats,
+    from repro.core.engine import (GramEngine, ReducePlan, assign_from_stats,
                                    engine_stats)
 
     d_size = math.prod(mesh.shape[a] for a in row_axes)
@@ -104,20 +107,32 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
     rowspec = P(row_axes)
     colspec = P(col_axis) if col_axis else P()
     kspec = P(row_axes, col_axis)
-    llspec = P(row_axes, col_axis)
+    # 1-D: K_ll row-sharded (the paper's layout); 2-D: replicated over the
+    # row axes so g joins the fused stats psum (distributed.inner).
+    llspec = P(row_axes, col_axis) if col_axis is None else P(None, col_axis)
+    lrowspec = rowspec if col_axis is None else P()
 
-    # the mesh's psums, handed to the SHARED engine stats as reduce hooks
-    # (identical structure to distributed.inner._body_factory).
-    red_cols = ((lambda v: jax.lax.psum(v, col_axis))
-                if col_axis is not None else None)
-    g_axes = row_axes if col_axis is None else (*row_axes, col_axis)
-    red_g = lambda v: jax.lax.psum(v, g_axes)     # noqa: E731
+    # the mesh's ONE batched reduction, handed to the SHARED engine stats
+    # as a ReducePlan (identical structure to distributed.inner
+    # ._body_factory): 2-D reduces the whole counts/f/g payload in one
+    # flat psum over the model axis; 1-D reduces only g over the rows
+    # (counts/f are local there — the real loop appends its cost/changed
+    # scalars to the same buffer).
+    if col_axis is not None:
+        def _fused(counts_p, f_p, g_p):
+            flat = jnp.concatenate(
+                [f_p, counts_p[None, :], g_p[None, :]], axis=0)
+            flat = jax.lax.psum(flat, col_axis)
+            return flat[-2], flat[:-2], flat[-1]
+    else:
+        def _fused(counts_p, f_p, g_p):
+            return counts_p, f_p, jax.lax.psum(g_p, row_axes)
+    reduce_plan = ReducePlan(_fused)
 
     def _sweep(op_xl, op_ll, lidx_cols, lidx_rows, u_full, eng):
         f, g, counts = engine_stats(
             eng, spec, op_xl, op_ll, jnp.take(u_full, lidx_cols),
-            jnp.take(u_full, lidx_rows), c,
-            reduce_counts=red_cols, reduce_f=red_cols, reduce_g=red_g)
+            jnp.take(u_full, lidx_rows), c, reduce=reduce_plan)
         labels, _ = assign_from_stats(f, g, counts)
         return labels
 
@@ -147,7 +162,9 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
                 sweep_fused, mesh=mesh,
                 in_specs=(P(row_axes, None),
                           P(col_axis, None) if col_axis else P(None, None),
-                          P(row_axes, None), colspec, rowspec, rowspec),
+                          P(row_axes, None) if col_axis is None
+                          else P(None, None),
+                          colspec, lrowspec, rowspec),
                 out_specs=rowspec, check_vma=False)
             lowered = jax.jit(lambda *a: fn(*a)).lower(
                 x, lm, lm, lidx, lidx, u)
@@ -156,7 +173,7 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
         else:
             fn = shard_map(
                 sweep_mat, mesh=mesh,
-                in_specs=(kspec, llspec, colspec, rowspec, rowspec),
+                in_specs=(kspec, llspec, colspec, lrowspec, rowspec),
                 out_specs=rowspec, check_vma=False)
             lowered = jax.jit(lambda *a: fn(*a)).lower(
                 k_xl, k_ll, lidx, lidx, u)
@@ -210,6 +227,42 @@ def lower_cluster(mode: str, *, multi_pod: bool = False, n_rows: int = 2**20,
     }
 
 
+def smoke_driver(args) -> int:
+    """Spawn ``--smoke-mp`` ranks of ``repro.launch.smoke_mp`` (REAL
+    cross-process gloo collectives through the s-step fit path) and wait.
+    Exits 0 (with a message) when the jax build cannot do multi-process
+    CPU collectives — CI must not go red over a missing gloo backend."""
+    import socket
+    import subprocess
+    import sys
+
+    from repro.launch.smoke_mp import SKIP_EXIT
+
+    with socket.socket() as s:   # grab a free coordinator port
+        s.bind(("localhost", 0))
+        port = s.getsockname()[1]
+    env = dict(os.environ,
+               REPRO_SMOKE_DEVICES="2",
+               REPRO_SMOKE_NPROCS=str(args.smoke_mp),
+               REPRO_SMOKE_COORD=f"localhost:{port}")
+    cmd = [sys.executable, "-m", "repro.launch.smoke_mp",
+           "--s-step", str(args.s_step)]
+    if args.obs:
+        cmd += ["--obs", args.obs]
+    procs = [subprocess.Popen(cmd, env=dict(env, REPRO_SMOKE_RANK=str(r)))
+             for r in range(args.smoke_mp)]
+    codes = [p.wait() for p in procs]
+    if any(c == SKIP_EXIT for c in codes):
+        print(f"[skip] multi-process CPU smoke unsupported here "
+              f"(exit codes {codes})")
+        return 0
+    if any(codes):
+        print(f"[FAIL] smoke worker exit codes {codes}")
+        return 1
+    print(f"[ok] multi-process smoke: {args.smoke_mp} processes clean")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser(description="clustering dry-run")
     ap.add_argument("--mode", default=None, choices=sorted(MODES))
@@ -221,7 +274,19 @@ def main():
     ap.add_argument("--clusters", type=int, default=64)
     ap.add_argument("--landmarks", type=int, default=65536)
     ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--smoke-mp", type=int, default=0, metavar="P",
+                    help="run the multi-process CPU smoke with P "
+                         "processes (real gloo collectives through the "
+                         "s-step fit path) instead of the lowering sweep")
+    ap.add_argument("--s-step", type=int, default=2,
+                    help="s-step depth for the smoke fit")
+    ap.add_argument("--obs", default=None, metavar="PATH",
+                    help="smoke: rank-0 flight-recorder JSONL (CI "
+                         "artifact)")
     args = ap.parse_args()
+
+    if args.smoke_mp:
+        raise SystemExit(smoke_driver(args))
 
     modes = sorted(MODES) if args.all else [args.mode]
     meshes = [False, True] if (args.both_meshes or args.all) \

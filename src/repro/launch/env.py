@@ -1,0 +1,108 @@
+"""Process-level JAX/XLA environment setup for the launchers.
+
+The s-step inner loop (``repro.distributed.inner``) is built so its one
+fused psum per sync can overlap the next Gram panel: the tiled engine
+double-buffers panel builds against contractions, and the loop body has no
+host sync the scheduler must serialize around. Whether XLA actually hides
+the collective behind compute is decided at COMPILE time by the
+latency-hiding scheduler, which is switched on with process-level flags
+that must be in ``XLA_FLAGS`` before the first ``import jax`` touches the
+backend. This module owns that dance:
+
+  * ``configure(...)`` — call it FIRST (before importing anything that
+    imports jax). It merges the GPU latency-hiding/async-collective flag
+    set into ``XLA_FLAGS`` without clobbering flags the caller (or a test
+    harness — ``--xla_force_host_platform_device_count``) already set.
+  * ``set_platform(...)`` — the post-import half: pins
+    ``jax_platform_name`` the way the jax gpu-performance-tips page
+    recommends.
+
+Flag availability is jaxlib-version-gated: ``--xla_gpu_enable_async_
+collectives`` was removed upstream once async collectives became the
+default (jaxlib >= ~0.4.30 hard-ABORTS on it at backend init), so it is
+only emitted for old jaxlibs that still parse it. Everything here is a
+plain env-var edit — no jax import happens in this module at call time
+unless ``set_platform`` is used.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+# the jax gpu-performance-tips flag set (latency-hiding scheduler + fusion
+# knobs). Safe to parse on CPU-only jaxlib builds: DebugOptions registers
+# xla_gpu_* flags regardless of backend.
+GPU_PERF_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+# removed upstream when async collectives became the default; newer
+# jaxlibs abort at backend init on an unknown XLA flag, so this one is
+# version-gated instead of listed unconditionally.
+_LEGACY_ASYNC_FLAG = "--xla_gpu_enable_async_collectives=true"
+_LEGACY_ASYNC_MAX_JAXLIB = (0, 4, 30)
+
+
+def _jaxlib_version() -> tuple:
+    try:
+        from importlib.metadata import version
+        return tuple(int(p) for p in version("jaxlib").split(".")[:3])
+    except Exception:                      # pragma: no cover - defensive
+        return (0, 0, 0)
+
+
+def _merge_xla_flags(new_flags) -> bool:
+    """Append flags to ``XLA_FLAGS``; existing settings of the same flag
+    win (never clobber what the caller/test harness already pinned).
+    Returns whether anything was actually added."""
+    current = os.environ.get("XLA_FLAGS", "").split()
+    have = {f.split("=", 1)[0] for f in current}
+    added = [f for f in new_flags if f.split("=", 1)[0] not in have]
+    if added:
+        os.environ["XLA_FLAGS"] = " ".join(current + added)
+    return bool(added)
+
+
+def configure(*, gpu_flags: bool = True,
+              host_device_count: int | None = None) -> dict:
+    """Prepare the process environment for a launcher run.
+
+    Must run before the first jax import in the process — XLA parses
+    ``XLA_FLAGS`` once at backend init and never re-reads it. Idempotent:
+    a second call that would change nothing is a silent no-op, so every
+    launcher module can stage the env at import without worrying about
+    which one ran first. Returns the settings actually applied (for
+    logging / the obs run header).
+    """
+    applied: dict = {}
+    changed = False
+    if host_device_count:
+        changed |= _merge_xla_flags(
+            [f"--xla_force_host_platform_device_count={host_device_count}"])
+        applied["host_device_count"] = host_device_count
+    if gpu_flags:
+        flags = list(GPU_PERF_FLAGS)
+        if _jaxlib_version() < _LEGACY_ASYNC_MAX_JAXLIB:
+            flags.append(_LEGACY_ASYNC_FLAG)
+        changed |= _merge_xla_flags(flags)
+        applied["gpu_flags"] = flags
+    if changed and "jax" in sys.modules:   # too late for XLA_FLAGS
+        warnings.warn(
+            "repro.launch.env.configure() changed XLA_FLAGS after jax was "
+            "imported; the changes will not take effect in this process",
+            RuntimeWarning, stacklevel=2)
+    applied["xla_flags"] = os.environ.get("XLA_FLAGS", "")
+    return applied
+
+
+def set_platform(platform: str | None = None) -> None:
+    """Pin the jax platform ('cpu' | 'gpu' | 'tpu'). The one jax-importing
+    call here; only effective at the beginning of the program."""
+    if platform is None:
+        return
+    import jax
+    jax.config.update("jax_platform_name", platform)

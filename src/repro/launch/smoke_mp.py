@@ -1,0 +1,92 @@
+"""One rank of the multi-process CPU smoke (spawned by
+``repro.launch.dryrun_cluster --smoke-mp P``).
+
+Import order here is load-bearing and is the whole reason this worker is
+its own module: ``jax.distributed.initialize`` must run before ANY jax
+computation, and most ``repro.*`` modules touch the backend at import
+(module-level jnp constants). So: stage XLA_FLAGS -> import bare jax ->
+gloo init -> only then import the production fit path.
+
+Exit codes: 0 ok, 1 smoke assertion failed, 75 (EX_TEMPFAIL) when this
+jax build cannot do multi-process CPU collectives — the driver maps 75
+to a soft skip so CI does not go red over a missing gloo backend.
+"""
+import argparse
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_SMOKE_DEVICES", "2"))
+
+import jax               # noqa: E402  (flags staged above)
+import jax.numpy as jnp  # noqa: E402
+
+SKIP_EXIT = 75
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--s-step", type=int, default=2)
+    ap.add_argument("--obs", default=None)
+    args = ap.parse_args()
+
+    rank = int(os.environ["REPRO_SMOKE_RANK"])
+    nprocs = int(os.environ["REPRO_SMOKE_NPROCS"])
+    coord = os.environ["REPRO_SMOKE_COORD"]
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize(coordinator_address=coord,
+                                   num_processes=nprocs, process_id=rank)
+    except Exception as e:   # no gloo / no distributed runtime -> skip
+        print(f"[skip] rank {rank}: multi-process CPU init unsupported: "
+              f"{type(e).__name__}: {e}")
+        return SKIP_EXIT
+
+    # production path imports AFTER the distributed runtime is up.
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import KernelSpec, MiniBatchConfig, clustering_accuracy
+    from repro.core.minibatch import predict
+    from repro.data.sampling import split_batches
+    from repro.data.synthetic import make_blobs
+    from repro.distributed.outer import DistributedMiniBatchKMeans
+
+    mesh = Mesh(np.asarray(jax.devices()), ("data",))
+    # identical host data on every process (same seed) — the SPMD contract.
+    x, y = make_blobs(1024, 8, 4, sep=8.0, seed=0)
+    cfg = MiniBatchConfig(n_clusters=4, n_batches=2, s=1.0,
+                          kernel=KernelSpec("rbf", gamma=2.0),
+                          seed=0, s_step=args.s_step)
+    rec = None
+    if rank == 0 and args.obs:
+        from repro.obs import JsonlRecorder, export
+        rec = JsonlRecorder(args.obs, header=export.run_header(
+            entry="dryrun_cluster.smoke_mp", nprocs=nprocs,
+            s_step=args.s_step))
+    km = DistributedMiniBatchKMeans(mesh, cfg, mode="materialize",
+                                    recorder=rec)
+    try:
+        res = km.fit(split_batches(x, cfg.n_batches, strategy="stride"))
+    finally:
+        if rec is not None:
+            rec.close()
+    labels = np.asarray(predict(jnp.asarray(x), res.state.medoids,
+                                res.state.medoid_diag, spec=cfg.kernel))
+    acc = clustering_accuracy(y, labels)
+    costs = [h.cost for h in res.history]
+    if rank == 0:
+        print(f"[smoke] {nprocs} processes x "
+              f"{len(jax.local_devices())} devices, s_step={args.s_step}: "
+              f"acc={acc:.4f} iters={[h.inner_iters for h in res.history]} "
+              f"costs={[round(c, 4) for c in costs]}")
+    if not all(np.isfinite(costs)):
+        print(f"[FAIL] rank {rank}: non-finite inner cost {costs}")
+        return 1
+    if acc < 0.95:   # 4 blobs at sep=8 are trivially separable
+        print(f"[FAIL] rank {rank}: accuracy {acc:.4f} < 0.95")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,9 +20,14 @@ import argparse
 import math
 import time
 
-import jax
+# stage XLA_FLAGS (latency-hiding scheduler / async-collective overlap)
+# before the first jax import — see repro.launch.env.
+from .env import configure as _configure_env
+_ENV = _configure_env()
 
-from repro.distributed.compat import make_mesh
+import jax   # noqa: E402  (env staging above is load-bearing)
+
+from repro.distributed.compat import make_mesh   # noqa: E402
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

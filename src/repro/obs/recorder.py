@@ -28,7 +28,7 @@ the drain — recorder hooks must stay cheap enough to leave on.
 The ``collectives/*`` counters the mesh fit loops emit are derived from
 the STATIC audit (``repro.analysis.collective_bill`` over the traced
 inner program, cached per batch shape): per-iteration while-body counts x
-realized ``n_iter`` + the audited outside-the-loop epilogue. If that
+realized ``n_iter`` + the audited outside-the-loop prologue sync. If that
 trace-time audit ever fails, the loops fall back to the analytic
 ``collectives_per_iteration`` bill and emit an ``audit_error`` event with
 the exception — billing must never take a fit down.

@@ -400,20 +400,51 @@ def test_contract_engine_modes(mode):
         assert r.largest_intermediate_bytes < 256 * 256 * 4
 
 
+@pytest.mark.parametrize("s_step", [1, 2])
 @pytest.mark.parametrize("with_model_axis", [False, True])
-def test_contract_mesh_path(with_model_axis):
-    """Static per-iteration counts == the analytic bill, and the fixpoint
-    epilogue is one (convergence) psum short of a full iteration."""
+def test_contract_mesh_path(with_model_axis, s_step):
+    """The s-step contract, statically proven: exactly ONE allgather and
+    ONE fused psum per sync on BOTH layouts, whatever s — and the same
+    pair outside the loop (the prologue sync that seeds the carry; there
+    is no fixpoint epilogue)."""
     from repro.launch.audit import audit_mesh_path
 
     r, violations = audit_mesh_path(n=64, d=4, n_landmarks=16, c=4,
-                                    with_model_axis=with_model_axis)
+                                    with_model_axis=with_model_axis,
+                                    s_step=s_step)
     assert violations == []
     per, out = r.collectives_per_iteration, r.collectives_outside
-    assert per["psum"] == (5 if with_model_axis else 3)
-    assert per["all_gather"] == 1
-    assert out["psum"] == per["psum"] - 1
-    assert out["all_gather"] == 1
+    assert per == {"psum": 1, "all_gather": 1}
+    assert out == {"psum": 1, "all_gather": 1}
+
+
+def test_sstep_fused_sync_is_single_collective_pair():
+    """Booby-trapped form of the contract: audit the REAL mesh program
+    directly (not through audit_mesh_path) and check that a bill
+    promising anything other than 1 psum + 1 allgather per sync is
+    rejected — the check must actually be able to fire."""
+    import jax.numpy as jnp
+    from repro.analysis import audit
+    from repro.core import GramEngine, KernelSpec
+    from repro.distributed import inner as dinner
+    from repro.distributed.compat import make_mesh
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = dinner.DistributedInnerConfig(
+        n_clusters=4, kernel=spec, max_iters=5,
+        engine=GramEngine(mode="materialize"), col_axis="model", s_step=2)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 4), jnp.float32)
+    r = audit(lambda *a: dinner.distributed_kkmeans_fit(mesh, *a, cfg=cfg),
+              x, x[:16], jnp.arange(16, dtype=jnp.int32), spec.diag(x),
+              jnp.zeros((64,), jnp.int32), name="sstep_trap")
+    assert r.collectives_per_iteration == {"psum": 1, "all_gather": 1}
+    # the trap: stricter and looser bills must both be caught
+    assert r.check_collectives({"psum": 0, "allgather": 1})
+    assert r.check_collectives({"psum": 2, "allgather": 1})
+    assert r.check_collectives({"psum": 1, "allgather": 0})
+    assert not r.check_collectives({"psum": 1, "allgather": 1},
+                                   {"psum": 1, "allgather": 1})
 
 
 def test_contract_embed_and_predict():
@@ -421,8 +452,10 @@ def test_contract_embed_and_predict():
 
     r, violations = audit_embed_path(n=64, d=4, m=16, c=4)
     assert violations == []
-    assert r.collectives_per_iteration == {"psum": 4}
-    assert r.collectives_outside == {"psum": 2}
+    # one fused psum per Lloyd iteration (sums+counts+flag+cost in a
+    # single flat payload), one identical prologue sync outside.
+    assert r.collectives_per_iteration == {"psum": 1}
+    assert r.collectives_outside == {"psum": 1}
 
     r2, violations2 = audit_predict_path(n=64, d=4, c=4)
     assert violations2 == []
@@ -439,7 +472,9 @@ def test_audit_cli_smoke(tmp_path):
                  "--out", str(out)]) == 0
     payload = json.loads(out.read_text())
     assert payload["ok"] and not payload["violations"]
-    assert len(payload["reports"]) == 7
+    assert len(payload["reports"]) == 9
     names = {r["name"] for r in payload["reports"]}
     assert "kkmeans_fit[fused]" in names
     assert "serving_predict" in names
+    assert "distributed_inner[data, s=2]" in names
+    assert "distributed_inner[data x model, s=2]" in names

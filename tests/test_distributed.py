@@ -458,3 +458,60 @@ def test_streaming_sharded_csr_end_to_end():
     assert res["resume_same"], "mid-stream resume diverged from straight run"
     assert res["batches"] == 4
     assert res["cards"] == 2048.0
+
+
+@pytest.mark.slow
+def test_sstep_matches_synchronous_on_both_layouts():
+    """s_step=2 runs two local Lloyd refinements per global sync against
+    frozen remote stats — a different trajectory than the fully-synchronous
+    loop, but on separable data it must land on the SAME final partition,
+    on both the paper's 1-D layout and the 2-D rows x landmarks mesh,
+    without inflating the global sync count (n_iter counts loop bodies
+    = syncs)."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec
+        from repro.distributed.inner import (DistributedInnerConfig,
+                                             distributed_kkmeans_fit)
+
+        rng = np.random.default_rng(7)
+        centers = np.array([[0.2, 0.2], [0.8, 0.8], [0.2, 0.8], [0.8, 0.2]])
+        X = np.concatenate([rng.normal(c, 0.05, size=(128, 2))
+                            for c in centers]).astype(np.float32)
+        perm = rng.permutation(len(X))
+        x = jnp.asarray(X[perm])
+        spec = KernelSpec("rbf", gamma=8.0)
+        diag = spec.diag(x)
+        l_idx = jnp.arange(512, dtype=jnp.int32)
+        u0 = jnp.asarray(rng.integers(0, 4, 512), jnp.int32)
+
+        layouts = {
+            "1d": (jax.make_mesh((8,), ("data",)),
+                   dict(row_axes=("data",), col_axis=None)),
+            "2d": (jax.make_mesh((4, 2), ("data", "model")),
+                   dict(row_axes=("data",), col_axis="model")),
+        }
+        out = {}
+        for name, (mesh, ax) in layouts.items():
+            runs = {}
+            for s in (1, 2):
+                cfg = DistributedInnerConfig(n_clusters=4, kernel=spec,
+                                             s_step=s, **ax)
+                runs[s] = distributed_kkmeans_fit(mesh, x, x, l_idx, diag,
+                                                  u0, cfg=cfg)
+            out[name] = {
+                "same": bool(jnp.all(runs[1].labels == runs[2].labels)),
+                "cost_err": abs(float(runs[1].cost) - float(runs[2].cost)),
+                "syncs_1": int(runs[1].n_iter),
+                "syncs_2": int(runs[2].n_iter)}
+        print(json.dumps(out))
+    """)
+    for name, r in res.items():
+        assert r["same"], f"{name}: s_step=2 partition != synchronous loop"
+        assert r["cost_err"] < 1e-3, name
+        # the communication-avoiding point: no more global syncs than the
+        # synchronous loop (+1 allowed: on tiny problems that converge in a
+        # couple of sweeps, certifying the fixpoint under frozen remote
+        # stats can cost one extra sync; the ~1/s reduction is measured on
+        # longer runs by benchmarks/fig6_scaling.py).
+        assert r["syncs_2"] <= r["syncs_1"] + 1, name
+        assert r["syncs_2"] >= 1, name

@@ -119,8 +119,9 @@ def test_tiled_survives_block_exceeding_plan_budget(monkeypatch):
     trap must actually fire if anything materializes the block."""
     n, d, c, s = 384, 2, 4, 0.5
     lm = int(n * s)                                   # 192
-    # fake machine: tiled fits, the resident block does not (b pinned at 1)
-    machine = MachineSpec(memory_bytes=150e3, n_processors=1)
+    # fake machine: tiled fits (two 64-row panels live at once — the matvec
+    # is double-buffered), the resident block does not (b pinned at 1)
+    machine = MachineSpec(memory_bytes=250e3, n_processors=1)
     p = plan(n, c, machine, d=d, b=1, tile_rows=64)
     assert p.engine == "tiled"
     assert p.engine_footprints["materialize"] > machine.memory_bytes

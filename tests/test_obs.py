@@ -183,22 +183,23 @@ def test_distributed_exact_recorder_identity(tmp_path):
     gathers = _events(path, kind="counter", name="collectives/allgather")
     assert len(psums) == 2 and len(gathers) == 2
 
-    # analytic == static: the audited per-iteration while-body counts must
-    # equal the hand-derived bill exactly.
+    # analytic == static: the audited per-sync while-body counts must
+    # equal the hand-derived bill exactly — ONE fused psum and ONE
+    # allgather per sync.
     from repro.distributed.inner import collectives_per_iteration
     analytic = collectives_per_iteration(km_on.inner_cfg)
     (static,) = km_on._bill_cache.values()   # both batches share one shape
     per, out = static["per_iteration"], static["outside"]
+    assert analytic["psum"] == 1 and analytic["allgather"] == 1
     assert per["psum"] == analytic["psum"]
     assert per["all_gather"] == analytic["allgather"]
 
-    # static == recorded: per-iteration x n_iter + the audited epilogue.
+    # static == recorded: per-sync x n_iter + the audited prologue sync
+    # (which pays the identical fused pair; no fixpoint epilogue).
     n0 = res_on.history[0].inner_iters
     assert psums[0]["inc"] == per["psum"] * n0 + out["psum"]
     assert gathers[0]["inc"] == per["all_gather"] * n0 + out["all_gather"]
-    # the fixpoint pass has no convergence psum — PR 6's analytic
-    # `bill x (n_iter + 1)` overcounted by exactly one psum per batch.
-    assert psums[0]["inc"] == analytic["psum"] * (n0 + 1) - 1
+    assert psums[0]["inc"] == analytic["psum"] * (n0 + 1)
 
     timings = _events(path, kind="event", name="batch_timing")
     assert len(timings) == 2
@@ -294,14 +295,23 @@ def test_collectives_per_iteration_counts():
 
     cfg_1d = DistributedInnerConfig(n_clusters=8, col_axis=None)
     cfg_2d = DistributedInnerConfig(n_clusters=8, col_axis="model")
-    # faithful 1-D: cost + convergence + g; 2-D adds counts + f psums
-    assert collectives_per_iteration(cfg_1d)["psum"] == 3
-    assert collectives_per_iteration(cfg_2d)["psum"] == 5
+    # ONE fused psum per sync on both layouts (the s-step contract);
+    # payload: [C+2] floats in 1-D (g row-partials + cost + changed),
+    # [rows_p+2, C] in 2-D (f + counts + g, scalars riding the gather).
+    assert collectives_per_iteration(cfg_1d)["psum"] == 1
+    assert collectives_per_iteration(cfg_2d)["psum"] == 1
     assert collectives_per_iteration(cfg_1d)["allgather"] == 1
+    assert collectives_per_iteration(cfg_2d)["allgather"] == 1
+    assert collectives_per_iteration(cfg_1d)["psum_bytes"] == 4 * (8 + 2)
+    assert collectives_per_iteration(
+        cfg_2d, n_local_rows=64)["psum_bytes"] == 4 * 8 * (64 + 2)
 
     b = embed_bill(8, 32)
-    assert b["psum"] == 4 and b["final_psum"] == 2
+    # embed: ONE fused psum/iteration (sums+counts+flag+cost), and the
+    # prologue sync outside the loop pays the same payload.
+    assert b["psum"] == 1 and b["final_psum"] == 1
     assert b["psum_bytes"] == 4 * (8 * 33 + 2)
+    assert b["final_psum_bytes"] == b["psum_bytes"]
 
 
 def test_jsonl_recorder_thread_safety(tmp_path):
