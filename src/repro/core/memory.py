@@ -214,7 +214,10 @@ def s_step_state_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     into, plus the frozen remote raw partials it holds between syncs
     (F_rem [rows, C] + the counts/g remainders [2C]). ``s_step == 1``
     carries nothing beyond the engine footprint — the stats the loop
-    carries then are the same arrays the engine already prices."""
+    carries then are the same arrays the engine already prices. (The 2-D
+    layout's canonicalizing sync gathers an M-fold label buffer, but that
+    is a TRANSIENT freed inside the sync, not carried state; it is ~q*M*
+    N/B bytes, negligible against F_rem whenever M*D << rows*C.)"""
     if s_step <= 1:
         return 0.0
     nb = n / b

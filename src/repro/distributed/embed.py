@@ -102,7 +102,14 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
     single flat ``concat`` psum of C*(m+1) + 2 floats. A prologue sync
     (same fused payload, dummy scalars) seeds the carry from the warm-start
     labels, so the stats in the carry always describe the final labels and
-    no fixpoint ``means`` pass is needed after the loop."""
+    no fixpoint ``means`` pass is needed after the loop.
+
+    Deliberate semantic change vs. the pre-fused loop: the convergence
+    count weights label flips by ``wgt_local``, so padded/ghost rows no
+    longer count toward 'changed' (the historical count was unweighted).
+    Ghost rows never enter the weighted stats, so a flip on one cannot
+    move a centroid — stopping on real-row flips only can only end the
+    loop earlier, never with different centroids."""
     m = z_local.shape[1]
 
     def sync(labels, changed_f, cost_loc):

@@ -37,9 +37,21 @@ label vector and re-derives the stats as (frozen remote partials + fresh
 local partials) — before the single fused sync. The collective bill per
 Lloyd iteration is therefore (1 allgather + 1 psum) / s.
 
+2-D replica consistency under s-step: the refinements are column-local, so
+model-axis replicas of the same row block refine against DIFFERENT stat
+estimates (each owns a different landmark-column slice) and their labels
+legitimately diverge between syncs. The sync therefore widens the label
+allgather to the model axis and takes model shard 0's labels/cost/changed
+as THE canonical refinement — every replica leaves each sync with
+identical labels, the model-axis stats psum reduces partials of one
+consistent label vector, and the replication promised by the row-only
+out_specs holds. The algorithm is exactly "refine with model shard 0's
+column freshness", deterministic whatever M; 1-D needs none of this (row
+shards own disjoint rows — no replicas to disagree).
+
 Communication bill per SYNC (one sync per while-loop body; divide by s for
-the per-Lloyd-iteration bill; D = row-shard count, rows_p = N/(B*D),
-C clusters, 4-byte scalars):
+the per-Lloyd-iteration bill; D = row-shard count, M = model-axis size,
+rows_p = N/(B*D), C clusters, 4-byte scalars):
 
 ==============  =====================  ===================================
 mesh layout     collectives per sync   payload bytes per sync (per device)
@@ -47,7 +59,9 @@ mesh layout     collectives per sync   payload bytes per sync (per device)
 1-D (data)      1 allgather + 1 psum   allgather 4*N/B (labels);
                                        psum 4*(C + 2) (g + cost + changed)
 2-D (+model)    1 allgather + 1 psum   allgather 4*(N/B + 2*D) (labels
-                                       + packed cost/changed);
+                                       + packed cost/changed; x M when
+                                       s > 1 — the canonicalizing gather
+                                       spans the model axis too);
                                        psum 4*C*(rows_p + 2)
                                        (f block + counts + g, one flat
                                        concat over the model axis)
@@ -59,6 +73,15 @@ just wrote — so at exit the carried stats already describe the final
 labels. The one collective pair outside the loop is the PROLOGUE sync that
 seeds the carry from u0, so the audited outside-the-loop bill is also
 exactly {allgather: 1, psum: 1} (``launch.audit`` proves both statically).
+
+Cost semantics at exit: the returned cost is the one synced WITH the final
+labels — each row's min-distance measured against the stats of the
+PREVIOUS sync (the stats the assignment argmin'd over). On converged exits
+this equals the cost of the final labels under their own stats (the labels
+did not change, so the previous sync's stats are theirs); when the loop is
+cut off by ``max_iters`` it is the pipelined, one-sync-stale cost — NOT
+recomputed against the final stats, which would cost an extra epilogue
+psum and break the audited outside-the-loop bill.
 
 WHERE the per-device Gram blocks live is the ``GramEngine`` contract
 (repro.core.engine) — the same engine, and literally the same stats code
@@ -145,10 +168,11 @@ class DistInnerResult(NamedTuple):
 def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
                   diag_local, l_idx_cols, l_idx_rows, wgt_local,
                   n_local_rows: int, row_strides: tuple[int, ...],
-                  d_size: int):
+                  d_size: int, m_size: int):
     """Builds the while_loop body, cond, and carry init/unpack for one
-    device's shard. ``row_strides``/``d_size`` linearize this device's
-    position along the row axes (static, from the mesh shape)."""
+    device's shard. ``row_strides``/``d_size``/``m_size`` linearize this
+    device's position along the row axes and size the model axis (static,
+    from the mesh shape)."""
     spec = cfg.kernel
     row_axes, col_axis = cfg.row_axes, cfg.col_axis
     C = cfg.n_clusters
@@ -186,15 +210,27 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
             return flat[-2], flat[:-2], flat[-1]
         reduce_plan = ReducePlan(_fused_psum)
 
+    if s > 1:
+        # this shard's row-block offset in the global label vector (for
+        # scattering refined labels into the carried u_full estimate, and
+        # for slicing the canonical labels back out after a 2-D sync).
+        row_off = jnp.int32(0)
+        for a, stride in zip(row_axes, row_strides):
+            row_off = row_off + jax.lax.axis_index(a) * stride
+        row_off = row_off * n_local_rows
+
     def sync(u_local, cost_loc, changed_loc):
         """THE global sync: exactly 1 allgather + 1 psum, whatever the
-        layout. Returns (u_full, totals, locals, cost, changed) with
-        totals/locals the raw (un-normalized) stats payload of u_local's
-        global label vector."""
+        layout. Returns (u_loc, u_full, totals, locals, cost, changed)
+        with u_loc this shard's canonical labels (== ``u_local`` except
+        in 2-D s-step mode, see below), u_full the canonical global label
+        vector and totals/locals its raw (un-normalized) stats payload."""
         if not two_d:
             # 1-D: gather labels; ONE [C + 2] psum over the row axes
             # carries the g partials plus the cost/changed scalars —
-            # counts and f are already local totals.
+            # counts and f are already local totals. (No canonicalization
+            # needed at any s: row shards own DISJOINT rows, so there are
+            # no replicas whose refinements could disagree.)
             with jax.named_scope("obs:allgather_u"):
                 u_full = jax.lax.all_gather(u_local, row_axes, tiled=True)
             counts_p, f_p, g_p = local_stats(u_full)
@@ -205,33 +241,45 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
                 flat = jax.lax.psum(flat, row_axes)
             locs = (counts_p, f_p, g_p)
             totals = (counts_p, f_p, flat[:-2])
-            return u_full, totals, locs, flat[-2], flat[-1].astype(jnp.int32)
+            return (u_local, u_full, totals, locs, flat[-2],
+                    flat[-1].astype(jnp.int32))
         # 2-D: the cost/changed scalars ride the label gather (bitcast
         # into the same int32 buffer) so the row-axes reduction costs no
         # extra collective; counts/f/g then share one flat psum over the
         # model axis.
-        with jax.named_scope("obs:allgather_u"):
-            packed = jnp.concatenate([
-                u_local,
-                jax.lax.bitcast_convert_type(cost_loc[None], jnp.int32),
-                changed_loc[None]])
-            buf = jax.lax.all_gather(packed, row_axes, tiled=True)
-        buf = buf.reshape(d_size, n_local_rows + 2)
+        packed = jnp.concatenate([
+            u_local,
+            jax.lax.bitcast_convert_type(cost_loc[None], jnp.int32),
+            changed_loc[None]])
+        if s > 1:
+            # s-step refinements are collective-free and column-LOCAL, so
+            # model-axis replicas of the same row block legitimately
+            # arrive here with DIFFERENT refined labels (each refined
+            # against its own landmark-column slice of the stats). The
+            # label gather is widened to the model axis and model shard
+            # 0's labels/cost/changed are taken as THE canonical
+            # refinement, so every replica leaves the sync with identical
+            # labels and the model-axis stats psum below reduces partials
+            # of one consistent label vector — restoring the replication
+            # the out_specs promise. Still exactly 1 allgather + 1 psum;
+            # the gather payload grows by the model-axis factor M.
+            with jax.named_scope("obs:allgather_u"):
+                buf = jax.lax.all_gather(
+                    packed, row_axes + (col_axis,), tiled=True)
+            buf = buf.reshape(d_size, m_size, n_local_rows + 2)[:, 0]
+        else:
+            with jax.named_scope("obs:allgather_u"):
+                buf = jax.lax.all_gather(packed, row_axes, tiled=True)
+            buf = buf.reshape(d_size, n_local_rows + 2)
         u_full = buf[:, :n_local_rows].reshape(-1)
         cost = jnp.sum(jax.lax.bitcast_convert_type(
             buf[:, n_local_rows], jnp.float32))
         changed = jnp.sum(buf[:, n_local_rows + 1])
+        u_loc = (jax.lax.dynamic_slice(u_full, (row_off,), (n_local_rows,))
+                 if s > 1 else u_local)
         locs = local_stats(u_full)
         totals = reduce_plan(*locs)
-        return u_full, totals, locs, cost, changed
-
-    if s > 1:
-        # this shard's row-block offset in the global label vector (for
-        # scattering refined labels into the carried u_full estimate).
-        row_off = jnp.int32(0)
-        for a, stride in zip(row_axes, row_strides):
-            row_off = row_off + jax.lax.axis_index(a) * stride
-        row_off = row_off * n_local_rows
+        return u_loc, u_full, totals, locs, cost, changed
 
     def _rem(totals, locs):
         """Frozen remote contribution = reduced totals - own partials.
@@ -267,12 +315,12 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
         # follow their source row's label but must not inflate the cost.
         cost_loc = jnp.sum(
             wgt_local * (diag_local.astype(jnp.float32) + mind))
-        u_full2, totals2, locs2, cost2, changed2 = sync(
+        u2, u_full2, totals2, locs2, cost2, changed2 = sync(
             u_new, cost_loc, changed_loc)
         if s > 1:
-            return (u_new, u_full2, totals2, _rem(totals2, locs2),
+            return (u2, u_full2, totals2, _rem(totals2, locs2),
                     t + 1, cost2, changed2 > 0)
-        return u_new, totals2, t + 1, cost2, changed2 > 0
+        return u2, totals2, t + 1, cost2, changed2 > 0
 
     def cond(state):
         changed, t = state[-1], state[-3]
@@ -283,14 +331,14 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
         # cost/changed — overwritten by the first body's sync). This is
         # the only collective pair outside the while loop.
         u0 = u0_local.astype(jnp.int32)
-        u_full0, totals0, locs0, _, _ = sync(
+        u0c, u_full0, totals0, locs0, _, _ = sync(
             u0, jnp.float32(0.0), jnp.int32(0))
         t0 = jnp.array(0, jnp.int32)
         cost0 = jnp.array(jnp.inf, jnp.float32)
         if s > 1:
-            return (u0, u_full0, totals0, _rem(totals0, locs0),
+            return (u0c, u_full0, totals0, _rem(totals0, locs0),
                     t0, cost0, jnp.array(True))
-        return u0, totals0, t0, cost0, jnp.array(True)
+        return u0c, totals0, t0, cost0, jnp.array(True)
 
     def unpack(state):
         if s > 1:
@@ -329,10 +377,10 @@ def collectives_per_iteration(cfg: DistributedInnerConfig,
 def _inner_shard_fn(x_local, lm_cols, lm_rows, diag_local, l_idx_cols,
                     l_idx_rows, u0_local, wgt_local, *,
                     cfg: DistributedInnerConfig,
-                    row_strides: tuple[int, ...], d_size: int):
+                    row_strides: tuple[int, ...], d_size: int, m_size: int):
     body, cond, init, unpack = _body_factory(
         cfg, x_local, lm_cols, lm_rows, diag_local, l_idx_cols, l_idx_rows,
-        wgt_local, x_local.shape[0], row_strides, d_size)
+        wgt_local, x_local.shape[0], row_strides, d_size, m_size)
     state = jax.lax.while_loop(cond, body, init(u0_local))
     # NO fixpoint epilogue: the body syncs the stats of the labels it just
     # wrote, so at exit the carry already holds the final labels' stats
@@ -390,7 +438,7 @@ def distributed_kkmeans_fit(mesh: Mesh, x: Array, landmarks: Array,
         wgt = jnp.ones((x.shape[0],), jnp.float32)
 
     fn = partial(_inner_shard_fn, cfg=cfg, row_strides=row_strides,
-                 d_size=d_size)
+                 d_size=d_size, m_size=m_size)
     shard_fn = shard_map(
         fn, mesh=mesh,
         in_specs=(

@@ -17,12 +17,15 @@ backend. This module owns that dance:
     ``jax_platform_name`` the way the jax gpu-performance-tips page
     recommends.
 
-Flag availability is jaxlib-version-gated: ``--xla_gpu_enable_async_
-collectives`` was removed upstream once async collectives became the
-default (jaxlib >= ~0.4.30 hard-ABORTS on it at backend init), so it is
-only emitted for old jaxlibs that still parse it. Everything here is a
-plain env-var edit — no jax import happens in this module at call time
-unless ``set_platform`` is used.
+Flag availability is jaxlib-version-gated (``_GATED_GPU_FLAGS``): XLA
+deletes flags once their behavior becomes the default, and a jaxlib that
+no longer knows a flag hard-ABORTS at backend init — so every
+since-removed flag (``--xla_gpu_enable_async_collectives``,
+``--xla_gpu_enable_triton_softmax_fusion``, ...) carries the first jaxlib
+version WITHOUT it and is only emitted for provably older installs; an
+undeterminable jaxlib version fails closed (no gated flag at all).
+Everything here is a plain env-var edit — no jax import happens in this
+module at call time unless ``set_platform`` is used.
 """
 from __future__ import annotations
 
@@ -32,27 +35,37 @@ import warnings
 
 # the jax gpu-performance-tips flag set (latency-hiding scheduler + fusion
 # knobs). Safe to parse on CPU-only jaxlib builds: DebugOptions registers
-# xla_gpu_* flags regardless of backend.
+# xla_gpu_* flags regardless of backend. Only flags still present in
+# current XLA live here unconditionally; everything XLA has since deleted
+# goes through the version-gated table below.
 GPU_PERF_FLAGS = (
-    "--xla_gpu_enable_triton_softmax_fusion=true",
     "--xla_gpu_triton_gemm_any=True",
     "--xla_gpu_enable_latency_hiding_scheduler=true",
-    "--xla_gpu_enable_highest_priority_async_stream=true",
 )
 
-# removed upstream when async collectives became the default; newer
-# jaxlibs abort at backend init on an unknown XLA flag, so this one is
-# version-gated instead of listed unconditionally.
-_LEGACY_ASYNC_FLAG = "--xla_gpu_enable_async_collectives=true"
-_LEGACY_ASYNC_MAX_JAXLIB = (0, 4, 30)
+# Flags XLA has removed upstream (their behavior became the default).
+# Newer jaxlibs hard-ABORT at backend init on an unknown XLA flag, so each
+# is emitted only when the installed jaxlib is provably older than the
+# release that dropped it: (flag, first jaxlib WITHOUT the flag). When the
+# jaxlib version cannot be determined we fail CLOSED and emit none of
+# them — losing a hint flag is harmless, aborting the process is not.
+_GATED_GPU_FLAGS = (
+    # async collectives became the default in mid-0.4.x
+    ("--xla_gpu_enable_async_collectives=true", (0, 4, 30)),
+    # both dropped in the 0.5 line (still parsed by 0.4.36)
+    ("--xla_gpu_enable_triton_softmax_fusion=true", (0, 5, 0)),
+    ("--xla_gpu_enable_highest_priority_async_stream=true", (0, 5, 0)),
+)
 
 
-def _jaxlib_version() -> tuple:
+def _jaxlib_version() -> tuple | None:
+    """Installed jaxlib version triple, or None when unknown (fail closed:
+    callers must then treat every version-gated flag as unavailable)."""
     try:
         from importlib.metadata import version
         return tuple(int(p) for p in version("jaxlib").split(".")[:3])
     except Exception:                      # pragma: no cover - defensive
-        return (0, 0, 0)
+        return None
 
 
 def _merge_xla_flags(new_flags) -> bool:
@@ -86,8 +99,10 @@ def configure(*, gpu_flags: bool = True,
         applied["host_device_count"] = host_device_count
     if gpu_flags:
         flags = list(GPU_PERF_FLAGS)
-        if _jaxlib_version() < _LEGACY_ASYNC_MAX_JAXLIB:
-            flags.append(_LEGACY_ASYNC_FLAG)
+        ver = _jaxlib_version()
+        if ver is not None:   # unknown version -> skip every gated flag
+            flags += [f for f, removed_in in _GATED_GPU_FLAGS
+                      if ver < removed_in]
         changed |= _merge_xla_flags(flags)
         applied["gpu_flags"] = flags
     if changed and "jax" in sys.modules:   # too late for XLA_FLAGS

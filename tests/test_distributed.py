@@ -498,8 +498,15 @@ def test_sstep_matches_synchronous_on_both_layouts():
                                              s_step=s, **ax)
                 runs[s] = distributed_kkmeans_fit(mesh, x, x, l_idx, diag,
                                                   u0, cfg=cfg)
+            # same PARTITION, modulo cluster index permutation: the s-step
+            # trajectory differs (refinements argmin stale stats), so the
+            # index an escaping cluster lands on may permute even when the
+            # induced partition is identical.
+            l1 = np.asarray(runs[1].labels).tolist()
+            l2 = np.asarray(runs[2].labels).tolist()
+            pairs = set(zip(l1, l2))
             out[name] = {
-                "same": bool(jnp.all(runs[1].labels == runs[2].labels)),
+                "same": len(pairs) == len(set(l1)) == len(set(l2)),
                 "cost_err": abs(float(runs[1].cost) - float(runs[2].cost)),
                 "syncs_1": int(runs[1].n_iter),
                 "syncs_2": int(runs[2].n_iter)}
@@ -508,10 +515,64 @@ def test_sstep_matches_synchronous_on_both_layouts():
     for name, r in res.items():
         assert r["same"], f"{name}: s_step=2 partition != synchronous loop"
         assert r["cost_err"] < 1e-3, name
-        # the communication-avoiding point: no more global syncs than the
-        # synchronous loop (+1 allowed: on tiny problems that converge in a
-        # couple of sweeps, certifying the fixpoint under frozen remote
-        # stats can cost one extra sync; the ~1/s reduction is measured on
-        # longer runs by benchmarks/fig6_scaling.py).
-        assert r["syncs_2"] <= r["syncs_1"] + 1, name
+        # the communication-avoiding point: global syncs must not blow up
+        # relative to the synchronous loop (+s allowed: on tiny problems
+        # that converge in a couple of sweeps, certifying the fixpoint
+        # under frozen remote stats can cost extra syncs; the ~1/s
+        # reduction is measured on longer runs by
+        # benchmarks/fig6_scaling.py).
+        assert r["syncs_2"] <= r["syncs_1"] + 2, name
         assert r["syncs_2"] >= 1, name
+
+
+@pytest.mark.slow
+def test_sstep_2d_replicas_stay_consistent():
+    """s-step refinements are column-local, so model-axis replicas of the
+    same row block would silently diverge on a 2-D mesh if the sync did
+    not canonicalize labels over the model axis — the stats psum would
+    then mix partials of DIFFERENT label vectors and the returned f/g/
+    counts would not describe the returned labels at all. NON-separable
+    data (uniform noise, no converged fixpoint in a few sweeps) forces
+    real divergence; the contract under test: the mesh result's f/g/counts
+    are the stats of its labels, to a host-side recompute."""
+    res = _run_subprocess("""
+        from repro.core import KernelSpec
+        from repro.core.engine import (GramEngine, engine_stats_raw,
+                                       finalize_stats)
+        from repro.distributed.inner import (DistributedInnerConfig,
+                                             distributed_kkmeans_fit)
+
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.uniform(size=(512, 6)), jnp.float32)
+        spec = KernelSpec("rbf", gamma=2.0)
+        diag = spec.diag(x)
+        l_idx = jnp.arange(512, dtype=jnp.int32)
+        u0 = jnp.asarray(rng.integers(0, 5, 512), jnp.int32)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        out = {}
+        for s in (2, 4):
+            cfg = DistributedInnerConfig(
+                n_clusters=5, kernel=spec, max_iters=8, s_step=s,
+                row_axes=("data",), col_axis="model")
+            res = distributed_kkmeans_fit(mesh, x, x, l_idx, diag, u0,
+                                          cfg=cfg)
+            # host-side stats of the labels the mesh returned
+            eng = GramEngine(mode="materialize")
+            op_xl = eng.prepare(spec, x, x)
+            u = res.labels
+            f, g, counts = finalize_stats(*engine_stats_raw(
+                eng, spec, op_xl, op_xl, u, u, 5))
+            out[s] = {
+                "counts_ok": bool(jnp.all(counts == res.counts)),
+                "f_err": float(jnp.max(jnp.abs(f - res.f))),
+                "g_err": float(jnp.max(jnp.abs(g - res.g)))}
+        print(json.dumps(out))
+    """)
+    for s, r in res.items():
+        assert r["counts_ok"], \
+            f"s={s}: returned counts != counts of returned labels"
+        # fp-reduction-order tolerance only — a single flipped label moves
+        # f/g entries by O(kernel value) >> this.
+        assert r["f_err"] < 1e-4, f"s={s}: f inconsistent with labels"
+        assert r["g_err"] < 1e-4, f"s={s}: g inconsistent with labels"
