@@ -54,9 +54,22 @@ def load_bench(name: str) -> dict | None:
         return None
 
 
+def default_backend() -> str:
+    """The jax platform this process runs on ("unknown" without jax) —
+    the comparability column next to ``dtype``: a cpu interpret-mode
+    record must never baseline a tpu run."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "unknown"
+
+
 def record_bench(name: str, seconds: float, *, mode: str,
                  params: dict | None = None,
-                 obs: dict | None = None) -> str:
+                 obs: dict | None = None,
+                 dtype: str = "f32",
+                 backend: str | None = None) -> str:
     """Append-point of the perf trajectory: one ``results/BENCH_<name>.json``
     per benchmark run — wall time, the workload knobs the benchmark reports
     (n/B/s/m/method, via its payload's ``bench`` dict), mode and commit —
@@ -64,11 +77,20 @@ def record_bench(name: str, seconds: float, *, mode: str,
     flight-recorder summary (``repro.obs.export.summarize`` — the payload's
     ``obs`` dict when the benchmark ran with a recorder): folded into the
     record so a perf regression comes with its per-batch evidence
-    attached."""
+    attached.
+
+    ``dtype`` is the kernel-layer tile precision the run was configured
+    with ("f32" unless the benchmark says otherwise — sweeps that cover
+    both dtypes internally, like roofline, still record one run-level
+    value) and ``backend`` the jax platform (defaulted from the live
+    process). Both are comparability columns: benchmarks/run.py refuses to
+    diff a record against a baseline whose dtype or backend differs."""
     bench_dir = os.environ.get("REPRO_BENCH", "results")
     os.makedirs(bench_dir, exist_ok=True)
     path = os.path.join(bench_dir, f"BENCH_{name}.json")
     rec = {"benchmark": name, "seconds": seconds, "mode": mode,
+           "dtype": dtype,
+           "backend": backend if backend is not None else default_backend(),
            "commit": git_commit(), "params": params or {}}
     if obs:
         rec["obs"] = obs

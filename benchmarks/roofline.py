@@ -1,27 +1,40 @@
-"""Roofline analysis: GramEngine mode sweep + dry-run artifact terms.
+"""Roofline analysis: GramEngine mode x dtype sweep + dry-run terms.
 
 Part 1 — engine sweep (always runs): the exact inner loop under each
-GramEngine mode (materialize / fused / tiled, repro.core.engine) on one
+GramEngine mode (materialize / fused / tiled, repro.core.engine) AND each
+tile precision ("f32" / "bf16", repro.kernels.precision) on one
 mini-batch, measuring wall time and reporting the modeled per-iteration
-HBM traffic per row each residency implies:
+HBM traffic per row each (residency, dtype) implies — Q_t is the tile
+itemsize (4 or 2), the f panel is always 4-byte f32:
 
-    materialize:  Q * (|L| + C)    bytes/row  (read resident K + write f)
-    fused:        Q * (d + C)      bytes/row  (features in, f out; Gram
-                                               tiles never leave VMEM —
-                                               only when the Pallas path is
-                                               live; the jnp fallback is
-                                               recorded at panel traffic)
-    tiled:        Q * (|L| + C + d) bytes/row (panel streamed through HBM)
+    materialize:  Q_t*|L| + 4*C     bytes/row  (read resident K + write f)
+    fused:        Q_t*d + 4*C       bytes/row  (features in, f out; Gram
+                                                tiles never leave VMEM —
+                                                only when the Pallas path
+                                                is live; the jnp fallback
+                                                is recorded at panel
+                                                traffic)
+    tiled:        Q_t*(|L|+d) + 4*C bytes/row  (panel streamed through HBM)
 
 Each BENCH record names the ``path`` that actually ran (pallas /
-jnp-fallback / resident / streamed-panels) so trajectory diffs never
-compare a VMEM model against a fallback measurement.
+jnp-fallback / resident / streamed-panels) plus its ``dtype`` and
+``backend`` columns, so trajectory diffs never compare a VMEM model
+against a fallback measurement or a bf16 run against an f32 baseline.
 
-The three modes must label identically (asserted); the sweep records a
-``bench`` dict (mode -> seconds / iters / bytes-per-row / rows-per-sec)
-that benchmarks/run.py persists as results/BENCH_roofline.json — the perf
-trajectory of the engine subsystem. In fast (CI) mode the fused engine
-runs the Pallas kernel in interpret mode, so the kernel path compile-checks
+The fixture is well-separated blobs, so every (mode, dtype) cell must
+label IDENTICALLY (asserted — the bf16 tile rounding is absorbed by the
+cluster margins; tests/test_precision.py pins the same invariant). The
+bf16 fused cell must not be slower than the f32 fused cell: strictly on a
+real accelerator (halved HBM traffic), within a noise tolerance on the
+CPU interpret path, where the kernel body is *emulated* and there is no
+memory-bandwidth term for the dtype to win — the comparison there is a
+guard against pathological cast overhead, not a speedup claim.
+
+The sweep records a ``bench`` dict ("mode|dtype" -> seconds / iters /
+bytes-per-row / rows-per-sec / dtype / backend) that benchmarks/run.py
+persists as results/BENCH_roofline.json — the perf trajectory of the
+engine subsystem. In fast (CI) mode the fused engine runs the Pallas
+kernel in interpret mode, so the kernel path compile-checks both dtypes
 on every push.
 
 Part 2 — dry-run terms (when results/dryrun/*.json artifacts exist):
@@ -92,83 +105,120 @@ def terms(cell: dict) -> dict:
 
 
 def engine_sweep(fast: bool = True) -> dict:
-    """Measure the three GramEngine modes on one exact mini-batch."""
+    """Measure the GramEngine modes x tile dtypes on one exact mini-batch."""
     import time
 
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from sklearn.datasets import make_blobs
 
     from repro.core import GramEngine, KernelSpec
     from repro.core.kkmeans import kkmeans_fit
+    from repro.kernels import PRECISIONS, resolve_precision
 
     n, d, c = (512, 32, 8) if fast else (8192, 128, 32)
     s = 0.25
     lm = int(n * s)
     tile_rows = 128
+    # well-separated blobs: the cross-dtype labels-identical assert below
+    # needs cluster margins that absorb the bf16 tile rounding.
+    xs, _ = make_blobs(n_samples=n, n_features=d, centers=c,
+                       cluster_std=0.4, center_box=(-8.0, 8.0),
+                       random_state=0)
     rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    x = jnp.asarray(xs.astype(np.float32))
     spec = KernelSpec("rbf", gamma=1.0 / d)
     diag = spec.diag(x)
     l_idx = jnp.asarray(np.sort(rng.choice(n, lm, replace=False)), jnp.int32)
     u0 = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    # the comparability column is the PLATFORM the sweep ran on (a cpu
+    # interpret-mode figure must never baseline a tpu run); the kernel-body
+    # flavor (Mosaic/Triton) is implied by it — kernels/backend.py.
+    backend = jax.default_backend()
+    on_accelerator = backend in ("tpu", "gpu")
+    repeats = 3 if fast else 5
 
-    engines = {
-        "materialize": GramEngine("materialize"),
-        # fast/CI: interpret mode exercises the Pallas kernel body on CPU
-        # (the compile-check); full mode lets dispatch pick the backend.
-        "fused": GramEngine("fused", pallas="always" if fast else "auto",
-                            interpret=fast),
-        "tiled": GramEngine("tiled", tile_rows=tile_rows),
-    }
-    # the bytes model must describe the path that ACTUALLY runs: off-TPU
-    # without interpret mode, the fused engine's portable fallback
-    # transiently materializes the block — recording the VMEM-residency
-    # figure for it would poison the BENCH baseline.
-    fused_pallas = engines["fused"]._use_pallas(spec)
-    bytes_per_row = {
-        "materialize": 4.0 * (lm + c),
-        "fused": 4.0 * (d + c) if fused_pallas else 4.0 * (lm + c + d),
-        "tiled": 4.0 * (lm + c + d),
-    }
-    paths = {
-        "materialize": "resident",
-        "fused": "pallas" + ("-interpret" if fast else "")
-                 if fused_pallas else "jnp-fallback",
-        "tiled": "streamed-panels",
-    }
     bench = {"n": n, "d": d, "C": c, "L": lm, "tile_rows": tile_rows,
-             "modes": {}}
-    rows, labels_by_mode = [], {}
-    for mode, eng in engines.items():
-        fit = lambda: kkmeans_fit(x, l_idx, diag, u0, spec=spec,  # noqa: E731
-                                  n_clusters=c, engine=eng)
-        res = fit()                          # compile + warm cache
-        jax.block_until_ready(res.labels)
-        t0 = time.time()
-        res = fit()
-        jax.block_until_ready(res.labels)
-        dt = time.time() - t0
-        iters = int(res.n_iter)
-        rows_per_s = n * max(iters, 1) / max(dt, 1e-9)
-        labels_by_mode[mode] = np.asarray(res.labels)
-        bench["modes"][mode] = {
-            "seconds": dt, "iters": iters,
-            "path": paths[mode],
-            "bytes_per_row_iter": bytes_per_row[mode],
-            "rows_per_sec": rows_per_s,
-            "achieved_bytes_per_sec": bytes_per_row[mode] * rows_per_s,
+             "backend": backend, "modes": {}}
+    rows, labels_by_cell, seconds_by_cell = [], {}, {}
+    for precision in PRECISIONS:
+        qt = resolve_precision(precision).tile_itemsize
+        engines = {
+            "materialize": GramEngine("materialize", precision=precision),
+            # fast/CI: interpret mode exercises the Pallas kernel body on
+            # CPU (the compile-check, both dtypes); full mode lets dispatch
+            # pick the backend.
+            "fused": GramEngine("fused",
+                                pallas="always" if fast else "auto",
+                                interpret=fast, precision=precision),
+            "tiled": GramEngine("tiled", tile_rows=tile_rows,
+                                precision=precision),
         }
-        rows.append([mode, paths[mode], f"{dt*1e3:.1f}", iters,
-                     f"{bytes_per_row[mode]:.0f}",
-                     f"{rows_per_s/1e3:.1f}k"])
-    base = labels_by_mode["materialize"]
-    for mode, lab in labels_by_mode.items():
+        # the bytes model must describe the path that ACTUALLY runs:
+        # off-TPU without interpret mode, the fused engine's portable
+        # fallback transiently materializes the block — recording the
+        # VMEM-residency figure for it would poison the BENCH baseline.
+        fused_pallas = engines["fused"]._use_pallas(spec)
+        bytes_per_row = {
+            "materialize": qt * lm + 4.0 * c,
+            "fused": (qt * d + 4.0 * c) if fused_pallas
+                     else qt * (lm + d) + 4.0 * c,
+            "tiled": qt * (lm + d) + 4.0 * c,
+        }
+        paths = {
+            "materialize": "resident",
+            "fused": "pallas" + ("-interpret" if fast else "")
+                     if fused_pallas else "jnp-fallback",
+            "tiled": "streamed-panels",
+        }
+        for mode, eng in engines.items():
+            fit = lambda: kkmeans_fit(x, l_idx, diag, u0,  # noqa: E731
+                                      spec=spec, n_clusters=c, engine=eng)
+            res = fit()                          # compile + warm cache
+            jax.block_until_ready(res.labels)
+            dt = float("inf")
+            for _ in range(repeats):
+                t0 = time.time()
+                res = fit()
+                jax.block_until_ready(res.labels)
+                dt = min(dt, time.time() - t0)
+            iters = int(res.n_iter)
+            rows_per_s = n * max(iters, 1) / max(dt, 1e-9)
+            cell = f"{mode}|{precision}"
+            labels_by_cell[cell] = np.asarray(res.labels)
+            seconds_by_cell[cell] = dt
+            bench["modes"][cell] = {
+                "mode": mode, "dtype": precision, "backend": backend,
+                "seconds": dt, "iters": iters,
+                "path": paths[mode],
+                "bytes_per_row_iter": bytes_per_row[mode],
+                "rows_per_sec": rows_per_s,
+                "achieved_bytes_per_sec": bytes_per_row[mode] * rows_per_s,
+            }
+            rows.append([mode, precision, backend, paths[mode],
+                         f"{dt*1e3:.1f}", iters,
+                         f"{bytes_per_row[mode]:.0f}",
+                         f"{rows_per_s/1e3:.1f}k"])
+    base = labels_by_cell["materialize|f32"]
+    for cell, lab in labels_by_cell.items():
         assert (lab == base).all(), \
-            f"engine mode {mode} diverged from materialize labels"
-    table(f"GramEngine mode sweep (n={n}, |L|={lm}, C={c}, d={d})",
-          ["mode", "path", "wall ms", "iters", "bytes/row/iter", "rows/s"],
-          rows)
+            f"engine cell {cell} diverged from materialize|f32 labels"
+    # the tentpole's wall-clock claim: bf16 tiles must not cost time. On a
+    # real accelerator the fused path's HBM term halves, so strict <=; the
+    # CPU interpret path emulates the kernel body (no bandwidth term) and
+    # only guards against pathological cast overhead, within timer noise.
+    f32_fused, bf16_fused = seconds_by_cell["fused|f32"], \
+        seconds_by_cell["fused|bf16"]
+    tol = 1.0 if on_accelerator else 1.25
+    assert bf16_fused <= tol * f32_fused, (
+        f"bf16 fused {bf16_fused*1e3:.1f} ms > {tol:g} x f32 fused "
+        f"{f32_fused*1e3:.1f} ms")
+    bench["bf16_fused_speedup"] = f32_fused / max(bf16_fused, 1e-9)
+    table(f"GramEngine mode x dtype sweep (n={n}, |L|={lm}, C={c}, d={d}, "
+          f"backend={backend})",
+          ["mode", "dtype", "backend", "path", "wall ms", "iters",
+           "bytes/row/iter", "rows/s"], rows)
     return bench
 
 

@@ -57,8 +57,18 @@ def main(argv=None):
             # baseline still gets a trajectory row — the first run of a
             # fresh checkout (or a wiped results/) must not silently drop
             # out of the summary table.
-            if baseline and baseline.get("seconds") \
-                    and baseline.get("mode", run_mode) == run_mode:
+            run_dtype = (payload or {}).get("dtype", "f32")
+            run_backend = common.default_backend()
+            mismatch = None
+            if baseline:
+                for col, want in (("mode", run_mode),
+                                  ("dtype", run_dtype),
+                                  ("backend", run_backend)):
+                    have = baseline.get(col, want)
+                    if have != want:
+                        mismatch = f"{col}={have!r} vs this run's {want!r}"
+                        break
+            if baseline and baseline.get("seconds") and not mismatch:
                 pct = 100.0 * (seconds - baseline["seconds"]) \
                     / baseline["seconds"]
                 print(f"[{name}] baseline {baseline['seconds']:.1f}s "
@@ -66,16 +76,16 @@ def main(argv=None):
                       f"{seconds:.1f}s ({pct:+.1f}%)")
                 deltas.append((name, baseline["seconds"], seconds, pct))
             else:
-                if baseline:
-                    print(f"[{name}] baseline is mode="
-                          f"{baseline.get('mode')!r} — not comparable to "
-                          f"this {run_mode!r} run, recording fresh")
-                else:
+                if baseline and mismatch:
+                    print(f"[{name}] baseline {mismatch} — not "
+                          f"comparable, recording fresh")
+                elif not baseline:
                     print(f"[{name}] no recorded baseline — recording "
                           f"this run as the new one")
                 deltas.append((name, None, seconds, None))
             common.record_bench(
                 name, seconds, mode=run_mode,
+                dtype=run_dtype, backend=run_backend,
                 params=(payload or {}).get("bench", {}),
                 obs=(payload or {}).get("obs"))
         except Exception as e:

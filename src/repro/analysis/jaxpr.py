@@ -21,6 +21,14 @@ derivative wrappers) to produce a ``ProgramReport``:
 * **Pallas dispatch** — ``pallas_call`` occurrence counts. The PR 5 bug
   (a "fused" mode that never invoked its kernel) becomes unrepresentable:
   ``check_pallas`` fails the audit when presence mismatches the mode.
+* **accumulation precision** — the mixed-precision policy
+  (``repro.kernels.precision``) lets tiles be bf16 but requires every
+  accumulation to run f32. That is a *static* property of the kernel
+  jaxpr: ``check_precision`` scans each ``pallas_call``'s inner jaxpr and
+  flags any ``dot_general``/``reduce_sum`` whose output dtype is a
+  non-f32 float — a kernel that silently accumulates in bf16 (e.g. a
+  missing ``preferred_element_type``) fails the audit in BOTH dtype
+  configurations, before anything runs.
 * **host syncs** — callback primitives (``pure_callback``/``io_callback``/
   ``debug_callback``) that force a device⇄host round-trip, flagged
   especially inside loops where they serialize the dispatch stream.
@@ -31,7 +39,8 @@ are reported per-iteration and the caller supplies the realized ``n_iter``
 (``ProgramReport.collective_totals``). ``cond`` branches are merged by
 elementwise max (a conservative upper bound — branches of the audited hot
 paths are collective-free). ``pallas_call`` inner jaxprs are NOT descended
-into: their refs live in VMEM and would pollute the HBM residency walk.
+into by the residency walk (their refs live in VMEM and would pollute the
+HBM picture); they are collected aside and scanned by ``check_precision``.
 
 jnp-only analysis — no XLA compilation. The HLO-level cross-check (FLOPs,
 compiled peak bytes) is ``launch/audit.py`` + ``launch/hlocost.py``.
@@ -69,6 +78,13 @@ HOST_SYNC_PRIMS = frozenset({
 
 #: sub-jaxprs never descended into (off-HBM address spaces).
 _OPAQUE_PRIMS = frozenset({"pallas_call"})
+
+#: primitives that ACCUMULATE inside a Pallas kernel — their output dtype
+#: is the accumulator dtype, and the precision policy
+#: (``repro.kernels.precision``) requires it to be f32 even when the tile
+#: operands are bf16 (``preferred_element_type=jnp.float32`` on the MXU
+#: contraction; ``.astype(f32)`` before row reductions).
+_ACCUM_PRIMS = frozenset({"dot_general", "reduce_sum"})
 
 
 class AuditError(AssertionError):
@@ -132,6 +148,10 @@ class ProgramReport:
     host_callbacks_in_loop: dict = dataclasses.field(default_factory=dict)
     primitive_counts: dict = dataclasses.field(default_factory=dict)
     hlo: Optional[dict] = None      # launch/audit.py fills in hlocost terms
+    # (path, inner jaxpr) of every pallas_call — the VMEM programs the
+    # residency walk skips, kept for check_precision. Not serialized.
+    pallas_kernel_jaxprs: list = dataclasses.field(
+        default_factory=list, repr=False)
 
     # -- derived views -------------------------------------------------------
 
@@ -245,6 +265,45 @@ class ProgramReport:
                     f"program)"]
         return []
 
+    def check_precision(self) -> list:
+        """Every accumulation inside every ``pallas_call`` kernel is
+        statically f32 — the invariant the mixed-precision policy
+        (``repro.kernels.precision``) rests on. Tiles may be bf16 (that is
+        the point), but a ``dot_general`` or ``reduce_sum`` whose OUTPUT is
+        a non-f32 float means the kernel accumulates at tile precision:
+        unbounded rounding error growth with the contraction depth, and
+        exactly the bug a missing ``preferred_element_type`` introduces.
+        Integer outputs (argmin indices, hash tables) are exempt.
+
+        Dtype classification goes through ``jnp.issubdtype``: the extended
+        float dtypes (bfloat16 lives in ml_dtypes) are NOT ``np.floating``
+        subtypes — ``np.issubdtype`` calls them void and would wave the
+        exact bug this check exists for straight through."""
+        import jax.numpy as jnp
+        import numpy as np
+        out = []
+
+        def scan(jaxpr, where: str) -> None:
+            for eqn in jaxpr.eqns:
+                prim = eqn.primitive.name
+                if prim in _ACCUM_PRIMS:
+                    for v in eqn.outvars:
+                        dt = getattr(v.aval, "dtype", None)
+                        if (dt is not None
+                                and jnp.issubdtype(dt, jnp.floating)
+                                and dt != np.dtype(np.float32)):
+                            out.append(
+                                f"{self.name}: {prim} inside pallas kernel "
+                                f"[{where}] accumulates in {dt} (policy: "
+                                f"tiles may be bf16, accumulators must be "
+                                f"f32)")
+                for sub in _subjaxprs(eqn.params):
+                    scan(_open(sub), where)
+
+        for where, kj in self.pallas_kernel_jaxprs:
+            scan(kj, where)
+        return out
+
     def check_host_sync(self) -> list:
         """No host round-trip primitive inside an inner loop."""
         out = []
@@ -263,7 +322,9 @@ class ProgramReport:
         return self
 
     def to_dict(self) -> dict:
-        d = dataclasses.asdict(self)
+        d = dataclasses.asdict(
+            dataclasses.replace(self, pallas_kernel_jaxprs=[]))
+        del d["pallas_kernel_jaxprs"]
         d["collectives_per_iteration"] = self.collectives_per_iteration
         d["collective_bytes_per_iteration"] = \
             self.collective_bytes_per_iteration
@@ -359,7 +420,12 @@ class _Walker:
     def _descend(self, prim: str, eqn, mult: int, path: str) -> int:
         """Recurse into sub-jaxprs; returns the callee peak live bytes."""
         if prim in _OPAQUE_PRIMS:
-            return 0                       # VMEM address space, not HBM
+            # VMEM address space, not HBM — but keep the kernel program
+            # for the check_precision accumulator-dtype scan.
+            for sub in _subjaxprs(eqn.params):
+                self.r.pallas_kernel_jaxprs.append(
+                    (f"{path}/{prim}".lstrip("/"), _open(sub)))
+            return 0
         if prim == "while":
             loop = LoopReport(path=f"{path}/while".lstrip("/"))
             self.r.loops.append(loop)

@@ -51,17 +51,26 @@ class EmbedInnerResult(NamedTuple):
     cost: Array        # sum_i ||z_i - c_{u_i}||^2 at the fixpoint
 
 
-def assign_embedded(z: Array, centroids: Array, counts: Array | None = None
-                    ) -> tuple[Array, Array]:
+def assign_embedded(z: Array, centroids: Array, counts: Array | None = None,
+                    *, precision: str = "f32") -> tuple[Array, Array]:
     """Nearest-centroid labels + squared distances in embedded space.
 
     Clusters with ``counts == 0`` are unjoinable (+BIG), mirroring the exact
-    inner loop's empty-cluster rule.
+    inner loop's empty-cluster rule. ``precision`` rounds the embedded rows
+    to the policy tile dtype (kernels/precision.py) before the f32-accumulated
+    contraction — the jnp image of the fused kernel's bf16-tile path;
+    centroids stay f32 (they are the value panel, not a tile operand).
     """
+    if precision != "f32":
+        from repro.kernels.precision import resolve_precision
+        z = resolve_precision(precision).cast_tiles(z)
     zsq = jnp.sum(z.astype(jnp.float32) ** 2, axis=1)            # [n]
     csq = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)    # [C]
+    # explicit f32 upcast on both dot operands: z may be a bf16 tile while
+    # centroids are always f32, and lax.dot_general takes matched dtypes
     cross = jax.lax.dot_general(
-        z, centroids, (((1,), (1,)), ((), ())),
+        z.astype(jnp.float32), centroids.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                      # [n, C]
     d2 = jnp.maximum(zsq[:, None] + csq[None, :] - 2.0 * cross, 0.0)
     if counts is not None:
@@ -72,7 +81,8 @@ def assign_embedded(z: Array, centroids: Array, counts: Array | None = None
 def _means(z: Array, labels: Array, n_clusters: int):
     h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)    # [n, C]
     counts = jnp.sum(h, axis=0)
-    sums = jax.lax.dot_general(h, z, (((0,), (0,)), ((), ())),
+    sums = jax.lax.dot_general(h, z.astype(jnp.float32),
+                               (((0,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)  # [C, m]
     return sums / jnp.maximum(counts, 1.0)[:, None], counts
 
@@ -149,6 +159,7 @@ def fit_embedded(
     state: Optional[EmbedState] = None,
     checkpoint_cb: Optional[Callable[[EmbedState, int], None]] = None,
     recorder=None,
+    precision: str = "f32",
 ):
     """Embedded-space outer loop. Returns ``(EmbedState, [BatchStats])``.
 
@@ -158,17 +169,22 @@ def fit_embedded(
     closed on exit, success or failure. ``recorder`` (``repro.obs``) logs
     per-batch wall time, cost series and the measured-vs-predicted HBM
     watermark — all hooks host-side, outside the jitted steps.
+
+    ``precision`` ("f32" | "bf16", kernels/precision.py) rounds each
+    embedded batch Z ONCE to the tile dtype — under bf16 that halves the
+    batch-resident [n, m] term (the dominant footprint of this path) while
+    every contraction still accumulates f32.
     """
     from repro.data.loader import closing_source
     with closing_source(batches):
         return _fit_embedded_loop(batches, fmap, n_clusters=n_clusters,
                                   max_iters=max_iters, seed=seed,
                                   state=state, checkpoint_cb=checkpoint_cb,
-                                  recorder=recorder)
+                                  recorder=recorder, precision=precision)
 
 
 def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
-                       checkpoint_cb, recorder=None):
+                       checkpoint_cb, recorder=None, precision="f32"):
     import time
 
     from repro.core.minibatch import BatchStats  # cycle-free late import
@@ -180,10 +196,13 @@ def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
     history: list = []
     start = int(state.batches_done) if state is not None else 0
 
+    from repro.kernels.precision import resolve_precision
+    prec = resolve_precision(precision)
+
     for i, xb in enumerate(batches, start=start):
         t_batch = time.perf_counter()
         sparse = is_sparse(xb)
-        z = fmap(xb if sparse else jnp.asarray(xb))
+        z = prec.cast_tiles(fmap(xb if sparse else jnp.asarray(xb)))
         sub = jax.random.fold_in(key, i)
         if state is None:
             state, res = _first_batch_step(z, sub, n_clusters=n_clusters,
@@ -222,25 +241,32 @@ def _fit_embedded_loop(batches, fmap, *, n_clusters, max_iters, seed, state,
 
 
 def predict_embedded(x, state: EmbedState, fmap, *,
-                     use_fused: bool | None = None) -> Array:
+                     use_fused: bool | None = None,
+                     precision: str = "f32") -> Array:
     """Label new samples by nearest centroid in embedded space.
 
-    On TPU (or with ``use_fused=True``) this goes through the fused Pallas
-    embed+assign kernel — the [n, m] embedding never materializes in HBM.
-    CSR batches take the O(nnz) jnp sketch path instead (the fused kernel
-    consumes dense row tiles).
+    On TPU/GPU (or with ``use_fused=True``) this goes through the fused
+    Pallas embed+assign kernel — the [n, m] embedding never materializes in
+    HBM; the lowering (Mosaic vs Triton) follows the live jax backend
+    (kernels/backend.py). CSR batches take the O(nnz) jnp sketch path
+    instead (the fused kernel consumes dense row tiles). ``precision``
+    is the kernel-layer tile-dtype policy ("f32" | "bf16").
     """
+    from repro.kernels.backend import kernel_backend
     from repro.kernels.ops import embed_assign, use_pallas
     if is_sparse(x):
         labels, _ = assign_embedded(fmap(x), state.centroids,
-                                    state.cardinalities)
+                                    state.cardinalities, precision=precision)
         return labels
     fused = use_pallas() if use_fused is None else use_fused
     if fused:
         labels, _ = embed_assign(x, fmap, state.centroids,
                                  state.cardinalities,
-                                 interpret=jax.default_backend() != "tpu")
+                                 interpret=jax.default_backend()
+                                 not in ("tpu", "gpu"),
+                                 precision=precision,
+                                 backend=kernel_backend())
         return labels
     labels, _ = assign_embedded(fmap(x), state.centroids,
-                                state.cardinalities)
+                                state.cardinalities, precision=precision)
     return labels

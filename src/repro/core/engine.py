@@ -50,6 +50,8 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.precision import PRECISIONS, resolve_precision
+
 Array = jax.Array
 
 BIG = jnp.float32(1e30)  # "+inf" that survives argmin/min on bf16-ish inputs
@@ -96,19 +98,32 @@ class GramEngine:
 
     mode:          Gram residency — "materialize" | "fused" | "tiled".
     tile_rows:     row-panel height of the tiled mode (bounds its peak HBM).
-    pallas:        fused-mode dispatch — "auto" (TPU only) | "always" | "never".
+    pallas:        fused-mode dispatch — "auto" (TPU/GPU) | "always" | "never".
     interpret:     run the Pallas kernel in interpret mode (CPU tests).
     double_buffer: software-pipeline the tiled mode — build Gram panel
                    i+1 while panel i is being contracted, so XLA's
                    latency-hiding scheduler can overlap the build with the
                    contraction (and, on the mesh, with in-flight
                    collectives). Peak HBM holds two panels instead of one.
+                   The fused Pallas kernel reuses the flag for its in-kernel
+                   DMA slot pipelining (kernels/assign.py).
+    precision:     tile-dtype policy (kernels/precision.py) — "f32" | "bf16".
+                   ``prepare`` rounds the feature panels ONCE to the tile
+                   dtype, so every mode (resident block, Pallas tiles, jnp
+                   recompute) contracts the same rounded values and labels
+                   stay mode-independent at either precision. materialize
+                   additionally STORES the resident K block in the tile
+                   dtype — under bf16 that halves the dominant HBM term the
+                   planner prices (core.memory ``q_tile``). Accumulation is
+                   f32 everywhere, statically enforced by
+                   ``repro.analysis.check_precision``.
     """
     mode: str = "materialize"
     tile_rows: int = 256
     pallas: str = "auto"
     interpret: bool = False
     double_buffer: bool = True
+    precision: str = "f32"
 
     def __post_init__(self):
         if self.mode not in ENGINE_MODES:
@@ -119,17 +134,28 @@ class GramEngine:
                 f"pallas must be 'auto'|'always'|'never', got {self.pallas!r}")
         if self.tile_rows < 1:
             raise ValueError(f"tile_rows must be >= 1, got {self.tile_rows}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; have {PRECISIONS}")
 
     # -- per-batch setup -----------------------------------------------------
 
     def prepare(self, spec, x: Array, y: Array) -> GramOp:
         """Set up one contraction side: materialize evaluates (and keeps)
-        the block; fused/tiled only record the features."""
+        the block; fused/tiled only record the features. Feature panels are
+        rounded to the policy's tile dtype HERE — once per batch — so every
+        downstream consumer (Pallas tiles, jnp recompute, resident block)
+        sees identical values."""
+        p = resolve_precision(self.precision)
+        x, y = p.cast_tiles(x), p.cast_tiles(y)
         if self.mode == "materialize":
             # named profiler span (repro.obs.trace): the once-per-batch
             # Gram panel build shows up labelled in a device trace.
             with jax.named_scope("obs:gram_panel_build"):
-                return GramOp(x=x, y=y, k=spec(x, y).astype(jnp.float32))
+                # spec() accumulates f32 over the rounded tiles; the
+                # RESIDENT copy then stores in the tile dtype (the
+                # footprint knob), upcast again at matvec time.
+                return GramOp(x=x, y=y, k=spec(x, y).astype(p.tile_dtype))
         return GramOp(x=x, y=y, k=None)
 
     @staticmethod
@@ -149,7 +175,13 @@ class GramEngine:
             return False
         if self.pallas == "always" or self.interpret:
             return True
-        return jax.default_backend() == "tpu"
+        # both Pallas lowerings count: Mosaic on TPU, Triton on GPU
+        return jax.default_backend() in ("tpu", "gpu")
+
+    @staticmethod
+    def _kernel_backend() -> str:
+        from repro.kernels.backend import kernel_backend
+        return kernel_backend()
 
     def matvec(self, spec, op: GramOp, h: Array) -> Array:
         """(K @ h) -> [rows, C] fp32 — the Eq.6/17 contraction under this
@@ -165,7 +197,9 @@ class GramEngine:
             return kops.gram_matvec(
                 op.x, op.y, h, kind=spec.name, gamma=spec.gamma,
                 coef0=spec.coef0, degree=spec.degree,
-                interpret=self.interpret)
+                interpret=self.interpret, precision=self.precision,
+                backend=self._kernel_backend(),
+                double_buffer=self.double_buffer)
         if self.mode == "tiled":
             return _tiled_matvec(spec, op.x, op.y, h, self.tile_rows,
                                  double_buffer=self.double_buffer)
@@ -182,16 +216,21 @@ class GramEngine:
                 and self._use_pallas(spec))
 
 
-def resolve_engine(engine) -> GramEngine:
+def resolve_engine(engine, precision: Optional[str] = None) -> GramEngine:
     """Accept a GramEngine or a mode name (the MiniBatchConfig /
-    DistributedInnerConfig currency) and return the engine."""
-    if isinstance(engine, GramEngine):
-        return engine
+    DistributedInnerConfig currency) and return the engine. ``precision``
+    (config-level tile-dtype override) replaces the engine's policy when
+    given — configs carry precision as a plain string next to the engine
+    mode string, and this is where the two meet."""
     if isinstance(engine, str) and engine in ENGINE_MODES:
-        return GramEngine(mode=engine)
-    raise ValueError(
-        f"engine must be a GramEngine or one of {ENGINE_MODES}, "
-        f"got {engine!r}")
+        engine = GramEngine(mode=engine)
+    if not isinstance(engine, GramEngine):
+        raise ValueError(
+            f"engine must be a GramEngine or one of {ENGINE_MODES}, "
+            f"got {engine!r}")
+    if precision is not None and precision != engine.precision:
+        engine = dataclasses.replace(engine, precision=precision)
+    return engine
 
 
 def _tiled_matvec(spec, x: Array, y: Array, h: Array,
@@ -312,7 +351,9 @@ def engine_step(engine: GramEngine, spec, op_xl: GramOp, op_ll: GramOp,
         labels, mind, f = kops.assign_fused(
             op_xl.x, op_xl.y, labels_l, counts, g, n_clusters=n_clusters,
             kind=spec.name, gamma=spec.gamma, coef0=spec.coef0,
-            degree=spec.degree, interpret=engine.interpret)
+            degree=spec.degree, interpret=engine.interpret,
+            precision=engine.precision, backend=engine._kernel_backend(),
+            double_buffer=engine.double_buffer)
         return f, g, counts, labels, mind
     f, g, counts = engine_stats(engine, spec, op_xl, op_ll,
                                 labels_l, labels_l, n_clusters)

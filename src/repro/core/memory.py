@@ -166,11 +166,17 @@ def footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
 
 ENGINE_MODES = ("materialize", "fused", "tiled")
 
+# bytes per element of the kernel-layer TILE dtype (repro.kernels.precision
+# .Precision.tile_itemsize, duplicated here so the planner stays importable
+# without jax). Accumulators are always f32 — only tile terms reprice.
+_TILE_BYTES = {"f32": 4, "bf16": 2}
+
 
 def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
                            s: float = 1.0, d: int = 0,
                            mode: str = "materialize",
-                           tile_rows: int = 256) -> float:
+                           tile_rows: int = 256,
+                           q_tile: int | None = None) -> float:
     """Per-node bytes of one exact inner-loop iteration under a GramEngine
     mode (module docstring, engine paragraph).
 
@@ -178,6 +184,17 @@ def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     VMEM (nothing but the [rows, C] f panel in HBM); tiled streams
     ``tile_rows``-high panels. All modes pay the f panel, the label/medoid
     bookkeeping, and (d > 0) the feature rows the rebuild needs on-node.
+
+    ``q_tile`` is the dtype-aware half of the price (default: ``q``): bytes
+    per element of the TILE terms — the Gram block/panels and the feature
+    rows, exactly the arrays the precision policy
+    (``repro.kernels.precision``) stores in the tile dtype. Under bf16
+    (``q_tile=2``) the dominant ``rows*cols`` materialize term and the
+    feature term halve while the f panel and bookkeeping stay f32-priced
+    (they are accumulator outputs, never tiles) — which is why a bf16
+    policy can move the planner's materialize/tiled/fused frontier: a
+    resident block that misses the budget at q=4 may fit at q_tile=2, and
+    ``plan(precision="bf16")`` prices exactly that.
 
     This price is not only what the planner optimizes against — it is a
     statically *enforced* residency contract: ``repro.analysis.audit``
@@ -189,6 +206,7 @@ def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     to stream fails ``launch/audit.py`` before anything runs, rather than
     OOMing at scale (see the "Auditing the program" README section).
     """
+    qt = q if q_tile is None else q_tile
     nb = n / b
     rows = nb / p
     cols = s * nb
@@ -203,7 +221,7 @@ def engine_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
         k_term = 2.0 * min(tile_rows, rows) * cols
     else:
         raise ValueError(f"unknown engine mode {mode!r}; have {ENGINE_MODES}")
-    return q * (k_term + rows * c + nb + 2 * c + feat)
+    return qt * (k_term + feat) + q * (rows * c + nb + 2 * c)
 
 
 def s_step_state_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
@@ -358,6 +376,9 @@ class Plan:
     engine: str = "materialize"
     engine_footprints: dict = dataclasses.field(default_factory=dict)
     tile_rows: int = 256
+    # -- kernel-layer tile dtype the engine bills were priced at
+    #    (repro.kernels.precision): "bf16" halves the Gram/feature terms.
+    precision: str = "f32"
     # -- s-step communication-avoiding depth (distributed.inner.s_step):
     #    Lloyd refinements per global sync, and the replicated-carry bytes
     #    that depth costs per device (s_step_state_bytes).
@@ -368,10 +389,13 @@ class Plan:
         """The priced pick as a runnable ``GramEngine`` — mode AND the
         ``tile_rows`` the tiled footprint was validated with (threading the
         bare ``Plan.engine`` string would silently run default-height
-        panels the budget check never saw). Hand this to
-        ``MiniBatchConfig(engine=plan.gram_engine())``."""
+        panels the budget check never saw), AND the tile ``precision`` the
+        bills were priced at (a bf16-priced materialize plan run at f32
+        would carry twice the Gram bytes the budget check approved). Hand
+        this to ``MiniBatchConfig(engine=plan.gram_engine())``."""
         from .engine import GramEngine
-        return GramEngine(self.engine, tile_rows=self.tile_rows)
+        return GramEngine(self.engine, tile_rows=self.tile_rows,
+                          precision=self.precision)
     # -- the workload this plan was made for (frontier() re-prices with it)
     n: int = 0
     c: int = 0
@@ -424,7 +448,9 @@ class Plan:
             return (engine_footprint_bytes(self.n, self.b, self.c, self.p,
                                            self.q, s=m / nb, d=self.d,
                                            mode="tiled",
-                                           tile_rows=self.tile_rows)
+                                           tile_rows=self.tile_rows,
+                                           q_tile=_TILE_BYTES.get(
+                                               self.precision, self.q))
                     + selector_footprint_bytes(self.n, self.b, self.p,
                                                self.q, m=m, selector=sel))
 
@@ -474,6 +500,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
          selector: str = "uniform",
          prefetch_depth: int = 2,
          tile_rows: int = 256,
+         precision: str = "f32",
          s_step: int = 1,
          target_batch_seconds: float | None = None,
          measured_batch_seconds: float | None = None) -> Plan:
@@ -523,6 +550,15 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     auto-pick, and ``Plan.frontier()`` ranks all strategies by what their
     bytes buy at a fixed budget.
 
+    ``precision`` is the kernel-layer tile dtype
+    (``repro.kernels.precision``): "bf16" prices the Gram-block/panel and
+    feature terms of every engine mode at 2 bytes/element instead of 4
+    (``engine_footprint_bytes(q_tile=2)``) — accumulator outputs stay
+    f32-priced — which can move the materialize/tiled/fused pick: a
+    resident block over budget at f32 may fit at bf16. The pick is
+    threaded back out via ``Plan.precision`` / ``plan.gram_engine()`` so
+    the runtime engine actually stores tiles at the priced dtype.
+
     ``s_step`` is the communication-avoiding depth of the distributed
     inner loop (``DistributedInnerConfig.s_step``): s Lloyd refinements
     per global sync cut the collective bill to (1 allgather + 1 psum)/s
@@ -554,9 +590,17 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
     # -- Gram residency of the exact inner loop: cheapest-FLOP mode that
     #    fits (materialize amortizes the kernel evaluations; tiled/fused
     #    rebuild per iteration but cap the resident bytes).
+    if precision not in _TILE_BYTES:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"have {tuple(_TILE_BYTES)}")
+    q_tile = _TILE_BYTES[precision]
     eng_fp = {mode: engine_footprint_bytes(n, b, c, p, q, s=s, d=d,
-                                           mode=mode, tile_rows=tile_rows)
+                                           mode=mode, tile_rows=tile_rows,
+                                           q_tile=q_tile)
               for mode in ENGINE_MODES}
+    if precision != "f32":
+        note += (f"; tiles priced at {precision} "
+                 f"({q_tile} B/elem; accumulators stay f32)")
     # the s-step replicated carry rides along whatever the Gram residency
     # is, so it tightens every mode's budget check equally.
     fp_sstep = s_step_state_bytes(n, b, c, p, q, s_step=s_step)
@@ -618,6 +662,7 @@ def plan(n: int, c: int, machine: MachineSpec, *, d: int = 0,
         engine=engine,
         engine_footprints=eng_fp,
         tile_rows=tile_rows,
+        precision=precision,
         s_step=s_step,
         s_step_footprint=fp_sstep,
         n=n, c=c, d=d, p=p, q=q, density=density, sketchable=sketchable,

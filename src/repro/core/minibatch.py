@@ -73,6 +73,13 @@ class MiniBatchConfig:
     # ``Plan.engine``. Only meaningful for method="exact" (the embedded
     # methods never evaluate Gram blocks).
     engine: object = "materialize"
+    # tile-dtype policy of the kernel layer (repro.kernels.precision):
+    # "f32" | "bf16". bf16 halves the HBM bytes of every feature/Gram tile
+    # (and the resident K block / embedded batch Z) while ALL accumulation
+    # stays f32 — the planner (core.memory.plan) prices it via ``q_tile``
+    # and may move the engine-mode frontier. Applies to both the exact
+    # engine path and the embedded methods.
+    precision: str = "f32"
     # s-step communication-avoiding depth of the distributed exact inner
     # loop (distributed.inner.DistributedInnerConfig.s_step): Lloyd
     # refinements per global sync. 1 = fully synchronous (bit-identical
@@ -96,7 +103,11 @@ class MiniBatchConfig:
                 f"selector {name_of(self.selector)!r} only applies to "
                 f"landmark-based methods ('exact', 'nystrom'); "
                 f"method {self.method!r} has no landmarks")
-        eng = resolve_engine(self.engine)      # validates the mode name
+        # validates mode name + precision string (resolve_engine raises on
+        # either); the precision override itself is threaded at the
+        # resolve_engine call sites below.
+        eng = resolve_engine(self.engine, self.precision)
+        eng = dataclasses.replace(eng, precision="f32")
         if eng != GramEngine() and self.method != "exact":
             raise ValueError(
                 f"engine {eng.mode!r} only applies to method='exact' (the "
@@ -170,7 +181,7 @@ def _first_batch_step(x: Array, key: Array, *, cfg: MiniBatchConfig,
     res = kkmeans_fit(x, l_idx, diag_k, labels0, spec=spec,
                       n_clusters=cfg.n_clusters,
                       max_iters=cfg.max_inner_iters,
-                      engine=resolve_engine(cfg.engine))
+                      engine=resolve_engine(cfg.engine, cfg.precision))
     m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,
                            restrict_to_members=cfg.restrict_medoids_to_members)
     medoids = jnp.take(x, m_idx, axis=0)                           # [C, d]
@@ -203,7 +214,7 @@ def _next_batch_step(x: Array, key: Array, state: GlobalState, *,
     res = kkmeans_fit(x, l_idx, diag_k, labels0, spec=spec,
                       n_clusters=cfg.n_clusters,
                       max_iters=cfg.max_inner_iters,
-                      engine=resolve_engine(cfg.engine))
+                      engine=resolve_engine(cfg.engine, cfg.precision))
 
     # -- batch medoids (Eq.7/10).
     m_idx = medoid_indices(diag_k, res.f, res.labels, res.counts,
@@ -354,7 +365,7 @@ def _fit(batches, cfg, *, state, checkpoint_cb, fmap,
             rec.gauge("medoids/mean_displacement",
                       float(np.mean(h.displacement)), batch=i)
             obs_memory.watermark(
-                rec, batch=i, engine=resolve_engine(cfg.engine).mode,
+                rec, batch=i, engine=resolve_engine(cfg.engine, cfg.precision).mode,
                 predicted_bytes=obs_memory.predicted_batch_footprint(
                     cfg, n, int(xb.shape[1])))
             rec.batch_boundary(i)
@@ -391,7 +402,7 @@ def _fit_embedded(batches, cfg: MiniBatchConfig, *, state=None,
     est, history = approx.fit_embedded(
         it, fmap, n_clusters=cfg.n_clusters, max_iters=cfg.max_inner_iters,
         seed=cfg.seed, state=state, checkpoint_cb=checkpoint_cb,
-        recorder=recorder)
+        recorder=recorder, precision=cfg.precision)
     return FitResult(est, history, fmap=fmap, spec=cfg.kernel)
 
 

@@ -116,7 +116,8 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
         with jax.named_scope("obs:psum_fused"):
             h = jax.nn.one_hot(labels, n_clusters, dtype=jnp.float32)
             h = h * wgt_local[:, None]                   # padded rows -> 0
-            sums_p = jax.lax.dot_general(h, z_local, (((0,), (0,)), ((), ())),
+            sums_p = jax.lax.dot_general(h, z_local.astype(jnp.float32),
+                                         (((0,), (0,)), ((), ())),
                                          preferred_element_type=jnp.float32)
             counts_p = jnp.sum(h, axis=0)
             flat = jax.lax.psum(
@@ -142,9 +143,11 @@ def _shard_lloyd(z_local, wgt_local, centroids0, mask0, *, row_axes,
         return jnp.logical_and(changed, t < max_iters)
 
     # init: nearest centroid0 (masked like the single-device warm start).
-    d2 = (jnp.sum(z_local ** 2, axis=1)[:, None]
+    # f32 upcast: z_local may be a bf16 tile under the precision policy.
+    z32 = z_local.astype(jnp.float32)
+    d2 = (jnp.sum(z32 ** 2, axis=1)[:, None]
           + jnp.sum(centroids0 ** 2, axis=1)[None, :]
-          - 2.0 * z_local @ centroids0.T)
+          - 2.0 * z32 @ centroids0.T)
     d2 = jnp.where(mask0[None, :], d2, BIG)
     labels0 = jnp.argmin(d2, axis=1).astype(jnp.int32)
 
@@ -413,11 +416,18 @@ class DistributedEmbedKMeans:
         on their own (data, indices, indptr) slices — the embedding is the
         only dense array ever built from a sparse batch, and it is [rows, m]
         per device, never [n, d]."""
+        from repro.kernels.precision import resolve_precision
+        prec = resolve_precision(self.cfg.precision)
         with obs_trace.annotate("obs:embed_phi"):
             if st.sparse:
                 fn = self._embed_fn(("csr", st.rows, st.d))
-                return fn(self.fmap, st.data, st.indices, st.indptr)
-            return self._embed_fn(("dense",))(self.fmap, st.x)
+                z = fn(self.fmap, st.data, st.indices, st.indptr)
+            else:
+                z = self._embed_fn(("dense",))(self.fmap, st.x)
+        # tile-dtype policy: the mesh-resident [rows, m] shard is the
+        # dominant HBM term of this path — bf16 halves it; every Lloyd
+        # contraction upcasts to f32 (see _shard_lloyd).
+        return prec.cast_tiles(z)
 
     def _batch_step(self, x: Array, wgt: Array, centroids0: Array,
                     mask0: Array):

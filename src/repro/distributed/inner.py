@@ -143,6 +143,12 @@ class DistributedInnerConfig:
     max_iters: int = 100
     # Gram residency: "materialize" | "fused" | "tiled" or a GramEngine.
     engine: object = "materialize"
+    # tile-dtype policy (repro.kernels.precision): "f32" | "bf16". Applied
+    # through the engine: feature shards and (under materialize) resident
+    # Gram blocks move as bf16 tiles, all accumulation and every collective
+    # payload (counts/f/g partials) stays f32 — reduction order across the
+    # mesh never meets rounded operands.
+    precision: str = "f32"
     row_axes: tuple[str, ...] = ("data",)
     col_axis: str | None = "model"   # None -> faithful 1-D distribution
     # communication-avoiding depth: Lloyd refinements per global sync.
@@ -154,6 +160,7 @@ class DistributedInnerConfig:
     def __post_init__(self):
         if self.s_step < 1:
             raise ValueError(f"s_step must be >= 1, got {self.s_step}")
+        resolve_engine(self.engine, self.precision)   # validates both
 
 
 class DistInnerResult(NamedTuple):
@@ -177,7 +184,7 @@ def _body_factory(cfg: DistributedInnerConfig, x_local, lm_cols, lm_rows,
     row_axes, col_axis = cfg.row_axes, cfg.col_axis
     C = cfg.n_clusters
     s = cfg.s_step
-    engine = resolve_engine(cfg.engine)
+    engine = resolve_engine(cfg.engine, cfg.precision)
     two_d = col_axis is not None
 
     # per-batch Gram operators (paper lines 3 & 11-12 precompute): the

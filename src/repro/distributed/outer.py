@@ -101,6 +101,7 @@ class DistributedMiniBatchKMeans:
             n_clusters=cfg.n_clusters, kernel=cfg.kernel,
             max_iters=cfg.max_inner_iters,
             engine=resolve_engine(cfg.engine if mode is None else mode),
+            precision=getattr(cfg, "precision", "f32"),
             row_axes=row_axes, col_axis=col_axis,
             s_step=getattr(cfg, "s_step", 1))
         self._row_sharding = NamedSharding(mesh, P(row_axes, None))

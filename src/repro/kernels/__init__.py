@@ -1,11 +1,17 @@
 # TPU compute hot-spots of the paper (kernel-matrix evaluation — the part the
 # paper offloads to the accelerator) as Pallas kernels, plus the beyond-paper
 # fused assignment and the embedded-space fused embed+assign.
-# ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
+# ops.py = jit'd wrappers; ref.py = pure-jnp oracles; precision.py = the
+# tile-dtype policy (f32/bf16 tiles, f32 accumulation); backend.py = the
+# Mosaic/Triton lowering seam.
+from .backend import kernel_backend
 from .ops import (assign_fused, assign_fused_ref, embed_assign,
                   embed_assign_ref, gram_matvec, kernel_matrix,
                   kernel_matrix_ref, sketch_assign, sketch_assign_ref)
+from .precision import BF16, F32, PRECISIONS, Precision, resolve_precision
 
 __all__ = ["assign_fused", "assign_fused_ref", "embed_assign",
            "embed_assign_ref", "gram_matvec", "kernel_matrix",
-           "kernel_matrix_ref", "sketch_assign", "sketch_assign_ref"]
+           "kernel_matrix_ref", "sketch_assign", "sketch_assign_ref",
+           "Precision", "PRECISIONS", "F32", "BF16", "resolve_precision",
+           "kernel_backend"]

@@ -20,8 +20,16 @@ returned score is ||z - c_j||^2 - ||z||^2 (the row-constant ||z||^2 is
 dropped — it cannot change the argmin and, for Nystrom, is not computable
 without materializing Z).
 
-Grid: (rows/bm, M/bme, D/bd); embed and feature dims are reductions.
-Scratch: fp32 projection tile [bm, bme] + fp32 F accumulator [bm, Cp].
+TPU grid: (rows/bm, M/bme, D/bd); embed and feature dims are reductions.
+Scratch: fp32 projection tile [bm, bme] + fp32 F accumulator [bm, Cp] —
+accumulators stay f32 whatever the tile dtype (x/w may arrive bf16 under
+the kernels/precision.py policy: half the HBM/VMEM per tile, f32 math).
+The per-tile HBM loads are pipelined against the MXU by the Mosaic grid
+machinery (BlockSpec index maps); the fused exact-assignment kernel
+(kernels/assign.py) additionally hand-double-buffers its tiles.
+
+GPU body (``backend="gpu"``): register-accumulator row-block variant, see
+kernels/backend.py.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import gpu_compiler_params
 from .compat import CompilerParams
 from .kernel_matrix import _epilogue
 
@@ -76,12 +85,35 @@ def _kernel(x_ref, w_ref, xsq_ref, aux_ref, v_ref, csq_ref,
             score_ref[...] = jnp.min(score, axis=1, keepdims=True)
 
 
+def _kernel_gpu(x_ref, w_ref, xsq_ref, aux_ref, v_ref, csq_ref,
+                labels_ref, score_ref, *,
+                map_kind: str, gamma: float, coef0: float, degree: int,
+                scale: float):
+    a = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    aux = aux_ref[...].astype(jnp.float32)
+    if map_kind == "rff":
+        e = scale * jnp.cos(a + aux.T)
+    else:
+        xsq = xsq_ref[...].astype(jnp.float32)
+        e = _epilogue(map_kind, a, xsq, aux.T,
+                      gamma=gamma, coef0=coef0, degree=degree)
+    f = jax.lax.dot_general(
+        e, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    score = csq_ref[...].astype(jnp.float32) - 2.0 * f
+    labels_ref[...] = jnp.argmin(score, axis=1, keepdims=True
+                                 ).astype(jnp.int32)
+    score_ref[...] = jnp.min(score, axis=1, keepdims=True)
+
+
 def embed_assign_pallas(x, w, xsq, aux, v, csq, *,
                         map_kind: str = "rff", gamma: float = 1.0,
                         coef0: float = 1.0, degree: int = 3,
                         scale: float = 1.0,
                         bm: int = 256, bme: int = 256, bd: int = 512,
-                        interpret: bool = False):
+                        interpret: bool = False, backend: str = "tpu"):
     """Fused embed+assign on pre-padded inputs.
 
     x: [n, D] rows; w: [M, D] frequencies/landmarks; xsq: [n, 1] squared
@@ -93,6 +125,32 @@ def embed_assign_pallas(x, w, xsq, aux, v, csq, *,
     n, d = x.shape
     m = w.shape[0]
     cp = v.shape[1]
+    if backend == "gpu":
+        kernel = functools.partial(
+            _kernel_gpu, map_kind=map_kind, gamma=gamma, coef0=coef0,
+            degree=degree, scale=scale)
+        return pl.pallas_call(
+            kernel,
+            grid=(n // bm,),
+            in_specs=[
+                pl.BlockSpec((bm, d), lambda i: (i, 0)),    # x row panel
+                pl.BlockSpec((m, d), lambda i: (0, 0)),     # w
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),    # xsq
+                pl.BlockSpec((m, 1), lambda i: (0, 0)),     # aux
+                pl.BlockSpec((m, cp), lambda i: (0, 0)),    # v
+                pl.BlockSpec((1, cp), lambda i: (0, 0)),    # csq
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            ],
+            interpret=interpret,
+            **gpu_compiler_params(interpret=interpret),
+        )(x, w, xsq, aux, v, csq)
     grid = (n // bm, m // bme, d // bd)
     kernel = functools.partial(
         _kernel, map_kind=map_kind, gamma=gamma, coef0=coef0, degree=degree,

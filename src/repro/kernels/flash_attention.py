@@ -11,6 +11,17 @@ Grid: (B, H, Sq/bq, Sk/bk), key dim innermost (reduction). GQA is handled
 in the BlockSpec index maps (kv head = h // (H/KH)) — K/V are never
 repeated in memory. Causal masking skips fully-masked key blocks via
 ``pl.when`` (the compute for those blocks is elided, not just masked).
+
+Reachability triage (mixed-precision PR): this kernel was flagged as
+possibly dead — it is NOT. The live call chain is
+``repro.models.attention`` (``attn_impl="flash"``) -> ``kernels.ops
+.flash_attention`` -> ``flash_attention_pallas`` here, exercised by the
+model smoke tests and the training launcher, and the RK003 dead-kernel
+lint passes without a waiver. It therefore carries the full precision
+policy: ``ops.flash_attention(precision=)`` casts Q/K/V to the tile
+dtype, the softmax state (m, l) and the output accumulator stay f32
+whatever the tiles are, and ``launch/audit.py`` includes this kernel in
+the both-dtype ``check_precision`` sweep next to the clustering kernels.
 """
 from __future__ import annotations
 

@@ -6,10 +6,14 @@ TPU-native adaptation computes each (bm x bn) Gram tile on the MXU from
 dimension, and fuses the kernel epilogue (norm combine + exp / poly / cosine)
 into the same kernel so HBM only ever sees X, Y, and K.
 
-Grid: (M/bm, N/bn, D/bd), feature dim innermost (reduction). The fp32
+TPU grid: (M/bm, N/bn, D/bd), feature dim innermost (reduction). The fp32
 accumulator lives in a VMEM scratch tile; the epilogue fires on the last
 feature step. MXU alignment: the wrapper (ops.py) pads every tile dim to
-multiples of 128 (rows may use 8) and slices the result back.
+multiples of 128 (rows may use 8; 16 under bf16 — the Mosaic min-tile
+second-minor) and slices the result back. Feature tiles arrive in the
+caller's tile dtype (kernels/precision.py: bf16 halves HBM traffic);
+accumulation is always f32. GPU body: register-accumulator row panels
+(kernels/backend.py).
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import gpu_compiler_params
 from .compat import CompilerParams
 
 
@@ -59,18 +64,48 @@ def _kernel(x_ref, y_ref, xsq_ref, ysq_ref, out_ref, acc_ref, *,
                                  gamma=gamma, coef0=coef0, degree=degree)
 
 
+def _kernel_gpu(x_ref, y_ref, xsq_ref, ysq_ref, out_ref, *,
+                kind: str, gamma: float, coef0: float, degree: int):
+    acc = jax.lax.dot_general(
+        x_ref[...], y_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    xsq = xsq_ref[...].astype(jnp.float32)
+    ysq = ysq_ref[...].astype(jnp.float32)
+    out_ref[...] = _epilogue(kind, acc, xsq, ysq.T,
+                             gamma=gamma, coef0=coef0, degree=degree)
+
+
 def kernel_matrix_pallas(x, y, xsq, ysq, *, kind: str = "rbf",
                          gamma: float = 1.0, coef0: float = 1.0,
                          degree: int = 3, bm: int = 256, bn: int = 256,
-                         bd: int = 512, interpret: bool = False):
+                         bd: int = 512, interpret: bool = False,
+                         backend: str = "tpu"):
     """K(X, Y) on pre-padded inputs.
 
-    x: [M, D], y: [N, D] (M % bm == N % bn == D % bd == 0, zero padded),
-    xsq/ysq: [M, 1]/[N, 1] row squared norms of the *unpadded* features
-    (zero padding keeps the dot exact; norms are computed by ops.py).
+    x: [M, D], y: [N, D] (M % bm == N % bn == D % bd == 0, zero padded, in
+    the caller's tile dtype), xsq/ysq: [M, 1]/[N, 1] f32 row squared norms
+    of the *unpadded* features (zero padding keeps the dot exact; norms are
+    computed by ops.py).
     """
     m, d = x.shape
     n = y.shape[0]
+    if backend == "gpu":
+        kernel = functools.partial(
+            _kernel_gpu, kind=kind, gamma=gamma, coef0=coef0, degree=degree)
+        return pl.pallas_call(
+            kernel,
+            grid=(m // bm,),
+            in_specs=[
+                pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                pl.BlockSpec((n, d), lambda i: (0, 0)),
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=interpret,
+            **gpu_compiler_params(interpret=interpret),
+        )(x, y, xsq, ysq)
     grid = (m // bm, n // bn, d // bd)
     kernel = functools.partial(
         _kernel, kind=kind, gamma=gamma, coef0=coef0, degree=degree,

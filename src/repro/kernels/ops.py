@@ -5,6 +5,21 @@ selection against the VMEM budget, and CPU fallback (interpret mode runs the
 kernel body in Python — correct but slow, so the wrappers default to the
 pure-jnp oracle off-TPU unless forced for testing).
 
+Precision policy (kernels/precision.py): every wrapper takes a jit-static
+``precision`` ("f32" | "bf16"). The TILE operands — the arrays that stream
+through VMEM/register tiles and feed the MXU — are cast ONCE here at wrapper
+entry; squared norms are computed FROM the cast values so the kernels match
+the ``ref.py`` oracles (which round the same way) to f32-accumulation
+tolerance, not bf16 tolerance. Accumulators are always f32
+(``preferred_element_type``), statically enforced by
+``repro.analysis.check_precision``. Small panels (one-hots, compactness,
+value panels, norms) stay f32; the sketch sign table stores as int8 under
+bf16 (±1 is exact in every format).
+
+Backend seam (kernels/backend.py): ``backend`` ("tpu" | "gpu") picks the
+Mosaic grid/scratch body or the Triton register-accumulator body behind the
+same wrapper; both run under ``interpret=True`` on CPU for CI.
+
 This module is also the DISPATCH TABLE the static analyzer audits: every
 ``*_pallas`` wrapper defined under ``kernels/`` must be imported (reached)
 from here or another module, or lint rule RK003 flags it as a dead kernel
@@ -25,6 +40,7 @@ from .assign import assign_fused_pallas
 from .embed_assign import embed_assign_pallas
 from .flash_attention import flash_attention_pallas
 from .kernel_matrix import kernel_matrix_pallas
+from .precision import resolve_precision
 from .sketch_assign import sketch_assign_pallas
 
 Array = jax.Array
@@ -48,17 +64,25 @@ def _sqnorms(a: Array, n_pad: int) -> Array:
     return jnp.pad(s, ((0, n_pad - a.shape[0]), (0, 0)))
 
 
-def _pick_blocks(m: int, n: int, d: int, c: int = 0) -> tuple[int, int, int]:
+def _pick_blocks(m: int, n: int, d: int, c: int = 0, *,
+                 itemsize: int = 4,
+                 double_buffer: bool = False) -> tuple[int, int, int]:
     """Block shapes fitting the VMEM working set:
-    x(bm*bd) + y(bn*bd) + acc(bm*bn) + f(bm*c) fp32 words <= ~2 MWords.
-    Defaults favour MXU-shaped 256x256 tiles with the full feature panel."""
-    bm = min(256, _round_up(m, 8))
+    x(bm*bd) + y(bn*bd) tile-dtype bytes (x2 when the kernel hand-double-
+    buffers its slots) + acc(bm*bn) + f(bm*c) fp32 bytes <= ~8 MB.
+    Rows round to the Mosaic min-tile second-minor for the tile dtype
+    (8 for f32, 16 for bf16); lanes are always 128. Defaults favour
+    MXU-shaped 256x256 tiles with the full feature panel."""
+    row = 16 if itemsize < 4 else 8
+    bm = min(256, _round_up(m, row))
     bn = min(256, _round_up(n, 128))
     bd = min(512, _round_up(d, 128))
-    words = bm * bd + bn * bd + bm * bn + bm * max(c, 0)
-    while words > 2 * 1024 * 1024 and bd > 128:
+    slots = 2 if double_buffer else 1
+    tile_bytes = slots * itemsize * (bm * bd + bn * bd)
+    acc_bytes = 4 * (bm * bn + bm * max(c, 0))
+    while tile_bytes + acc_bytes > 8 * 1024 * 1024 and bd > 128:
         bd //= 2
-        words = bm * bd + bn * bd + bm * bn + bm * max(c, 0)
+        tile_bytes = slots * itemsize * (bm * bd + bn * bd)
     return bm, bn, bd
 
 
@@ -67,33 +91,40 @@ def use_pallas(mode: str = "auto") -> bool:
         return True
     if mode == "never":
         return False
-    return jax.default_backend() == "tpu"
+    # both Pallas lowerings count: Mosaic on TPU, Triton on GPU
+    return jax.default_backend() in ("tpu", "gpu")
 
 
 @partial(jax.jit, static_argnames=("kind", "gamma", "coef0", "degree",
-                                   "interpret"))
+                                   "interpret", "precision", "backend"))
 def kernel_matrix(x: Array, y: Array, *, kind: str = "rbf", gamma: float = 1.0,
                   coef0: float = 1.0, degree: int = 3,
-                  interpret: bool = True) -> Array:
+                  interpret: bool = True, precision: str = "f32",
+                  backend: str = "tpu") -> Array:
     """K(X, Y) -> [m, n] fp32 via the Pallas kernel (padded + sliced)."""
+    p = resolve_precision(precision)
+    x, y = p.cast_tiles(x), p.cast_tiles(y)
     m, d = x.shape
     n = y.shape[0]
-    bm, bn, bd = _pick_blocks(m, n, d)
+    bm, bn, bd = _pick_blocks(m, n, d, itemsize=p.tile_itemsize)
     mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bd)
     out = kernel_matrix_pallas(
         _pad2(x, mp, dp), _pad2(y, np_, dp),
         _sqnorms(x, mp), _sqnorms(y, np_),
         kind=kind, gamma=gamma, coef0=coef0, degree=degree,
-        bm=bm, bn=bn, bd=bd, interpret=interpret)
+        bm=bm, bn=bn, bd=bd, interpret=interpret, backend=backend)
     return out[:m, :n]
 
 
 @partial(jax.jit, static_argnames=("kind", "gamma", "coef0", "degree",
-                                   "n_clusters", "interpret"))
+                                   "n_clusters", "interpret", "precision",
+                                   "backend", "double_buffer"))
 def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
                  g: Array, *, n_clusters: int, kind: str = "rbf",
                  gamma: float = 1.0, coef0: float = 1.0, degree: int = 3,
-                 interpret: bool = True) -> tuple[Array, Array, Array]:
+                 interpret: bool = True, precision: str = "f32",
+                 backend: str = "tpu",
+                 double_buffer: bool = True) -> tuple[Array, Array, Array]:
     """Fused Eq.15/17: labels, mind = argmin/min_j (g_j - 2 (K @ H)_ij).
 
     Builds the normalized one-hot H from landmark labels + counts, pads the
@@ -102,10 +133,13 @@ def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
     the normalized f panel [n, C] (Eq.17) so the Eq.7 medoid argmin can run
     off the fused path without ever materializing K.
     """
+    p = resolve_precision(precision)
+    x, landmarks = p.cast_tiles(x), p.cast_tiles(landmarks)
     m, d = x.shape
     lm = landmarks.shape[0]
     cp = _round_up(max(n_clusters, 128), 128)
-    bm, bl, bd = _pick_blocks(m, lm, d, cp)
+    bm, bl, bd = _pick_blocks(m, lm, d, cp, itemsize=p.tile_itemsize,
+                              double_buffer=double_buffer and backend == "tpu")
     mp, lp, dp = _round_up(m, bm), _round_up(lm, bl), _round_up(d, bd)
 
     h = jax.nn.one_hot(labels_l, n_clusters, dtype=jnp.float32)
@@ -118,15 +152,18 @@ def assign_fused(x: Array, landmarks: Array, labels_l: Array, counts: Array,
         _pad2(x, mp, dp), _pad2(landmarks, lp, dp),
         _sqnorms(x, mp), _sqnorms(landmarks, lp),
         h, gp, kind=kind, gamma=gamma, coef0=coef0, degree=degree,
-        bm=bm, bl=bl, bd=bd, interpret=interpret)
+        bm=bm, bl=bl, bd=bd, interpret=interpret, backend=backend,
+        double_buffer=double_buffer)
     return labels[:m, 0], mind[:m, 0], f[:m, :n_clusters]
 
 
 @partial(jax.jit, static_argnames=("kind", "gamma", "coef0", "degree",
-                                   "interpret"))
+                                   "interpret", "precision", "backend",
+                                   "double_buffer"))
 def gram_matvec(x: Array, landmarks: Array, h: Array, *, kind: str = "rbf",
                 gamma: float = 1.0, coef0: float = 1.0, degree: int = 3,
-                interpret: bool = True) -> Array:
+                interpret: bool = True, precision: str = "f32",
+                backend: str = "tpu", double_buffer: bool = True) -> Array:
     """K(x, landmarks) @ h -> [n, C] fp32 without materializing K in HBM.
 
     The Gram-free contraction behind the GramEngine ``fused`` mode
@@ -136,10 +173,13 @@ def gram_matvec(x: Array, landmarks: Array, h: Array, *, kind: str = "rbf",
     fused assignment kernel with a dummy compactness row; the argmin outputs
     are dead code the scheduler overlaps with the DMA of f.
     """
+    p = resolve_precision(precision)
+    x, landmarks = p.cast_tiles(x), p.cast_tiles(landmarks)
     m, d = x.shape
     lm, c = landmarks.shape[0], h.shape[1]
     cp = _round_up(max(c, 128), 128)
-    bm, bl, bd = _pick_blocks(m, lm, d, cp)
+    bm, bl, bd = _pick_blocks(m, lm, d, cp, itemsize=p.tile_itemsize,
+                              double_buffer=double_buffer and backend == "tpu")
     mp, lp, dp = _round_up(m, bm), _round_up(lm, bl), _round_up(d, bd)
     _, _, f = assign_fused_pallas(
         _pad2(x, mp, dp), _pad2(landmarks, lp, dp),
@@ -147,7 +187,8 @@ def gram_matvec(x: Array, landmarks: Array, h: Array, *, kind: str = "rbf",
         _pad2(h.astype(jnp.float32), lp, cp),
         jnp.zeros((1, cp), jnp.float32),
         kind=kind, gamma=gamma, coef0=coef0, degree=degree,
-        bm=bm, bl=bl, bd=bd, interpret=interpret)
+        bm=bm, bl=bl, bd=bd, interpret=interpret, backend=backend,
+        double_buffer=double_buffer)
     return f[:m, :c]
 
 
@@ -178,37 +219,52 @@ def embed_panels(fmap, centroids: Array, counts: Array | None = None):
 
 
 @partial(jax.jit, static_argnames=("map_kind", "gamma", "coef0", "degree",
-                                   "scale", "interpret"))
+                                   "scale", "interpret", "precision",
+                                   "backend"))
 def _embed_assign_padded(x, w, aux, v, csq, *, map_kind, gamma, coef0,
-                         degree, scale, interpret):
+                         degree, scale, interpret, precision="f32",
+                         backend="tpu"):
+    p = resolve_precision(precision)
+    x, w = p.cast_tiles(x), p.cast_tiles(w)
+    if map_kind != "rff":
+        # Mercer epilogues need |w|^2 of the TILE values: recompute from the
+        # cast landmarks so the epilogue's norm/dot terms cancel exactly the
+        # way the oracle's do (aux from embed_panels is f32-derived).
+        aux = jnp.sum(w.astype(jnp.float32) ** 2, axis=1, keepdims=True)
     n, d = x.shape
     m = w.shape[0]
     cp = _round_up(max(csq.shape[0], 128), 128)
-    bm, bme, bd = _pick_blocks(n, m, d, cp)
+    bm, bme, bd = _pick_blocks(n, m, d, cp, itemsize=p.tile_itemsize)
     np_, mp, dp = _round_up(n, bm), _round_up(m, bme), _round_up(d, bd)
     csq_p = jnp.full((1, cp), 1e30, jnp.float32).at[0, :csq.shape[0]].set(csq)
     labels, score = embed_assign_pallas(
         _pad2(x, np_, dp), _pad2(w, mp, dp), _sqnorms(x, np_),
         _pad2(aux, mp, 1), _pad2(v, mp, cp), csq_p,
         map_kind=map_kind, gamma=gamma, coef0=coef0, degree=degree,
-        scale=scale, bm=bm, bme=bme, bd=bd, interpret=interpret)
+        scale=scale, bm=bm, bme=bme, bd=bd, interpret=interpret,
+        backend=backend)
     return labels[:n, 0], score[:n, 0]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def _sketch_assign_padded(x, h, sign, v, csq, *, interpret):
+@partial(jax.jit, static_argnames=("interpret", "precision", "backend"))
+def _sketch_assign_padded(x, h, sign, v, csq, *, interpret, precision="f32",
+                          backend="tpu"):
+    p = resolve_precision(precision)
+    x = p.cast_tiles(x)
     n, d = x.shape
     m = v.shape[0]
     cp = _round_up(max(csq.shape[0], 128), 128)
-    bm, bme, bd = _pick_blocks(n, m, d, cp)
+    bm, bme, bd = _pick_blocks(n, m, d, cp, itemsize=p.tile_itemsize)
     np_, mp, dp = _round_up(n, bm), _round_up(m, bme), _round_up(d, bd)
-    # padded columns: h = -1 matches no bucket, sign/x = 0 keep the dot exact
+    # padded columns: h = -1 matches no bucket, sign/x = 0 keep the dot
+    # exact. Sign storage follows the policy (int8 under bf16 — ±1 exact).
     h_p = jnp.full((dp, 1), -1, jnp.int32).at[:d, 0].set(h)
-    sign_p = jnp.zeros((dp, 1), jnp.float32).at[:d, 0].set(sign)
+    sign_p = jnp.zeros((dp, 1), p.sign_dtype).at[:d, 0].set(
+        sign.astype(p.sign_dtype))
     csq_p = jnp.full((1, cp), 1e30, jnp.float32).at[0, :csq.shape[0]].set(csq)
     labels, score = sketch_assign_pallas(
         _pad2(x, np_, dp), h_p, sign_p, _pad2(v, mp, cp), csq_p,
-        bm=bm, bme=bme, bd=bd, interpret=interpret)
+        bm=bm, bme=bme, bd=bd, interpret=interpret, backend=backend)
     return labels[:n, 0], score[:n, 0]
 
 
@@ -222,7 +278,8 @@ def _masked_csq(centroids: Array, counts: Array | None):
 
 def sketch_assign(x: Array, fmap, centroids: Array,
                   counts: Array | None = None, *,
-                  interpret: bool = True) -> tuple[Array, Array]:
+                  interpret: bool = True, precision: str = "f32",
+                  backend: str = "tpu") -> tuple[Array, Array]:
     """Fused count-sketch + nearest-centroid assignment (dense rows).
 
     Same contract as ``embed_assign``; the sketch tile is built in VMEM from
@@ -231,7 +288,8 @@ def sketch_assign(x: Array, fmap, centroids: Array,
     """
     c32, csq = _masked_csq(centroids, counts)
     return _sketch_assign_padded(x, fmap.h, fmap.sign, c32.T, csq,
-                                 interpret=interpret)
+                                 interpret=interpret, precision=precision,
+                                 backend=backend)
 
 
 @jax.jit
@@ -245,7 +303,8 @@ def _embed_assign_jnp(z: Array, centroids: Array, csq: Array):
 
 def embed_assign(x: Array, fmap, centroids: Array,
                  counts: Array | None = None, *,
-                 interpret: bool = True) -> tuple[Array, Array]:
+                 interpret: bool = True, precision: str = "f32",
+                 backend: str = "tpu") -> tuple[Array, Array]:
     """Fused feature-map + nearest-centroid assignment.
 
     labels, score = argmin/min_j (|c_j|^2 - 2 phi_m(x_i).c_j); the embedded
@@ -261,12 +320,16 @@ def embed_assign(x: Array, fmap, centroids: Array,
     from repro.approx.sketch import CountSketchMap, TensorSketchMap
 
     if isinstance(fmap, CountSketchMap):
-        return sketch_assign(x, fmap, centroids, counts, interpret=interpret)
+        return sketch_assign(x, fmap, centroids, counts, interpret=interpret,
+                             precision=precision, backend=backend)
     if isinstance(fmap, TensorSketchMap):
+        # no fused kernel (FFT conv) => no tile-dtype knob either; the jnp
+        # fallback runs the documented f32 path whatever the policy says.
         c32, csq = _masked_csq(centroids, counts)
         return _embed_assign_jnp(fmap(x), c32, csq)
     w, aux, v, csq, statics = embed_panels(fmap, centroids, counts)
     return _embed_assign_padded(x, w, aux, v, csq, interpret=interpret,
+                                precision=precision, backend=backend,
                                 **statics)
 
 
@@ -277,15 +340,21 @@ embed_assign_ref = ref.embed_assign_ref
 sketch_assign_ref = ref.sketch_assign_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "softcap", "interpret"))
+@partial(jax.jit, static_argnames=("causal", "softcap", "interpret",
+                                   "precision"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                     softcap: float | None = None,
-                    interpret: bool = True) -> Array:
+                    interpret: bool = True,
+                    precision: str = "f32") -> Array:
     """Flash attention via the Pallas kernel (pads Sq/Sk to block multiples,
-    slices back). q: [B, H, Sq, dh]; k/v: [B, KH, Sk, dh]."""
+    slices back). q: [B, H, Sq, dh]; k/v: [B, KH, Sk, dh]. The softmax state
+    and both accumulators stay f32 whatever tile dtype ``precision`` picks;
+    the output comes back in the tile dtype (q.dtype after the cast)."""
+    p = resolve_precision(precision)
+    q, k, v = p.cast_tiles(q), p.cast_tiles(k), p.cast_tiles(v)
     b, h, sq, dh = q.shape
     kh, sk = k.shape[1], k.shape[2]
-    bq = min(128, _round_up(sq, 8))
+    bq = min(128, _round_up(sq, 16 if p.tile_itemsize < 4 else 8))
     bk = min(128, _round_up(sk, 128))
     sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))

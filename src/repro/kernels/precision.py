@@ -1,0 +1,101 @@
+"""The kernel layer's precision policy — bf16 tiles, f32 accumulation.
+
+Every Pallas kernel in this package moves feature/landmark tiles from HBM
+into VMEM and contracts them on the MXU. The *tile* dtype is a policy knob
+(``Precision.tile``): bf16 tiles halve the HBM traffic and the VMEM bytes
+per block — which doubles the feasible block area and the effective MXU
+rate — while the *accumulator* dtype is NOT a knob: every ``dot_general``
+in every kernel body carries ``preferred_element_type=float32`` and every
+scratch accumulator is allocated f32. That invariant is enforced twice:
+
+  * here, at config time — ``Precision(accum=...)`` rejects anything but
+    ``"f32"`` so a low-precision accumulator is unrepresentable in config;
+  * statically, at trace time — ``repro.analysis``'s ``check_precision``
+    walks the ``pallas_call`` inner jaxprs and fails the audit on any
+    in-kernel dot whose output dtype is not f32 (``launch/audit.py``).
+
+The sketch path gets an extra integer policy: under bf16 the Rademacher
+sign table is stored int8 (cast to the tile dtype in-kernel — ±1 is exact
+in every float format), cutting the replicated O(d) table bytes 4x. The
+hash table stays int32 regardless: bucket ids range over the embedding
+dim m, which exceeds int8 long before sketching is worth doing.
+
+Correctness contract: the jnp oracles (``kernels/ref.py``) take the same
+``precision`` and round their inputs to the tile dtype before the f32
+math, so pallas-vs-oracle comparisons stay tight at every precision, and
+bf16-vs-f32 drift is bounded by the acceptance tests (labels identical on
+separated fixtures, NMI drift <= 1e-3 otherwise — tests/test_precision.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PRECISIONS = ("f32", "bf16")
+
+#: precision name -> numpy/jnp dtype name of the HBM/VMEM tiles.
+_TILE_DTYPES = {"f32": "float32", "bf16": "bfloat16"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Hashable (jit-static) precision policy of the kernel layer.
+
+    tile:  dtype of the feature/landmark/frequency tiles the kernels move
+           through HBM and VMEM — "f32" | "bf16".
+    accum: accumulator dtype — always "f32"; any other value raises
+           (the point: silent low-precision accumulation cannot be
+           configured, only written as a bug, which ``check_precision``
+           then catches statically).
+    """
+    tile: str = "f32"
+    accum: str = "f32"
+
+    def __post_init__(self):
+        if self.tile not in PRECISIONS:
+            raise ValueError(
+                f"tile precision must be one of {PRECISIONS}, "
+                f"got {self.tile!r}")
+        if self.accum != "f32":
+            raise ValueError(
+                "accumulation is always f32 in this kernel layer "
+                f"(got accum={self.accum!r}); bf16 applies to tiles only")
+
+    @property
+    def tile_dtype(self):
+        """The tile dtype as a jnp dtype (lazy jax import)."""
+        import jax.numpy as jnp
+        return jnp.dtype(_TILE_DTYPES[self.tile])
+
+    @property
+    def tile_itemsize(self) -> int:
+        """Bytes per tile element — the planner's bytes-per-element knob."""
+        return 4 if self.tile == "f32" else 2
+
+    @property
+    def sign_dtype(self):
+        """Storage dtype of the count-sketch sign table: int8 under bf16
+        (±1 is exact in any float format the kernel casts to), f32 at full
+        precision for bit-compatibility with the pre-policy layout."""
+        import jax.numpy as jnp
+        return jnp.dtype("int8") if self.tile == "bf16" \
+            else jnp.dtype("float32")
+
+    def cast_tiles(self, a):
+        """Round an array to the tile dtype (no-op at f32)."""
+        return a if self.tile == "f32" else a.astype(self.tile_dtype)
+
+
+F32 = Precision()
+BF16 = Precision(tile="bf16")
+
+
+def resolve_precision(precision) -> Precision:
+    """Accept a Precision or a name ("f32" | "bf16" — the MiniBatchConfig /
+    GramEngine currency) and return the policy."""
+    if isinstance(precision, Precision):
+        return precision
+    if isinstance(precision, str) and precision in PRECISIONS:
+        return BF16 if precision == "bf16" else F32
+    raise ValueError(
+        f"precision must be a Precision or one of {PRECISIONS}, "
+        f"got {precision!r}")

@@ -2,6 +2,13 @@
 
 Every Pallas kernel in this package must ``assert_allclose`` against these
 functions across the shape/dtype sweep in tests/test_pallas_kernels.py.
+
+``precision`` mirrors the kernel layer's policy (kernels/precision.py):
+the oracle rounds its tile operands to the tile dtype FIRST and then runs
+all math in f32 — exactly the ``preferred_element_type=float32`` semantics
+of the Pallas bodies (bf16 tiles, f32 accumulation). That keeps
+pallas-vs-oracle comparisons tight at every precision; bf16-vs-f32 drift
+is bounded separately by tests/test_precision.py.
 """
 from __future__ import annotations
 
@@ -11,12 +18,21 @@ import jax.numpy as jnp
 Array = jax.Array
 
 
+def _tile(a: Array, precision: str) -> Array:
+    """Round a tile operand to the policy's tile dtype, then lift to f32
+    (the accumulate dtype) — the oracle-side image of a bf16 VMEM tile
+    feeding an f32 MXU accumulator."""
+    if precision == "bf16":
+        a = a.astype(jnp.bfloat16)
+    return a.astype(jnp.float32)
+
+
 def kernel_matrix_ref(x: Array, y: Array, *, kind: str = "rbf",
                       gamma: float = 1.0, coef0: float = 1.0,
-                      degree: int = 3) -> Array:
-    """K(X, Y) -> [m, n] fp32, fp32 accumulation."""
-    xf = x.astype(jnp.float32)
-    yf = y.astype(jnp.float32)
+                      degree: int = 3, precision: str = "f32") -> Array:
+    """K(X, Y) -> [m, n] fp32, fp32 accumulation over tile-dtype operands."""
+    xf = _tile(x, precision)
+    yf = _tile(y, precision)
     dot = xf @ yf.T
     if kind == "linear":
         return dot
@@ -35,7 +51,8 @@ def kernel_matrix_ref(x: Array, y: Array, *, kind: str = "rbf",
 
 def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
                      *, kind: str = "rbf", gamma: float = 1.0,
-                     coef0: float = 1.0, degree: int = 3):
+                     coef0: float = 1.0, degree: int = 3,
+                     precision: str = "f32"):
     """Fused assignment oracle.
 
     x: [n, d] rows; landmarks: [L, d]; h_norm: [L, C] one-hot(labels)/counts;
@@ -45,7 +62,7 @@ def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
       labels = argmin_j g_j - 2 f_ij       (Eq.15)
     """
     k = kernel_matrix_ref(x, landmarks, kind=kind, gamma=gamma,
-                          coef0=coef0, degree=degree)
+                          coef0=coef0, degree=degree, precision=precision)
     f = k @ h_norm.astype(jnp.float32)
     dist = g[None, :].astype(jnp.float32) - 2.0 * f
     return (jnp.argmin(dist, axis=1).astype(jnp.int32),
@@ -55,7 +72,8 @@ def assign_fused_ref(x: Array, landmarks: Array, h_norm: Array, g: Array,
 def embed_assign_ref(x: Array, w: Array, v: Array, csq: Array, *,
                      map_kind: str = "rff", gamma: float = 1.0,
                      coef0: float = 1.0, degree: int = 3,
-                     scale: float = 1.0, b: Array | None = None):
+                     scale: float = 1.0, b: Array | None = None,
+                     precision: str = "f32"):
     """Fused embed+assign oracle (the kernel's correctness contract).
 
     x: [n, d] rows; w: [M, d] RFF frequencies (map_kind="rff", with phases
@@ -68,17 +86,19 @@ def embed_assign_ref(x: Array, w: Array, v: Array, csq: Array, *,
       labels = argmin_j score_ij.
     """
     if map_kind == "rff":
-        a = x.astype(jnp.float32) @ w.astype(jnp.float32).T
+        a = _tile(x, precision) @ _tile(w, precision).T
         e = scale * jnp.cos(a + b.astype(jnp.float32)[None, :])
     else:
         e = kernel_matrix_ref(x, w, kind=map_kind, gamma=gamma,
-                              coef0=coef0, degree=degree)
+                              coef0=coef0, degree=degree,
+                              precision=precision)
     f = e @ v.astype(jnp.float32)
     score = csq[None, :].astype(jnp.float32) - 2.0 * f
     return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
 
 
-def sketch_assign_ref(x: Array, h: Array, sign: Array, v: Array, csq: Array):
+def sketch_assign_ref(x: Array, h: Array, sign: Array, v: Array, csq: Array,
+                      *, precision: str = "f32"):
     """Fused count-sketch + assign oracle (kernels/sketch_assign.py contract).
 
     x: [n, d] rows; h: [d] int32 bucket ids (-1 = padded column, lands
@@ -90,8 +110,8 @@ def sketch_assign_ref(x: Array, h: Array, sign: Array, v: Array, csq: Array):
       labels = argmin_j score_ij.
     """
     m = v.shape[0]
-    s = jax.nn.one_hot(h, m, dtype=jnp.float32) * sign[:, None]   # [d, m]
-    z = x.astype(jnp.float32) @ s
+    s = jax.nn.one_hot(h, m, dtype=jnp.float32) * sign.astype(jnp.float32)[:, None]
+    z = _tile(x, precision) @ s
     score = csq[None, :].astype(jnp.float32) - 2.0 * z @ v.astype(jnp.float32)
     return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
 

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import gpu_compiler_params
 from .compat import CompilerParams
 
 
@@ -60,13 +61,17 @@ def _kernel(x_ref, h_ref, sign_ref, v_ref, csq_ref,
     def _init_a():
         acc_a_ref[...] = jnp.zeros_like(acc_a_ref)
 
+    xt = x_ref[...]                                  # [bm, bd] tile dtype
     h = h_ref[...]                                   # [bd, 1] int32
-    sign = sign_ref[...].astype(jnp.float32)         # [bd, 1]
+    # sign table storage is a precision-policy choice (int8 under bf16 —
+    # ±1 is exact in every float format); the in-VMEM sketch tile is built
+    # in the x tile dtype so the MXU contraction sees matched operands.
+    sign = sign_ref[...].astype(xt.dtype)            # [bd, 1]
     bd = h.shape[0]
     lane = jax.lax.broadcasted_iota(jnp.int32, (bd, bme), 1) + j * bme
-    s = jnp.where(h == lane, sign, 0.0)              # [bd, bme] sketch tile
+    s = jnp.where(h == lane, sign, jnp.zeros((), xt.dtype))
     acc_a_ref[...] += jax.lax.dot_general(
-        x_ref[...], s, (((1,), (0,)), ((), ())),
+        xt, s, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     @pl.when(k == n_feat_steps - 1)
@@ -84,13 +89,33 @@ def _kernel(x_ref, h_ref, sign_ref, v_ref, csq_ref,
             score_ref[...] = jnp.min(score, axis=1, keepdims=True)
 
 
+def _kernel_gpu(x_ref, h_ref, sign_ref, v_ref, csq_ref,
+                labels_ref, score_ref, *, m: int):
+    xt = x_ref[...]                                  # [bm, D]
+    h = h_ref[...]                                   # [D, 1] int32
+    sign = sign_ref[...].astype(xt.dtype)            # [D, 1]
+    d = h.shape[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (d, m), 1)
+    s = jnp.where(h == lane, sign, jnp.zeros((), xt.dtype))
+    z = jax.lax.dot_general(xt, s, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    f = jax.lax.dot_general(z, v_ref[...].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    score = csq_ref[...].astype(jnp.float32) - 2.0 * f
+    labels_ref[...] = jnp.argmin(score, axis=1, keepdims=True
+                                 ).astype(jnp.int32)
+    score_ref[...] = jnp.min(score, axis=1, keepdims=True)
+
+
 def sketch_assign_pallas(x, h, sign, v, csq, *,
                          bm: int = 256, bme: int = 256, bd: int = 512,
-                         interpret: bool = False):
+                         interpret: bool = False, backend: str = "tpu"):
     """Fused count-sketch + assign on pre-padded inputs.
 
-    x: [n, D] rows; h: [D, 1] int32 bucket ids (-1 on padded columns);
-    sign: [D, 1] f32 Rademacher signs (0 on padding); v: [M, Cp] value panel
+    x: [n, D] rows (tile dtype); h: [D, 1] int32 bucket ids (-1 on padded
+    columns); sign: [D, 1] Rademacher signs — f32 at full precision, int8
+    under the bf16 policy (0 on padding either way); v: [M, Cp] value panel
     (centroids^T, zero rows for padded embed dims); csq: [1, Cp] centroid
     squared norms (+BIG on padded clusters).
     Returns (labels [n, 1] int32, score [n, 1] f32 = min_j |c_j|^2 - 2 z.c_j).
@@ -98,6 +123,28 @@ def sketch_assign_pallas(x, h, sign, v, csq, *,
     n, d = x.shape
     m = v.shape[0]
     cp = v.shape[1]
+    if backend == "gpu":
+        return pl.pallas_call(
+            functools.partial(_kernel_gpu, m=m),
+            grid=(n // bm,),
+            in_specs=[
+                pl.BlockSpec((bm, d), lambda i: (i, 0)),    # x row panel
+                pl.BlockSpec((d, 1), lambda i: (0, 0)),     # h
+                pl.BlockSpec((d, 1), lambda i: (0, 0)),     # sign
+                pl.BlockSpec((m, cp), lambda i: (0, 0)),    # v
+                pl.BlockSpec((1, cp), lambda i: (0, 0)),    # csq
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n, 1), jnp.int32),
+                jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            ],
+            interpret=interpret,
+            **gpu_compiler_params(interpret=interpret),
+        )(x, h, sign, v, csq)
     grid = (n // bm, m // bme, d // bd)
     kernel = functools.partial(
         _kernel, n_embed_steps=grid[1], n_feat_steps=grid[2], bme=bme)

@@ -13,7 +13,20 @@ and proves from the jaxprs (``repro.analysis``):
     the mode is ``materialize`` (the tiled/fused residency promise);
   * Pallas dispatch — ``pallas_call`` present iff mode == "fused" (the
     PR 5 dead-kernel bug, decided before anything runs);
-  * host-sync hygiene — no callback primitives inside inner loops.
+  * host-sync hygiene — no callback primitives inside inner loops;
+  * accumulation precision — every Pallas kernel the repo ships
+    (kernel_matrix, assign_fused, embed_assign, sketch_assign,
+    flash_attention) is traced in BOTH tile dtypes ("f32" and "bf16",
+    ``repro.kernels.precision``) and ``check_precision`` proves each
+    in-kernel ``dot_general``/``reduce_sum`` statically accumulates f32 —
+    the invariant the mixed-precision policy rests on. The engine-mode
+    audits run at both precisions too, with the memory budget re-priced
+    at the tile dtype (``engine_footprint_bytes(q_tile=...)``).
+
+``--gpu-trace`` repeats the kernel-wrapper sweep with ``backend="gpu"``:
+the Triton-lowering bodies (kernels/backend.py) are dry-traced — jaxpr
+only, nothing compiles or runs, so this works on the CPU CI host — and
+held to the same f32-accumulation standard as the Mosaic bodies.
 
 ``--hlo`` additionally compiles each single-host program and attaches
 ``launch/hlocost.py``'s loop-aware FLOPs / HBM bytes plus XLA's own
@@ -37,6 +50,7 @@ from repro.analysis import ProgramReport, audit
 from repro.core.engine import ENGINE_MODES, GramEngine
 from repro.core.kernels import KernelSpec
 from repro.core.memory import engine_footprint_bytes
+from repro.kernels.precision import PRECISIONS
 
 #: jaxpr-level liveness double-counts what XLA fuses (see
 #: ProgramReport.check_memory) — 4x absorbs the elementwise-chain
@@ -50,20 +64,23 @@ def _round_up(v: int, m: int) -> int:
 
 
 def mode_budget(n: int, d: int, n_landmarks: int, c: int, mode: str,
-                tile_rows: int, *, pallas: bool) -> float:
+                tile_rows: int, *, pallas: bool,
+                precision: str = "f32") -> float:
     """The planner's priced per-iteration footprint for one audit shape.
 
     The Pallas path (fused mode on an accelerator, or interpret mode here)
     pads rows/landmarks/features up to its 128-multiple block grid before
     dispatch, so its *traced* intermediates are the padded arrays — price
     the budget at the padded shape or the audit would compare apples to
-    oranges."""
+    oranges. ``precision`` re-prices the tile terms at the policy dtype
+    (bf16 tiles are half the bytes the trace actually carries)."""
     if pallas:
         n = _round_up(n, 128)
         d = _round_up(d, 128)
         n_landmarks = _round_up(n_landmarks, 128)
     return engine_footprint_bytes(
-        n, 1, c, 1, s=n_landmarks / n, d=d, mode=mode, tile_rows=tile_rows)
+        n, 1, c, 1, s=n_landmarks / n, d=d, mode=mode, tile_rows=tile_rows,
+        q_tile=2 if precision == "bf16" else None)
 
 
 def _attach_hlo(report: ProgramReport, fn, *args, **kwargs) -> None:
@@ -89,33 +106,125 @@ def audit_engine_modes(*, n: int, d: int, n_landmarks: int, c: int,
     labels0 = jnp.zeros((n,), jnp.int32)
     out = []
     for mode in ENGINE_MODES:
-        engine = GramEngine(mode=mode, tile_rows=tile_rows,
-                            interpret=interpret)
-        uses_pallas = engine._use_pallas(spec)
-        report = audit(kkmeans.kkmeans_fit, x, l_idx, diag, labels0,
-                       spec=spec, n_clusters=c, max_iters=10, engine=engine,
-                       name=f"kkmeans_fit[{mode}]")
-        budget = mode_budget(n, d, n_landmarks, c, mode, tile_rows,
-                             pallas=uses_pallas and mode == "fused")
-        violations = []
-        violations += report.check_pallas(mode == "fused" and uses_pallas)
-        violations += report.check_memory(budget, slack=MEMORY_SLACK)
-        if mode != "materialize":
-            # the residency promise: nothing the size of the full Gram
-            # block may ever be materialized (pad-aware for Pallas).
-            rows = _round_up(n, 128) if uses_pallas else n
-            cols = _round_up(n_landmarks, 128) if uses_pallas \
-                else n_landmarks
-            violations += report.check_max_intermediate(4 * rows * cols)
-        violations += report.check_host_sync()
-        if report.collectives_per_iteration or report.collectives_outside:
-            violations.append(f"{report.name}: collectives in a "
-                              f"single-host program")
-        if with_hlo:
-            _attach_hlo(report, kkmeans.kkmeans_fit, x, l_idx, diag,
-                        labels0, spec=spec, n_clusters=c, max_iters=10,
-                        engine=engine)
-        out.append((report, violations))
+        for precision in PRECISIONS:
+            engine = GramEngine(mode=mode, tile_rows=tile_rows,
+                                interpret=interpret, precision=precision)
+            uses_pallas = engine._use_pallas(spec)
+            report = audit(kkmeans.kkmeans_fit, x, l_idx, diag, labels0,
+                           spec=spec, n_clusters=c, max_iters=10,
+                           engine=engine,
+                           name=f"kkmeans_fit[{mode},{precision}]")
+            budget = mode_budget(n, d, n_landmarks, c, mode, tile_rows,
+                                 pallas=uses_pallas and mode == "fused",
+                                 precision=precision)
+            violations = []
+            violations += report.check_pallas(mode == "fused" and
+                                              uses_pallas)
+            violations += report.check_precision()
+            # slack absorbs f32 elementwise chains the jaxpr double-counts
+            # (check_memory docstring); those chains stay f32 whatever the
+            # tile dtype, so measured in budget units they inflate by
+            # q/q_tile when the budget shrinks with the tiles.
+            slack = MEMORY_SLACK * (2.0 if precision == "bf16" else 1.0)
+            violations += report.check_memory(budget, slack=slack)
+            if mode != "materialize":
+                # the residency promise: nothing the size of the full Gram
+                # block may ever be materialized (pad-aware for Pallas).
+                # The threshold stays f32-priced in BOTH precision sweeps:
+                # an illegally materialized block always appears in the
+                # trace via its f32 producer (the spec contraction runs
+                # f32 before any cast), and a bf16-priced threshold can
+                # collide with the legitimate f32 f panel ([rows, C_pad]
+                # == bf16 [rows, |L|] bytes when |L| = 2*C_pad).
+                rows = _round_up(n, 128) if uses_pallas else n
+                cols = _round_up(n_landmarks, 128) if uses_pallas \
+                    else n_landmarks
+                violations += report.check_max_intermediate(
+                    4 * rows * cols)
+            violations += report.check_host_sync()
+            if (report.collectives_per_iteration
+                    or report.collectives_outside):
+                violations.append(f"{report.name}: collectives in a "
+                                  f"single-host program")
+            if with_hlo and precision == "f32":
+                _attach_hlo(report, kkmeans.kkmeans_fit, x, l_idx, diag,
+                            labels0, spec=spec, n_clusters=c, max_iters=10,
+                            engine=engine)
+            out.append((report, violations))
+    return out
+
+
+#: every Pallas kernel wrapper the repo ships, audited per precision (and
+#: per backend with --gpu-trace). flash_attention is live code — reachable
+#: via repro.models.attention (attn_impl="flash"); see the "Precision
+#: policy & backends" README section — so it is held to the same
+#: f32-accumulation invariant as the clustering kernels.
+KERNEL_WRAPPERS = ("kernel_matrix", "assign_fused", "embed_assign",
+                   "sketch_assign", "flash_attention")
+
+
+def audit_kernel_wrappers(*, n: int, d: int, c: int, interpret: bool,
+                          backend: str = "tpu") -> list:
+    """(report, violations) per Pallas kernel wrapper x tile precision.
+
+    Each wrapper is traced (abstract — nothing runs, so the gpu backend's
+    Triton bodies dry-trace fine on a CPU host) in both policy dtypes and
+    must (a) actually dispatch a ``pallas_call`` and (b) pass
+    ``check_precision`` — every in-kernel accumulation statically f32.
+    """
+    from repro.approx.rff import make_rff
+    from repro.approx.sketch import make_count_sketch
+    from repro.kernels import ops as kops
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    landmarks = x[: max(c, 32)]
+    m_embed = 64
+    rff = make_rff(key, d, m_embed, spec)
+    sketch = make_count_sketch(key, d, m_embed, KernelSpec(name="linear"))
+    centroids = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (c, m_embed), jnp.float32)
+    counts = jnp.ones((c,), jnp.float32)
+    labels_l = jnp.zeros((landmarks.shape[0],), jnp.int32)
+    g = jnp.zeros((c,), jnp.float32)
+    qkv = jax.random.normal(jax.random.fold_in(key, 2),
+                            (1, 2, 128, 32), jnp.float32)
+
+    out = []
+    for precision in PRECISIONS:
+        wrappers = {
+            "kernel_matrix": lambda x, y: kops.kernel_matrix(
+                x, y, kind=spec.name, gamma=spec.gamma, interpret=interpret,
+                precision=precision, backend=backend),
+            "assign_fused": lambda x, l: kops.assign_fused(
+                x, l, labels_l, counts, g, n_clusters=c, kind=spec.name,
+                gamma=spec.gamma, interpret=interpret, precision=precision,
+                backend=backend),
+            "embed_assign": lambda x: kops.embed_assign(
+                x, rff, centroids, counts, interpret=interpret,
+                precision=precision, backend=backend),
+            "sketch_assign": lambda x: kops.sketch_assign(
+                x, sketch, centroids, counts, interpret=interpret,
+                precision=precision, backend=backend),
+            "flash_attention": lambda q: kops.flash_attention(
+                q, q, q, causal=True, interpret=interpret,
+                precision=precision),
+        }
+        if backend == "gpu":
+            # flash has a single (Mosaic-shaped) body; the gpu sweep
+            # covers the four clustering kernels that grew Triton bodies.
+            del wrappers["flash_attention"]
+        for kname, fn in wrappers.items():
+            args = {"kernel_matrix": (x, landmarks),
+                    "assign_fused": (x, landmarks)}.get(kname, (x,))
+            if kname == "flash_attention":
+                args = (qkv,)
+            report = audit(fn, *args,
+                           name=f"{kname}[{precision},{backend}]")
+            violations = report.check_pallas(True)
+            violations += report.check_precision()
+            out.append((report, violations))
     return out
 
 
@@ -210,10 +319,17 @@ def audit_predict_path(*, n: int, d: int, c: int) -> tuple:
 
 
 def run_audits(*, n: int, d: int, n_landmarks: int, c: int, m: int,
-               tile_rows: int, interpret: bool, with_hlo: bool) -> list:
+               tile_rows: int, interpret: bool, with_hlo: bool,
+               gpu_trace: bool = False) -> list:
     results = audit_engine_modes(
         n=n, d=d, n_landmarks=n_landmarks, c=c, tile_rows=tile_rows,
         interpret=interpret, with_hlo=with_hlo)
+    results += audit_kernel_wrappers(n=256, d=d, c=c, interpret=interpret,
+                                     backend="tpu")
+    if gpu_trace:
+        results += audit_kernel_wrappers(n=256, d=d, c=c,
+                                         interpret=interpret,
+                                         backend="gpu")
     results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
                                    with_model_axis=True))
     results.append(audit_mesh_path(n=n, d=d, n_landmarks=n_landmarks, c=c,
@@ -245,6 +361,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tile-rows", type=int, default=64)
     ap.add_argument("--no-interpret", action="store_true",
                     help="audit the real Pallas lowering (accelerator)")
+    ap.add_argument("--gpu-trace", action="store_true",
+                    help="also dry-trace the Triton (backend='gpu') kernel "
+                         "bodies and audit their accumulator dtypes — "
+                         "jaxpr only, runs on a CPU host")
     ap.add_argument("--hlo", action="store_true",
                     help="compile single-host programs and attach "
                          "hlocost FLOPs/bytes to the reports")
@@ -255,7 +375,8 @@ def main(argv=None) -> int:
     results = run_audits(
         n=args.n, d=args.d, n_landmarks=args.landmarks, c=args.clusters,
         m=args.embed_dim, tile_rows=args.tile_rows,
-        interpret=not args.no_interpret, with_hlo=args.hlo)
+        interpret=not args.no_interpret, with_hlo=args.hlo,
+        gpu_trace=args.gpu_trace)
 
     all_violations = []
     for report, violations in results:

@@ -16,12 +16,16 @@ from __future__ import annotations
 import argparse
 import time
 
-# XLA_FLAGS must be staged BEFORE the first jax import: the latency-hiding
-# scheduler that overlaps the s-step loop's one fused collective per sync
-# with the next Gram panel is a compile-time, process-level switch
-# (repro.launch.env) — importing jax first would freeze XLA_FLAGS as-is.
-from .env import configure as _configure_env
-_ENV = _configure_env()
+# XLA_FLAGS / JAX_PLATFORM_NAME must be staged BEFORE the first jax
+# import: the latency-hiding scheduler that overlaps the s-step loop's one
+# fused collective per sync with the next Gram panel is a compile-time,
+# process-level switch, and the --platform pin (which also selects the
+# Mosaic/Triton/interpret kernel lowering, kernels/backend.py) is read
+# once at backend init (repro.launch.env) — importing jax first would
+# freeze both as-is. --platform is therefore pre-parsed from raw argv
+# here; the argparse entry below only documents and validates it.
+from .env import configure as _configure_env, platform_from_argv
+_ENV = _configure_env(platform=platform_from_argv())
 
 import jax   # noqa: E402  (env staging above is load-bearing)
 import numpy as np   # noqa: E402
@@ -44,6 +48,13 @@ def main(argv=None):
     ap.add_argument("--d", type=int, default=32)
     ap.add_argument("--clusters", type=int, default=8)
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin the jax backend (and with it the kernel "
+                         "lowering: Mosaic on tpu, Triton on gpu, "
+                         "interpret on cpu). Consumed from raw argv "
+                         "before the first jax import; listed here for "
+                         "--help and validation")
     ap.add_argument("--memory-gb", type=float, default=0.5,
                     help="per-processor budget R for the Eq.19 planner")
     ap.add_argument("--s", type=float, default=None,

@@ -12,7 +12,15 @@ backend. This module owns that dance:
   * ``configure(...)`` — call it FIRST (before importing anything that
     imports jax). It merges the GPU latency-hiding/async-collective flag
     set into ``XLA_FLAGS`` without clobbering flags the caller (or a test
-    harness — ``--xla_force_host_platform_device_count``) already set.
+    harness — ``--xla_force_host_platform_device_count``) already set,
+    and (``platform=``) pins ``JAX_PLATFORM_NAME`` — the backend pin that
+    also selects the kernel lowering (kernels/backend.py follows
+    ``jax.default_backend()``: Mosaic on tpu, Triton on gpu, interpret
+    elsewhere).
+  * ``platform_from_argv(...)`` — pre-parses ``--platform`` from the raw
+    argv so launchers can pin the backend BEFORE their argparse runs
+    (argparse lives after the jax import, which is too late for the env
+    var).
   * ``set_platform(...)`` — the post-import half: pins
     ``jax_platform_name`` the way the jax gpu-performance-tips page
     recommends.
@@ -58,6 +66,24 @@ _GATED_GPU_FLAGS = (
 )
 
 
+PLATFORMS = ("cpu", "gpu", "tpu")
+
+
+def platform_from_argv(argv=None) -> str | None:
+    """Extract ``--platform <p>`` / ``--platform=<p>`` from raw argv
+    (default: ``sys.argv``) without argparse — launchers call this at
+    module import, before jax exists in the process, so the pin can land
+    in ``JAX_PLATFORM_NAME`` while it still matters. Returns None when the
+    flag is absent; validation happens in ``configure``."""
+    argv = sys.argv[1:] if argv is None else list(argv)
+    for i, tok in enumerate(argv):
+        if tok == "--platform" and i + 1 < len(argv):
+            return argv[i + 1]
+        if tok.startswith("--platform="):
+            return tok.split("=", 1)[1]
+    return None
+
+
 def _jaxlib_version() -> tuple | None:
     """Installed jaxlib version triple, or None when unknown (fail closed:
     callers must then treat every version-gated flag as unavailable)."""
@@ -81,18 +107,32 @@ def _merge_xla_flags(new_flags) -> bool:
 
 
 def configure(*, gpu_flags: bool = True,
-              host_device_count: int | None = None) -> dict:
+              host_device_count: int | None = None,
+              platform: str | None = None) -> dict:
     """Prepare the process environment for a launcher run.
 
     Must run before the first jax import in the process — XLA parses
-    ``XLA_FLAGS`` once at backend init and never re-reads it. Idempotent:
-    a second call that would change nothing is a silent no-op, so every
-    launcher module can stage the env at import without worrying about
-    which one ran first. Returns the settings actually applied (for
-    logging / the obs run header).
+    ``XLA_FLAGS`` once at backend init and never re-reads it (and jax
+    reads ``JAX_PLATFORM_NAME`` at the same moment). Idempotent: a second
+    call that would change nothing is a silent no-op, so every launcher
+    module can stage the env at import without worrying about which one
+    ran first. Returns the settings actually applied (for logging / the
+    obs run header).
+
+    ``platform`` pins the jax backend ('cpu' | 'gpu' | 'tpu', typically
+    from ``platform_from_argv()``). An explicit pin wins over an inherited
+    ``JAX_PLATFORM_NAME``; None leaves whatever the environment says.
     """
     applied: dict = {}
     changed = False
+    if platform is not None:
+        if platform not in PLATFORMS:
+            raise ValueError(f"unknown platform {platform!r}; "
+                             f"have {PLATFORMS}")
+        if os.environ.get("JAX_PLATFORM_NAME") != platform:
+            os.environ["JAX_PLATFORM_NAME"] = platform
+            changed = True
+        applied["platform"] = platform
     if host_device_count:
         changed |= _merge_xla_flags(
             [f"--xla_force_host_platform_device_count={host_device_count}"])

@@ -21,9 +21,11 @@ import math
 import time
 
 # stage XLA_FLAGS (latency-hiding scheduler / async-collective overlap)
-# before the first jax import — see repro.launch.env.
-from .env import configure as _configure_env
-_ENV = _configure_env()
+# and the --platform backend pin before the first jax import — see
+# repro.launch.env; --platform is pre-parsed from raw argv because the
+# argparse in main() runs long after the backend is frozen.
+from .env import configure as _configure_env, platform_from_argv
+_ENV = _configure_env(platform=platform_from_argv())
 
 import jax   # noqa: E402  (env staging above is load-bearing)
 
@@ -68,6 +70,11 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced config (CPU-runnable)")
     ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--platform", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="pin the jax backend (consumed from raw argv "
+                         "before the first jax import; listed here for "
+                         "--help and validation)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

@@ -393,11 +393,14 @@ def test_contract_engine_modes(mode):
                                  tile_rows=64, interpret=True,
                                  with_hlo=False)
     by_name = {r.name: (r, v) for r, v in results}
-    r, violations = by_name[f"kkmeans_fit[{mode}]"]
-    assert violations == []
-    assert (r.pallas_calls > 0) == (mode == "fused")
-    if mode == "tiled":
-        assert r.largest_intermediate_bytes < 256 * 256 * 4
+    # the sweep covers every tile precision per mode (kernels/precision.py)
+    for precision in ("f32", "bf16"):
+        r, violations = by_name[f"kkmeans_fit[{mode},{precision}]"]
+        assert violations == []
+        assert (r.pallas_calls > 0) == (mode == "fused")
+        assert r.check_precision() == []
+        if mode == "tiled":
+            assert r.largest_intermediate_bytes < 256 * 256 * 4
 
 
 @pytest.mark.parametrize("s_step", [1, 2])
@@ -472,9 +475,13 @@ def test_audit_cli_smoke(tmp_path):
                  "--out", str(out)]) == 0
     payload = json.loads(out.read_text())
     assert payload["ok"] and not payload["violations"]
-    assert len(payload["reports"]) == 9
+    # 3 engine modes x 2 precisions + 5 kernel wrappers x 2 precisions
+    # + 4 mesh programs + embedded Lloyd + serving predict
+    assert len(payload["reports"]) == 22
     names = {r["name"] for r in payload["reports"]}
-    assert "kkmeans_fit[fused]" in names
+    assert "kkmeans_fit[fused,f32]" in names
+    assert "kkmeans_fit[fused,bf16]" in names
+    assert "assign_fused[bf16,tpu]" in names
     assert "serving_predict" in names
     assert "distributed_inner[data, s=2]" in names
     assert "distributed_inner[data x model, s=2]" in names

@@ -1,0 +1,311 @@
+"""Mixed-precision policy tests (kernels/precision.py + the bf16 tile path).
+
+The policy's correctness contract, bounded here rather than assumed:
+
+  * bf16 tiles + f32 accumulation produce IDENTICAL labels to the f32 path
+    on well-separated data — across every Pallas wrapper and every
+    GramEngine mode (rounding the operands cannot flip an argmin whose
+    margin dwarfs the bf16 ulp).
+  * on non-separable data the clustering-quality drift is bounded:
+    |NMI_f32 - NMI_bf16| vs ground truth <= 1e-3.
+  * the Pallas bodies match the ``ref.py`` oracles at BOTH precisions to
+    f32-accumulation tolerance (the oracle rounds its tiles the same way,
+    so bf16 is not an excuse for loose comparisons).
+  * ``check_precision`` statically catches a kernel that accumulates at
+    tile precision — the booby-trap test writes that bug on purpose.
+  * the planner prices tiles by dtype: the same workload can sit on
+    different sides of the materialize/tiled frontier at f32 vs bf16.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from sklearn.datasets import make_blobs
+
+from repro.analysis import audit
+from repro.core import GramEngine, KernelSpec, MachineSpec, nmi, plan
+from repro.core.kkmeans import kkmeans_fit
+from repro.kernels import ops, ref
+from repro.kernels.precision import (BF16, F32, PRECISIONS, Precision,
+                                     resolve_precision)
+
+PREC_IDS = list(PRECISIONS)
+BACKENDS = ["tpu", "gpu"]
+ENGINE_MODES = ["materialize", "fused", "tiled"]
+
+
+# ---------------------------------------------------------------- fixtures
+
+def _separated(n=192, d=16, c=5, seed=0):
+    """Well-separated blobs: margins >> bf16 ulp, labels must not move."""
+    x, y = make_blobs(n_samples=n, n_features=d, centers=c, cluster_std=0.4,
+                      center_box=(-8.0, 8.0), random_state=seed)
+    return jnp.asarray(x.astype(np.float32)), y
+
+
+def _nonseparable(n=300, d=12, c=6, seed=3):
+    """Overlapping blobs: labels MAY move, quality drift must be bounded."""
+    x, y = make_blobs(n_samples=n, n_features=d, centers=c, cluster_std=1.5,
+                      center_box=(-5.0, 5.0), random_state=seed)
+    return jnp.asarray(x.astype(np.float32)), y
+
+
+def _assign_inputs(x, c, seed=0):
+    """Landmark/label/compactness panels for the fused assignment kernel."""
+    rng = np.random.default_rng(seed)
+    lm = x[jnp.asarray(np.sort(rng.choice(x.shape[0], 64, replace=False)))]
+    labels_l = jnp.asarray(rng.integers(0, c, 64), jnp.int32)
+    counts = jnp.maximum(
+        jnp.zeros(c).at[labels_l].add(1.0), 1.0).astype(jnp.float32)
+    g = jnp.asarray(rng.uniform(0.5, 1.5, c), jnp.float32)
+    return lm, labels_l, counts, g
+
+
+# ------------------------------------------------------------ policy object
+
+def test_precision_policy_object():
+    p = resolve_precision("bf16")
+    assert p.tile_dtype == jnp.bfloat16
+    assert p.tile_itemsize == 2
+    assert p.sign_dtype == jnp.dtype("int8")   # the int8 sign-table path
+    f = resolve_precision("f32")
+    assert f.tile_dtype == jnp.float32
+    assert f.tile_itemsize == 4
+    assert f.sign_dtype == jnp.dtype("float32")
+    assert resolve_precision(BF16) is BF16 and resolve_precision(F32) is F32
+    with pytest.raises(ValueError):
+        resolve_precision("fp8")
+    with pytest.raises(ValueError):
+        Precision(tile="bf16", accum="bf16")   # not configurable, by design
+    with pytest.raises(ValueError):
+        GramEngine("materialize", precision="fp8")
+
+
+# ----------------------------------------- Pallas vs oracle, both precisions
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("precision", PREC_IDS)
+def test_kernel_matrix_matches_oracle(precision, backend):
+    """Oracle rounds tiles the same way -> tight tolerance at EVERY
+    precision (bf16 is not an excuse for a loose comparison)."""
+    x, _ = _separated(n=96, d=24)
+    y = x[:40] + 0.25
+    got = ops.kernel_matrix(x, y, kind="rbf", gamma=0.05, interpret=True,
+                            precision=precision, backend=backend)
+    want = ref.kernel_matrix_ref(x, y, kind="rbf", gamma=0.05,
+                                 precision=precision)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("precision", PREC_IDS)
+def test_assign_fused_matches_oracle(precision, backend):
+    x, _ = _separated(n=160, d=16, c=5)
+    lm, labels_l, counts, g = _assign_inputs(x, 5)
+    labels, mind, f = ops.assign_fused(
+        x, lm, labels_l, counts, g, n_clusters=5, kind="rbf", gamma=0.05,
+        interpret=True, precision=precision, backend=backend)
+    h = jax.nn.one_hot(labels_l, 5, dtype=jnp.float32) / counts[None, :]
+    wl, wm, wf = ref.assign_fused_ref(x, lm, h, g, kind="rbf", gamma=0.05,
+                                      precision=precision)
+    assert bool(jnp.all(labels == wl))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(wm),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f), np.asarray(wf),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("precision", PREC_IDS)
+def test_sketch_assign_matches_oracle(precision, backend):
+    from repro.approx.sketch import make_count_sketch
+    x, _ = _separated(n=128, d=32, c=4)
+    fmap = make_count_sketch(jax.random.PRNGKey(1), 32, 16,
+                             KernelSpec("linear"))
+    cents = jnp.asarray(
+        np.random.default_rng(2).normal(size=(4, 16)), jnp.float32)
+    labels, score = ops.sketch_assign(x, fmap, cents, interpret=True,
+                                      precision=precision, backend=backend)
+    csq = jnp.sum(cents * cents, axis=1)
+    wl, ws = ref.sketch_assign_ref(x, fmap.h, fmap.sign, cents.T, csq,
+                                   precision=precision)
+    assert bool(jnp.all(labels == wl))
+    np.testing.assert_allclose(np.asarray(score), np.asarray(ws),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------- labels identical on separated data
+
+@pytest.mark.parametrize("wrapper",
+                         ["assign_fused", "embed_assign", "sketch_assign"])
+def test_labels_identical_bf16_vs_f32(wrapper):
+    """On well-separated fixtures the bf16 tile path returns the SAME
+    labels as f32 for every fused assignment wrapper."""
+    x, _ = _separated()
+    out = {}
+    for precision in PRECISIONS:
+        if wrapper == "assign_fused":
+            lm, labels_l, counts, g = _assign_inputs(x, 5)
+            labels, _, _ = ops.assign_fused(
+                x, lm, labels_l, counts, g, n_clusters=5, kind="rbf",
+                gamma=0.05, interpret=True, precision=precision)
+        elif wrapper == "embed_assign":
+            from repro.approx.rff import make_rff
+            fmap = make_rff(jax.random.PRNGKey(0), 16, 64,
+                            KernelSpec("rbf", gamma=0.05))
+            cents = x[:5]                       # one seed row per blob
+            labels, _ = ops.embed_assign(x, fmap, cents, interpret=True,
+                                         precision=precision)
+        else:
+            from repro.approx.sketch import make_count_sketch
+            fmap = make_count_sketch(jax.random.PRNGKey(1), 16, 16,
+                                     KernelSpec("linear"))
+            # centroids = class means in SKETCH space, so the separation
+            # of the blobs survives the hash (random centroids would not
+            # guarantee a margin and the assert would test luck, not the
+            # precision policy)
+            _, y = _separated()
+            s = jax.nn.one_hot(fmap.h, 16, dtype=jnp.float32) \
+                * fmap.sign[:, None]
+            z = x @ s
+            cents = jnp.stack([z[y == j].mean(0) for j in range(5)])
+            labels, _ = ops.sketch_assign(x, fmap, cents, interpret=True,
+                                          precision=precision)
+        out[precision] = np.asarray(labels)
+    assert (out["f32"] == out["bf16"]).all()
+
+
+@pytest.mark.parametrize("mode", ENGINE_MODES)
+def test_engine_labels_identical_bf16_vs_f32(mode):
+    """Full kkmeans fit, per GramEngine mode: bf16 tiles do not move a
+    single label on separated blobs."""
+    x, _ = _separated(n=240, d=12, c=4)
+    spec = KernelSpec("rbf", gamma=1.0 / 12)
+    diag = spec.diag(x)
+    rng = np.random.default_rng(0)
+    l_idx = jnp.asarray(np.sort(rng.choice(240, 96, replace=False)),
+                        jnp.int32)
+    u0 = jnp.asarray(rng.integers(0, 4, 240), jnp.int32)
+    labs = {}
+    for precision in PRECISIONS:
+        eng = GramEngine(mode, tile_rows=64, interpret=True,
+                         precision=precision)
+        res = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=4,
+                          engine=eng)
+        labs[precision] = np.asarray(res.labels)
+    assert (labs["f32"] == labs["bf16"]).all()
+
+
+def test_nmi_drift_bounded_nonseparable():
+    """Overlapping blobs: labels may legitimately differ between
+    precisions, but clustering quality vs ground truth must not —
+    |NMI_f32 - NMI_bf16| <= 1e-3 (measured ~4.5e-4 on this fixture)."""
+    x, y = _nonseparable()
+    spec = KernelSpec("rbf", gamma=1.0 / 12)
+    diag = spec.diag(x)
+    rng = np.random.default_rng(0)
+    l_idx = jnp.asarray(np.sort(rng.choice(300, 100, replace=False)),
+                        jnp.int32)
+    u0 = jnp.asarray(rng.integers(0, 6, 300), jnp.int32)
+    labs = {}
+    for precision in PRECISIONS:
+        eng = GramEngine("materialize", precision=precision)
+        res = kkmeans_fit(x, l_idx, diag, u0, spec=spec, n_clusters=6,
+                          engine=eng)
+        labs[precision] = np.asarray(res.labels)
+    drift = abs(nmi(y, labs["f32"]) - nmi(y, labs["bf16"]))
+    assert drift <= 1e-3, f"NMI drift {drift:.2e} > 1e-3"
+    # the two labelings themselves stay close — overwhelmingly same points
+    assert nmi(labs["f32"], labs["bf16"]) >= 0.9
+
+
+# ------------------------------------------------- static precision audit
+
+def test_check_precision_clean_on_shipped_kernels():
+    """Both-dtype sweep over a shipped wrapper: zero violations, and the
+    report actually saw a pallas_call (the check has teeth)."""
+    x, _ = _separated(n=64, d=16)
+    y = x[:32]
+    for precision in PRECISIONS:
+        rep = audit(
+            lambda a, b: ops.kernel_matrix(
+                a, b, kind="rbf", gamma=0.05, interpret=True,
+                precision=precision),
+            x, y, name=f"kernel_matrix[{precision}]")
+        assert rep.pallas_calls >= 1
+        assert rep.check_precision() == []
+
+
+def test_check_precision_catches_bf16_accumulator():
+    """Booby trap: a Pallas kernel whose dot_general accumulates in bf16 —
+    exactly the bug a missing preferred_element_type introduces. The
+    static audit must flag it."""
+    from jax.experimental import pallas as pl
+
+    def bad_kernel(x_ref, y_ref, o_ref):
+        o_ref[...] = jax.lax.dot_general(
+            x_ref[...], y_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.bfloat16)    # the bug
+
+    def bad(x, y):
+        return pl.pallas_call(
+            bad_kernel,
+            out_shape=jax.ShapeDtypeStruct((128, 128), jnp.bfloat16),
+            interpret=True)(x, y)
+
+    x = jnp.zeros((128, 128), jnp.bfloat16)
+    rep = audit(bad, x, x, name="booby_trap")
+    violations = rep.check_precision()
+    assert violations, "bf16 accumulator not flagged"
+    assert any("bfloat16" in v for v in violations)
+    with pytest.raises(Exception):
+        rep.verify(violations)
+    # report serialization must not drag kernel jaxprs into JSON
+    d = rep.to_dict()
+    assert "pallas_kernel_jaxprs" not in d
+    json.dumps(d)
+
+
+# ------------------------------------------------------- planner pricing
+
+def test_plan_prices_tile_dtype():
+    """Same workload, different tile dtype, different engine pick: the
+    materialized Gram panel halves under bf16 and crosses back under the
+    budget (the q_tile term in core.memory.engine_footprint_bytes)."""
+    machine = MachineSpec(memory_bytes=0.6e9, n_processors=8)
+    picks = {}
+    for precision in PRECISIONS:
+        p = plan(4_000_000, 64, machine, d=64, b=100, precision=precision)
+        picks[precision] = p.engine
+        assert p.precision == precision
+        assert p.gram_engine().precision == precision
+    # the note spells the non-default pricing out for the obs header
+    assert "tiles priced at bf16" in \
+        plan(4_000_000, 64, machine, d=64, b=100, precision="bf16").note
+    assert picks["f32"] == "tiled"
+    assert picks["bf16"] == "materialize"
+    with pytest.raises(ValueError):
+        plan(4_000_000, 64, machine, d=64, precision="fp8")
+
+
+# --------------------------------------------- benchmark record columns
+
+def test_record_bench_dtype_backend_columns(tmp_path, monkeypatch):
+    import benchmarks.common as common
+    monkeypatch.setenv("REPRO_BENCH", str(tmp_path))
+    common.record_bench("precision_smoke", 1.25, mode="fused",
+                        params={"n": 10}, dtype="bf16", backend="cpu")
+    rec = json.loads((tmp_path / "BENCH_precision_smoke.json").read_text())
+    assert rec["dtype"] == "bf16"
+    assert rec["backend"] == "cpu"
+    # backend defaults to the live jax platform when omitted
+    common.record_bench("precision_smoke", 1.0, mode="fused")
+    rec = json.loads((tmp_path / "BENCH_precision_smoke.json").read_text())
+    assert rec["dtype"] == "f32"
+    assert rec["backend"] == jax.default_backend()
