@@ -11,7 +11,8 @@ import time
 import traceback
 
 from . import (common, fig4_toy, fig5_approx_sweep, fig6_scaling,
-               fig8_sculley, roofline, tab1_mnist, tab2_rcv1, tab3_noisy)
+               fig8_sculley, roofline, serve_bench, tab1_mnist, tab2_rcv1,
+               tab3_noisy)
 
 ALL = {
     "fig4_toy": fig4_toy.run,
@@ -22,6 +23,7 @@ ALL = {
     "fig6_scaling": fig6_scaling.run,
     "fig8_sculley": fig8_sculley.run,
     "roofline": roofline.run,
+    "serve": serve_bench.run,
 }
 
 

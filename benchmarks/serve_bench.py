@@ -1,0 +1,142 @@
+"""Assignment-serving latency benchmark (ISSUE 10 measurement).
+
+Fits a small RFF model, freezes it (``repro.serving.freeze``), AOT-warms an
+``AssignService`` and drives an OPEN-LOOP offered-QPS request stream
+through the continuous-batching queue — arrivals are scheduled by the
+offered rate, not by service completion, so queueing delay is measured
+honestly. The grid covers >= 2 offered QPS levels x >= 2 request sizes
+(landing in different shape buckets); each cell reports p50/p99 request
+latency (arrival -> labels on host) and sustained rows/sec.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --fast
+
+writes ``results/BENCH_serve.json`` (the perf-trajectory record — also
+produced by ``benchmarks/run.py``, which diffs it against the previous
+revision) and the per-request obs JSONL next to it. The analytic price
+(``core.memory.serve_footprint_bytes``) is recorded beside the measured
+``artifact_nbytes``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+if __name__ == "__main__" and __package__ is None:   # direct-script escape
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import common                                    # noqa: F401
+    from common import record_bench, save
+else:
+    from .common import record_bench, save
+
+OBS_PATH = os.path.join(
+    os.environ.get("REPRO_BENCH", "results"), "serve_obs.jsonl")
+
+
+def _build_service(fast: bool, recorder):
+    from repro.core.minibatch import MiniBatchConfig, fit_dataset
+    from repro.data.synthetic import make_blobs
+    from repro.serving import AssignServeConfig, AssignService, freeze
+
+    n, d, c = (2048, 16, 8) if fast else (20000, 32, 16)
+    x, _ = make_blobs(n, d, c, seed=0)
+    cfg = MiniBatchConfig(n_clusters=c, n_batches=4, method="rff",
+                          embed_dim=8 * c, seed=0)
+    art = freeze(fit_dataset(np.asarray(x), cfg))
+    t0 = time.perf_counter()
+    svc = AssignService(art, AssignServeConfig(), recorder=recorder)
+    return art, svc, time.perf_counter() - t0
+
+
+def _offered_load(svc, xs, qps: float) -> tuple[list[float], float]:
+    """Open loop: request i arrives at i/qps regardless of service state.
+    Returns (per-request latencies [s], elapsed wall seconds)."""
+    arrive = [i / qps for i in range(len(xs))]
+    uid2arr, lat = {}, []
+    t0 = time.perf_counter()
+    submitted = 0
+    while len(lat) < len(xs):
+        now = time.perf_counter() - t0
+        while submitted < len(xs) and arrive[submitted] <= now:
+            uid = svc.submit(xs[submitted])
+            uid2arr[uid] = arrive[submitted]
+            submitted += 1
+        if submitted > len(lat):
+            for uid in svc.step():
+                lat.append((time.perf_counter() - t0) - uid2arr[uid])
+        elif submitted < len(xs):
+            time.sleep(max(0.0, arrive[submitted]
+                           - (time.perf_counter() - t0)))
+    return lat, time.perf_counter() - t0
+
+
+def run(fast: bool = True):
+    from repro.core.memory import serve_footprint_bytes
+    from repro.obs import JsonlRecorder, export
+    from repro.serving import artifact_nbytes
+
+    os.makedirs(os.path.dirname(OBS_PATH) or ".", exist_ok=True)
+    rec = JsonlRecorder(OBS_PATH, header=export.run_header(
+        entry="benchmarks.serve_bench", fast=fast))
+    art, svc, warm_s = _build_service(fast, rec)
+    d, c, m = art.in_dim, art.n_clusters, art.dim
+
+    qps_levels = (50.0, 200.0) if fast else (100.0, 500.0)
+    row_sizes = (1, 64)                  # land in different shape buckets
+    n_req = 40 if fast else 200
+    rng = np.random.default_rng(0)
+
+    cells = {}
+    for rows in row_sizes:
+        xs = [rng.normal(size=(rows, d)).astype(np.float32)
+              for _ in range(n_req)]
+        for qps in qps_levels:
+            lat, elapsed = _offered_load(svc, xs, qps)
+            p50, p99 = np.percentile(lat, [50, 99])
+            cells[f"qps{qps:g}_rows{rows}"] = {
+                "offered_qps": qps, "rows_per_request": rows,
+                "requests": n_req,
+                "p50_ms": float(p50 * 1e3), "p99_ms": float(p99 * 1e3),
+                "rows_per_s": float(rows * n_req / elapsed),
+            }
+            print(f"[serve] qps={qps:g} rows={rows}: "
+                  f"p50 {p50*1e3:.2f}ms p99 {p99*1e3:.2f}ms "
+                  f"{rows * n_req / elapsed:.0f} rows/s")
+    rec.close()
+
+    bench = {
+        "kind": art.kind, "precision": art.precision,
+        "buckets": list(svc.cfg.buckets),
+        "compiled_programs": svc.compiled_programs,
+        "warm_seconds": warm_s,
+        "artifact_bytes": artifact_nbytes(art),
+        "predicted_bytes": serve_footprint_bytes(
+            c, m, d, method=art.kind, bucket=max(svc.cfg.buckets)),
+        "cells": cells,
+    }
+    payload = {"bench": bench, "obs": export.summarize(OBS_PATH),
+               "dtype": art.precision}
+    save("serve", payload)
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    fast = not args.full
+    t0 = time.time()
+    payload = run(fast=fast)
+    record_bench("serve", time.time() - t0, mode="fast" if fast else "full",
+                 params=payload["bench"], obs=payload.get("obs"),
+                 dtype=payload.get("dtype", "f32"))
+    print(f"BENCH_serve.json recorded "
+          f"({os.environ.get('REPRO_BENCH', 'results')})")
+
+
+if __name__ == "__main__":
+    main()

@@ -279,6 +279,46 @@ def sketch_footprint_bytes(n: int, b: int, c: int, p: int, q: int = 4, *,
     return q * (rows * m + c * m + rows) + tables + sparse_rows
 
 
+def serve_footprint_bytes(c: int, m: int, d: int, *, method: str = "rff",
+                          q: int = 4, q_tile: int | None = None,
+                          degree: int = 2, bucket: int = 0) -> float:
+    """Resident bytes of a frozen predict artifact
+    (``repro.serving.artifact``) plus the transient working set of one
+    ``bucket``-row request — the serving-side counterpart of the fit-side
+    footprints above, and what ``artifact_nbytes`` measures at bucket=0.
+
+    Every embedded method carries the value panel v [m, C], the centroids
+    [C, m] and the csq/counts vectors (f32 — accumulator-side, never
+    tiles); the map tables are the method-shaped term and the only one
+    ``q_tile`` (bf16 = 2) reprices:
+
+        rff/nystrom:   q_tile*m*d  (frequencies / landmarks) + q*m (phases
+                       / landmark norms)
+        sketch:        4d int32 hash + sign (int8 under bf16, else f32)
+        tensorsketch:  degree stacked (d+1)-wide hash+sign tables
+        exact:         q*(C*d + C)  (medoids + kernel diagonal; no panels)
+
+    The transient term is one padded query tile (q_tile*bucket*d) + the
+    score panel (q*bucket*C) — plus the materialized embedding
+    q*bucket*m for tensorsketch, whose FFT path has no fused kernel.
+    """
+    qt = q if q_tile is None else q_tile
+    sign_b = 1.0 if qt < 4 else 4.0
+    if method == "exact":
+        return q * (c * d + c) + qt * bucket * d + q * bucket * c
+    panels = q * (2.0 * m * c + 2.0 * c)          # v + centroids + csq/counts
+    if method in ("rff", "nystrom"):
+        tables = qt * m * d + q * float(m)
+    elif method == "sketch":
+        tables = (4.0 + sign_b) * d
+    elif method == "tensorsketch":
+        tables = degree * (d + 1) * (4.0 + sign_b)
+    else:
+        raise ValueError(f"unknown serve method {method!r}")
+    z_term = q * bucket * m if method == "tensorsketch" else 0.0
+    return tables + panels + qt * bucket * d + z_term + q * bucket * c
+
+
 _SELECTOR_EFF = {"uniform": 1.0, "kpp": 1.25, "rls": 1.6}
 
 

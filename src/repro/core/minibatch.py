@@ -139,22 +139,25 @@ class FitResult(NamedTuple):
     def predict(self, x) -> Array:
         """Label new samples with whatever space this result was fit in.
 
-        ``x`` may be dense rows or a ``repro.data.sparse.CSRBatch`` (sketch
-        maps only).
+        ``x`` may be dense rows or a ``repro.data.sparse.CSRBatch`` (O(nnz)
+        for the sketch maps; densified row-locally otherwise).
+
+        Routed through the serving bucket ladder
+        (``repro.serving.assign.predict``): queries pad to a small fixed
+        set of shape buckets, so repeated predicts at ragged query counts
+        reuse ~len(DEFAULT_BUCKETS) compiled programs instead of retracing
+        per distinct shape. The freeze here is per-call (a cheap panel
+        build); a long-lived service should ``serving.freeze(result)``
+        once and hold the artifact / an ``AssignService``.
         """
-        from repro.data.sparse import is_sparse
-        if not is_sparse(x):
-            x = jnp.asarray(x)
-        if self.fmap is not None:
-            from repro.approx import predict_embedded
-            return predict_embedded(x, self.state, self.fmap)
-        if self.spec is None:
+        if self.fmap is None and self.spec is None:
             raise ValueError(
                 "FitResult.spec is not set: exact-path prediction needs the "
                 "KernelSpec the model was fit with (a default rbf/gamma=1.0 "
                 "would silently assign with the wrong kernel)")
-        return predict(x, self.state.medoids, self.state.medoid_diag,
-                       spec=self.spec)
+        from repro.serving.artifact import freeze
+        from repro.serving.assign import predict as predict_frozen
+        return predict_frozen(freeze(self), x)
 
 
 # ---------------------------------------------------------------------------

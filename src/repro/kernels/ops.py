@@ -333,11 +333,56 @@ def embed_assign(x: Array, fmap, centroids: Array,
                                 **statics)
 
 
+@partial(jax.jit, static_argnames=("map_kind", "gamma", "coef0", "degree",
+                                   "scale", "fused", "interpret",
+                                   "precision", "backend"))
+def predict_assign(x: Array, w: Array, aux: Array, v: Array, csq: Array, *,
+                   map_kind: str = "rff", gamma: float = 1.0,
+                   coef0: float = 1.0, degree: int = 3, scale: float = 1.0,
+                   fused: bool = False, interpret: bool = True,
+                   precision: str = "f32",
+                   backend: str = "tpu") -> tuple[Array, Array]:
+    """Serving hot path: frozen-panel embed+assign for one query bucket.
+
+    The query-batch variant of ``embed_assign``/``sketch_assign``: instead
+    of a live feature map + centroids it consumes the panels a
+    ``repro.serving.artifact`` froze once at build time — ``w``/``aux``
+    the feature-map tables (RFF frequencies + phases, Nystrom landmarks,
+    or hash/sign for ``map_kind="sketch"``), ``v`` [m, C] the value panel
+    (proj already folded in for Nystrom) and ``csq`` [C] the masked
+    centroid norms — so a predict call derives NOTHING per request.
+
+    ``fused=True`` dispatches the Pallas pass (Mosaic/Triton per
+    ``backend``; the embedded query Z never touches HBM); ``fused=False``
+    runs the jnp oracle math (``ref.predict_assign_ref``) — the documented
+    off-accelerator path, one XLA program per bucket shape either way.
+    Returns (labels [n] int32, score [n] f32). This function is the ONE
+    jit entry of the serving bucket ladder: its ``_cache_size()`` is the
+    compiled-program count the bucket audit pins to the ladder size.
+    """
+    if map_kind == "sketch":
+        if fused:
+            return _sketch_assign_padded(x, w, aux, v, csq,
+                                         interpret=interpret,
+                                         precision=precision,
+                                         backend=backend)
+        return ref.sketch_assign_ref(x, w, aux, v, csq, precision=precision)
+    if fused:
+        return _embed_assign_padded(x, w, aux, v, csq, map_kind=map_kind,
+                                    gamma=gamma, coef0=coef0, degree=degree,
+                                    scale=scale, interpret=interpret,
+                                    precision=precision, backend=backend)
+    return ref.predict_assign_ref(x, w, aux, v, csq, map_kind=map_kind,
+                                  gamma=gamma, coef0=coef0, degree=degree,
+                                  scale=scale, precision=precision)
+
+
 # re-exported oracles so tests/benchmarks import one module
 kernel_matrix_ref = ref.kernel_matrix_ref
 assign_fused_ref = ref.assign_fused_ref
 embed_assign_ref = ref.embed_assign_ref
 sketch_assign_ref = ref.sketch_assign_ref
+predict_assign_ref = ref.predict_assign_ref
 
 
 @partial(jax.jit, static_argnames=("causal", "softcap", "interpret",

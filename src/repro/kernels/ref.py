@@ -116,6 +116,30 @@ def sketch_assign_ref(x: Array, h: Array, sign: Array, v: Array, csq: Array,
     return jnp.argmin(score, axis=1).astype(jnp.int32), jnp.min(score, axis=1)
 
 
+def predict_assign_ref(x: Array, w: Array, aux: Array, v: Array, csq: Array,
+                       *, map_kind: str = "rff", gamma: float = 1.0,
+                       coef0: float = 1.0, degree: int = 3,
+                       scale: float = 1.0, precision: str = "f32"):
+    """Serving predict oracle (``ops.predict_assign`` contract).
+
+    One query bucket against a FROZEN artifact's panels
+    (``repro.serving.artifact``): ``w``/``aux`` are the feature-map tables
+    — RFF frequencies [m, d] with phases ``aux`` [m, 1], Nystrom landmarks
+    (``aux`` ignored; norms are recomputed from the tile-cast landmarks,
+    matching ``_embed_assign_padded``), or for ``map_kind="sketch"`` the
+    hash [d] int32 / sign [d] tables — and ``v`` [m, C] / ``csq`` [C] are
+    the value panel and masked centroid norms frozen at artifact-build
+    time. Returns (labels [n] int32, score [n] f32); scores drop the
+    row-constant ``|z|^2`` so argmin equals the nearest-centroid label.
+    """
+    if map_kind == "sketch":
+        return sketch_assign_ref(x, w, aux, v, csq, precision=precision)
+    b = aux[:, 0] if map_kind == "rff" else None
+    return embed_assign_ref(x, w, v, csq, map_kind=map_kind, gamma=gamma,
+                            coef0=coef0, degree=degree, scale=scale, b=b,
+                            precision=precision)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *,
                         causal: bool = True,
                         softcap: float | None = None) -> Array:

@@ -2,8 +2,11 @@
 
 Traces every hot path the repo ships (the three GramEngine modes of the
 exact inner loop, the mesh program of ``distributed/inner``, the embedded
-Lloyd program, and the serving ``predict``) WITHOUT running any of them,
-and proves from the jaxprs (``repro.analysis``):
+Lloyd program, the serving ``predict``, and every shape-bucket program of
+the assignment service — ``audit_assign_buckets`` additionally AOT-warms
+an ``AssignService`` and pins its compiled-program count to the bucket-
+ladder size) WITHOUT running any of them, and proves from the jaxprs
+(``repro.analysis``):
 
   * collective counts — the mesh programs' per-iteration psum/all_gather
     counts equal ``collectives_per_iteration``'s analytic bill exactly;
@@ -318,6 +321,58 @@ def audit_predict_path(*, n: int, d: int, c: int) -> tuple:
     return report, violations
 
 
+def audit_assign_buckets(*, d: int, c: int, m: int,
+                         buckets: tuple = (1, 8, 64, 512),
+                         interpret: bool = True) -> list:
+    """(report, violations) per serving shape bucket + the ladder proof.
+
+    Builds a synthetic frozen artifact (``serving.freeze_map`` — no fit
+    needed) and traces the dense bucket program at every ladder rung: the
+    predict hot path must be loop-free, collective-free, host-sync-free,
+    actually dispatch its fused Pallas pass, and accumulate f32. Then an
+    ``AssignService`` is AOT-warmed on the same ladder (compile only —
+    nothing executes) and its resident compiled-program count is pinned to
+    the ladder size: the proof that ragged request traffic cannot
+    compile-amplify the serving path.
+    """
+    from repro.approx.rff import make_rff
+    from repro.serving import assign as sassign
+    from repro.serving.artifact import freeze_map
+
+    spec = KernelSpec(name="rbf", gamma=0.5)
+    key = jax.random.PRNGKey(0)
+    fmap = make_rff(key, d, m, spec)
+    centroids = jax.random.normal(jax.random.fold_in(key, 1), (c, m),
+                                  jnp.float32)
+    art = freeze_map(fmap, centroids, jnp.ones((c,), jnp.float32))
+    out = []
+    for b in buckets:
+        xp = jnp.zeros((b, d), jnp.float32)
+        report = audit(
+            lambda xq: sassign._predict_padded(art, xq, fused=True,
+                                               interpret=interpret,
+                                               backend="tpu"),
+            xp, name=f"serve_bucket[{b}]")
+        violations = report.check_pallas(True)
+        violations += report.check_precision()
+        violations += report.check_host_sync()
+        if report.primitive_counts.get("while", 0):
+            violations.append(f"{report.name}: the serving bucket program "
+                              f"must be loop-free")
+        if report.collectives_per_iteration or report.collectives_outside:
+            violations.append(f"{report.name}: collectives in the serving "
+                              f"hot path")
+        out.append((report, violations))
+    svc = sassign.AssignService(art, sassign.AssignServeConfig(
+        buckets=tuple(buckets), fused=True, interpret=interpret,
+        backend="tpu"))
+    if svc.compiled_programs != len(set(buckets)):
+        out[-1][1].append(
+            f"serve_bucket ladder: {svc.compiled_programs} compiled "
+            f"programs != ladder size {len(set(buckets))}")
+    return out
+
+
 def run_audits(*, n: int, d: int, n_landmarks: int, c: int, m: int,
                tile_rows: int, interpret: bool, with_hlo: bool,
                gpu_trace: bool = False) -> list:
@@ -342,6 +397,7 @@ def run_audits(*, n: int, d: int, n_landmarks: int, c: int, m: int,
                                    with_model_axis=False, s_step=2))
     results.append(audit_embed_path(n=n, d=d, m=m, c=c))
     results.append(audit_predict_path(n=n, d=d, c=c))
+    results += audit_assign_buckets(d=d, c=c, m=m, interpret=interpret)
     return results
 
 

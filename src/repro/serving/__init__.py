@@ -1,4 +1,15 @@
+from .artifact import (FrozenArtifact, artifact_nbytes, freeze, freeze_map,
+                       load_artifact, save_artifact)
+from .assign import (DEFAULT_BUCKETS, AssignServeConfig, AssignService,
+                     QueueFull, bucket_for)
+from .assign import predict as predict_frozen
 from .engine import ServeConfig, ServingEngine
 from .sampling import greedy, sample_top_p
 
-__all__ = ["ServeConfig", "ServingEngine", "greedy", "sample_top_p"]
+__all__ = [
+    "ServeConfig", "ServingEngine", "greedy", "sample_top_p",
+    "FrozenArtifact", "freeze", "freeze_map", "artifact_nbytes",
+    "save_artifact", "load_artifact",
+    "DEFAULT_BUCKETS", "AssignServeConfig", "AssignService", "QueueFull",
+    "bucket_for", "predict_frozen",
+]

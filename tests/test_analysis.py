@@ -477,7 +477,8 @@ def test_audit_cli_smoke(tmp_path):
     assert payload["ok"] and not payload["violations"]
     # 3 engine modes x 2 precisions + 5 kernel wrappers x 2 precisions
     # + 4 mesh programs + embedded Lloyd + serving predict
-    assert len(payload["reports"]) == 22
+    # + 4 serving shape-bucket programs
+    assert len(payload["reports"]) == 26
     names = {r["name"] for r in payload["reports"]}
     assert "kkmeans_fit[fused,f32]" in names
     assert "kkmeans_fit[fused,bf16]" in names
